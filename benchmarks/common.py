@@ -1,0 +1,66 @@
+"""Benchmark plumbing: process pairs, stats, CSV emission.
+
+Hardware note recorded with every run: this container exposes ONE CPU
+core, so publisher/subscriber pairs timeshare it. Copy costs (serialize /
+deserialize / socket copies) burn core time and therefore still show up in
+latency exactly as the paper predicts; absolute numbers are Python-scale,
+and we validate the *shape* of each curve (constant vs size-proportional),
+not microseconds (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("AGNO_BENCH_OUT", "experiments/bench")
+
+
+@dataclass
+class Stats:
+    name: str
+    n: int
+    mean: float
+    p50: float
+    p99: float
+    max: float
+    cv: float
+
+    @classmethod
+    def of(cls, name: str, xs) -> "Stats":
+        a = np.asarray(sorted(xs), float)
+        return cls(name=name, n=len(a), mean=float(a.mean()),
+                   p50=float(a[len(a) // 2]),
+                   p99=float(a[min(len(a) - 1, int(len(a) * 0.99))]),
+                   max=float(a[-1]),
+                   cv=float(a.std() / a.mean()) if a.mean() else 0.0)
+
+    def row(self) -> str:
+        return (f"{self.name},{self.n},{self.mean*1e6:.1f},{self.p50*1e6:.1f},"
+                f"{self.p99*1e6:.1f},{self.max*1e6:.1f},{self.cv:.3f}")
+
+
+HEADER = "name,n,mean_us,p50_us,p99_us,max_us,cv"
+
+
+def save_json(bench: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def busy_load(stop_evt, utilization: float, period: float = 0.01) -> None:
+    """stress-ng analogue: burn ``utilization`` of one core in on/off bursts."""
+    while not stop_evt.is_set():
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < period * utilization:
+            pass
+        rest = period * (1.0 - utilization)
+        if rest > 0:
+            time.sleep(rest)

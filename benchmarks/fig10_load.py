@@ -1,0 +1,58 @@
+"""Fig. 10: IPC latency stability under CPU load (100KB messages).
+
+stress-ng analogue: ``busy_load`` processes burn a target fraction of the
+core in 10ms on/off bursts while the fig9 publisher/subscriber pair runs.
+The paper reports latency + coefficient of variation per load level; its
+claim is that the zero-copy path stays stable (low CV) while copy-based
+paths degrade, because every byte copied is core time stolen by (and from)
+the stress load.
+
+Single-core note: the paper pins SCHED_FIFO for the subscriber to isolate
+runqueue delay; we cannot set RT priorities here, so *all* mechanisms see
+scheduling noise and the comparison is relative (same noise floor for all).
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+
+from benchmarks.common import HEADER, Stats, busy_load, save_json
+from benchmarks.fig9_latency import MECHS, WARMUP
+
+SIZE_100KB = 100 << 10
+LOADS = (0.0, 0.3, 0.6, 0.9)
+N_MSGS = 200
+
+
+def main(n_msgs: int = N_MSGS, loads=LOADS,
+         mechs=("agnocast", "bus", "shm_copy")) -> list[Stats]:
+    print(f"# fig10: stability under CPU load (100KB, {n_msgs} msgs/point)")
+    print(HEADER)
+    ctx = mp.get_context("spawn")
+    out, results = [], {}
+    for load in loads:
+        stop = ctx.Event()
+        stressors = []
+        if load > 0:
+            s = ctx.Process(target=busy_load, args=(stop, load), daemon=True)
+            s.start()
+            stressors.append(s)
+        try:
+            for mech in mechs:
+                lat = MECHS[mech](SIZE_100KB, n_msgs)[WARMUP:]
+                st = Stats.of(f"fig10/{mech}/load{int(load*100)}", lat)
+                results.setdefault(mech, {})[f"{int(load*100)}%"] = st.__dict__
+                print(st.row(), flush=True)
+                out.append(st)
+        finally:
+            stop.set()
+            for s in stressors:
+                s.join(timeout=3)
+                if s.is_alive():
+                    s.terminate()
+    save_json("fig10_load", results)
+    return out
+
+
+if __name__ == "__main__":
+    main()

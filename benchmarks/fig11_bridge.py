@@ -1,0 +1,212 @@
+"""Fig. 11: bridge overhead vs message size.
+
+Three routes, matching the paper:
+
+* ``bus_direct``      — ROS 2 pub → ROS 2 sub (the reference)
+* ``agno_to_bus``     — Agnocast pub → bridge (serialize) → bus sub
+* ``bus_to_agno``     — bus pub → bridge (copy-in) → Agnocast sub
+
+The bridge runs as its own process, pumping both directions. Expected:
+bridge routes add size-proportional overhead (one serialization or one
+copy-in) on top of the direct route.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+from benchmarks.common import HEADER, Stats, save_json
+from benchmarks.fig9_latency import (
+    SIZES,
+    WARMUP,
+    _get,
+    _guard,
+    _mk_payload,
+    _touch,
+    bench_bus,
+)
+from repro.core import (
+    POINT_CLOUD2,
+    AgnocastQueueFull,
+    Bridge,
+    Bus,
+    BusClient,
+    Domain,
+    deserialize,
+    serialize,
+)
+
+N_MSGS = 200
+INTERVAL = 0.004
+
+
+@_guard
+def _bridge_proc(dom_name, bus_path, n, stop_evt):
+    dom = Domain.join(dom_name, arena_capacity=128 << 20)
+    br = Bridge(dom, bus_path, POINT_CLOUD2, "bench")
+    moved = 0
+    while not stop_evt.is_set() and moved < 2 * n:  # serves either direction
+        moved += br.spin_once(timeout=0.02)
+    br.close()
+    dom.close()
+
+
+# -- route A: agnocast pub -> bridge -> bus sub ---------------------------------
+
+
+@_guard
+def _agno_pub(dom_name, nbytes, n, evt):
+    dom = Domain.join(dom_name, arena_capacity=max(128 << 20, nbytes * 64))
+    pub = dom.create_publisher(POINT_CLOUD2, "bench", depth=16)
+    payload = _mk_payload(nbytes)
+    evt.wait()
+    for _ in range(n):
+        msg = pub.borrow_loaded_message()
+        msg.data.extend(payload)
+        msg.set("stamp", time.monotonic())
+        while True:
+            try:
+                pub.reclaim()
+                pub.publish(msg)
+                break
+            except AgnocastQueueFull:
+                time.sleep(0.0005)
+        time.sleep(INTERVAL)
+    deadline = time.monotonic() + 10
+    while pub._inflight and time.monotonic() < deadline:
+        pub.reclaim()
+        time.sleep(0.005)
+    dom.close()
+
+
+@_guard
+def _bus_sub(path, n, q, ready):
+    cli = BusClient(path)
+    cli.subscribe("bench")
+    ready.set()
+    lat = []
+    for _ in range(n):
+        got = cli.recv(timeout=15.0)
+        if got is None:
+            break
+        t = time.monotonic()
+        f = deserialize(got[2])
+        _touch(f["data"])
+        lat.append(t - float(f["stamp"][0]))
+    q.put(lat)
+    cli.close()
+
+
+def bench_agno_to_bus(nbytes: int, n: int) -> list[float]:
+    ctx = mp.get_context("spawn")
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=4 << 20)
+    q, evt, ready, stop = ctx.Queue(), ctx.Event(), ctx.Event(), ctx.Event()
+    br = ctx.Process(target=_bridge_proc,
+                     args=(dom.name, bus.path, n, stop), daemon=True)
+    s = ctx.Process(target=_bus_sub, args=(bus.path, n, q, ready), daemon=True)
+    p = ctx.Process(target=_agno_pub, args=(dom.name, nbytes, n, evt), daemon=True)
+    br.start(); s.start()
+    ready.wait(timeout=60)
+    time.sleep(0.3)  # bridge subscription must exist before first publish
+    p.start(); evt.set()
+    lat = _get(q, 240)
+    stop.set()
+    for proc in (p, s, br):
+        proc.join(timeout=10)
+        if proc.is_alive():
+            proc.terminate()
+    dom.close()
+    bus.stop()
+    return lat
+
+
+# -- route B: bus pub -> bridge -> agnocast sub ----------------------------------
+
+
+@_guard
+def _bus_pub(path, nbytes, n, evt):
+    cli = BusClient(path)
+    payload = _mk_payload(nbytes)
+    m = POINT_CLOUD2.plain()
+    evt.wait()
+    for _ in range(n):
+        m.data = payload
+        m.stamp = time.monotonic()
+        cli.publish("bench", serialize(m))
+        time.sleep(INTERVAL)
+    cli.close()
+
+
+@_guard
+def _agno_sub(dom_name, n, q, ready):
+    dom = Domain.join(dom_name, publisher=False)
+    sub = dom.create_subscription(POINT_CLOUD2, "bench")
+    ready.set()
+    lat = []
+    got = 0
+    deadline = time.monotonic() + 240
+    while got < n and time.monotonic() < deadline:
+        sub.wait(5.0)
+        for ptr in sub.take():
+            t = time.monotonic()
+            _touch(ptr.msg.data)
+            lat.append(t - float(ptr.msg.get("stamp")))
+            ptr.release()
+            got += 1
+    q.put(lat)
+    dom.close()
+
+
+def bench_bus_to_agno(nbytes: int, n: int) -> list[float]:
+    ctx = mp.get_context("spawn")
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=4 << 20)
+    q, evt, ready, stop = ctx.Queue(), ctx.Event(), ctx.Event(), ctx.Event()
+    br = ctx.Process(target=_bridge_proc,
+                     args=(dom.name, bus.path, n, stop), daemon=True)
+    s = ctx.Process(target=_agno_sub, args=(dom.name, n, q, ready), daemon=True)
+    p = ctx.Process(target=_bus_pub, args=(bus.path, nbytes, n, evt), daemon=True)
+    br.start(); s.start()
+    ready.wait(timeout=60)
+    time.sleep(0.3)
+    p.start(); evt.set()
+    lat = _get(q, 240)
+    stop.set()
+    for proc in (p, s, br):
+        proc.join(timeout=10)
+        if proc.is_alive():
+            proc.terminate()
+    dom.close()
+    bus.stop()
+    return lat
+
+
+ROUTES = {
+    "bus_direct": bench_bus,
+    "agno_to_bus": bench_agno_to_bus,
+    "bus_to_agno": bench_bus_to_agno,
+}
+
+
+def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None) -> list[Stats]:
+    sizes = sizes or SIZES
+    print(f"# fig11: bridge overhead ({n_msgs} msgs/point)")
+    print(HEADER)
+    out, results = [], {}
+    for route, fn in ROUTES.items():
+        for label, nbytes in sizes.items():
+            lat = fn(nbytes, n_msgs)[WARMUP:]
+            st = Stats.of(f"fig11/{route}/{label}", lat)
+            results.setdefault(route, {})[label] = st.__dict__
+            print(st.row(), flush=True)
+            out.append(st)
+    save_json("fig11_bridge", results)
+    return out
+
+
+if __name__ == "__main__":
+    main()

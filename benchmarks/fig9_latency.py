@@ -1,0 +1,291 @@
+"""Fig. 9: IPC latency vs message size, per mechanism.
+
+Publisher and subscriber run in separate processes (paper setup); payloads
+are PointCloud2-analogue messages of 1KB / 10KB / 100KB / 1MB. Mechanisms:
+
+* ``agnocast``      — zero-copy arena pub/sub (constant vs size: the claim)
+* ``bus``           — serialized loopback bus ("ROS 2 / CycloneDDS")
+* ``shm_copy``      — shared-memory ring, serialize-in/copy-out
+                      ("IceOryx with unsized types": transparent copies)
+* ``shm_loan``      — shared-memory ring, loaned slots
+                      ("IceOryx with static-sized types": zero-copy but
+                      fixed slot size — cannot grow a message)
+
+Latency = publish() entry → subscriber sees the payload (first-byte touch
++ checksum of 64 bytes so lazy views cannot cheat).
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+from benchmarks.common import HEADER, Stats, save_json
+from repro.core import (
+    POINT_CLOUD2,
+    AgnocastQueueFull,
+    Bus,
+    BusClient,
+    Domain,
+    ShmRing,
+    deserialize,
+    serialize,
+)
+
+SIZES = {"1KB": 1 << 10, "10KB": 10 << 10, "100KB": 100 << 10, "1MB": 1 << 20}
+N_MSGS = 300
+WARMUP = 10
+INTERVAL = 0.002
+
+
+def _mk_payload(nbytes: int) -> np.ndarray:
+    return (np.arange(nbytes, dtype=np.uint8) % 251)
+
+
+def _guard(fn):
+    """Child wrapper: ship exceptions back through the result queue."""
+    import functools
+    import traceback
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        q = next((a for a in args if hasattr(a, "put")), None)
+        try:
+            fn(*args)
+        except Exception:
+            if q is not None:
+                q.put(("ERR", traceback.format_exc()))
+            raise
+    return wrapped
+
+
+def _get(q, timeout):
+    got = q.get(timeout=timeout)
+    if isinstance(got, tuple) and len(got) == 2 and got[0] == "ERR":
+        raise RuntimeError(f"benchmark child failed:\n{got[1]}")
+    return got
+
+
+def _touch(view) -> int:
+    return int(np.asarray(view[:64]).sum())
+
+
+# -- agnocast -----------------------------------------------------------------
+
+
+@_guard
+def _agno_sub(dom_name, n, q, ready):
+    dom = Domain.join(dom_name, publisher=False)
+    sub = dom.create_subscription(POINT_CLOUD2, "bench")
+    ready.set()
+    lat = []
+    got = 0
+    while got < n:
+        sub.wait(5.0)
+        for ptr in sub.take():
+            t = time.monotonic()
+            _touch(ptr.msg.data)
+            lat.append(t - float(ptr.msg.get("stamp")))
+            ptr.release()
+            got += 1
+    q.put(lat)
+    dom.close()
+
+
+@_guard
+def _agno_pub(dom_name, nbytes, n, evt):
+    dom = Domain.join(dom_name, arena_capacity=max(64 << 20, nbytes * 32))
+    pub = dom.create_publisher(POINT_CLOUD2, "bench", depth=16)
+    payload = _mk_payload(nbytes)
+    evt.wait()
+    for _ in range(n):
+        msg = pub.borrow_loaded_message()
+        msg.data.extend(payload)
+        msg.set("stamp", time.monotonic())  # stamp AFTER fill: IPC cost only
+        while True:
+            try:
+                pub.reclaim()
+                pub.publish(msg)
+                break
+            except AgnocastQueueFull:
+                time.sleep(0.0005)
+        time.sleep(INTERVAL)
+    deadline = time.monotonic() + 10
+    while pub._inflight and time.monotonic() < deadline:
+        pub.reclaim()
+        time.sleep(0.005)
+    dom.close()
+
+
+def bench_agnocast(nbytes: int, n: int) -> list[float]:
+    ctx = mp.get_context("spawn")
+    dom = Domain.create(arena_capacity=4 << 20)
+    q, evt, ready = ctx.Queue(), ctx.Event(), ctx.Event()
+    s = ctx.Process(target=_agno_sub, args=(dom.name, n, q, ready), daemon=True)
+    p = ctx.Process(target=_agno_pub, args=(dom.name, nbytes, n, evt), daemon=True)
+    s.start(); p.start()
+    ready.wait(timeout=60); evt.set()
+    lat = _get(q, 120)
+    p.join(timeout=15); s.join(timeout=5)
+    for proc in (p, s):
+        if proc.is_alive():
+            proc.terminate()
+    dom.close()
+    return lat
+
+
+# -- serialized bus -------------------------------------------------------------
+
+
+@_guard
+def _bus_sub(path, n, q, ready):
+    cli = BusClient(path)
+    cli.subscribe("bench")
+    ready.set()
+    lat = []
+    for _ in range(n):
+        got = cli.recv(timeout=10.0)
+        if got is None:
+            break
+        t = time.monotonic()
+        f = deserialize(got[2])
+        _touch(f["data"])
+        lat.append(t - float(f["stamp"][0]))
+    q.put(lat)
+    cli.close()
+
+
+@_guard
+def _bus_pub(path, nbytes, n, evt):
+    cli = BusClient(path)
+    payload = _mk_payload(nbytes)
+    m = POINT_CLOUD2.plain()
+    evt.wait()
+    for _ in range(n):
+        m.data = payload
+        m.stamp = time.monotonic()
+        cli.publish("bench", serialize(m))
+        time.sleep(INTERVAL)
+    cli.close()
+
+
+def bench_bus(nbytes: int, n: int) -> list[float]:
+    ctx = mp.get_context("spawn")
+    bus = Bus().start()
+    q, evt, ready = ctx.Queue(), ctx.Event(), ctx.Event()
+    s = ctx.Process(target=_bus_sub, args=(bus.path, n, q, ready), daemon=True)
+    p = ctx.Process(target=_bus_pub, args=(bus.path, nbytes, n, evt), daemon=True)
+    s.start(); p.start()
+    ready.wait(timeout=60); evt.set()
+    lat = _get(q, 180)
+    p.join(timeout=15); s.join(timeout=5)
+    for proc in (p, s):
+        if proc.is_alive():
+            proc.terminate()
+    bus.stop()
+    return lat
+
+
+# -- shm ring (copy / loan) ------------------------------------------------------
+
+
+@_guard
+def _ring_sub(name, slots, slot_bytes, n, q, mode, ready):
+    ring = ShmRing.attach(name, slots, slot_bytes)
+    ready.set()
+    lat = []
+    got = 0
+    while got < n:
+        item = ring.poll()
+        if item is None:
+            time.sleep(0.0002)
+            continue
+        _, view = item
+        t = time.monotonic()
+        if mode == "copy":
+            f = deserialize(view.tobytes())      # copy-out + deserialize
+            stamp = float(f["stamp"][0])
+            _touch(f["data"])
+        else:
+            stamp = float(view[:8].view(np.float64)[0])
+            _touch(view[8:])
+        lat.append(t - stamp)
+        got += 1
+    q.put(lat)
+    ring.close()
+
+
+@_guard
+def _ring_pub(name, slots, slot_bytes, nbytes, n, evt, mode):
+    ring = ShmRing.attach(name, slots, slot_bytes)
+    payload = _mk_payload(nbytes)
+    m = POINT_CLOUD2.plain()
+    evt.wait()
+    for _ in range(n):
+        if mode == "copy":
+            m.data = payload
+            m.stamp = time.monotonic()
+            ring.push_copy(serialize(m))         # serialize INTO shm
+        else:
+            slot = ring.loan()                   # zero-copy: write in place
+            slot[8 : 8 + nbytes] = payload
+            slot[:8] = np.frombuffer(
+                np.float64(time.monotonic()).tobytes(), np.uint8)  # stamp last
+            ring.commit(8 + nbytes)
+        time.sleep(INTERVAL)
+    ring.close()
+
+
+def bench_ring(nbytes: int, n: int, mode: str) -> list[float]:
+    ctx = mp.get_context("spawn")
+    slots = 32
+    slot_bytes = nbytes + 4096
+    ring = ShmRing.create(slots, slot_bytes)
+    q, evt, ready = ctx.Queue(), ctx.Event(), ctx.Event()
+    s = ctx.Process(target=_ring_sub,
+                    args=(ring.name, slots, slot_bytes, n, q, mode, ready),
+                    daemon=True)
+    p = ctx.Process(target=_ring_pub,
+                    args=(ring.name, slots, slot_bytes, nbytes, n, evt, mode),
+                    daemon=True)
+    s.start(); p.start()
+    ready.wait(timeout=60); evt.set()
+    lat = _get(q, 180)
+    p.join(timeout=15); s.join(timeout=5)
+    for proc in (p, s):
+        if proc.is_alive():
+            proc.terminate()
+    ring.close()
+    ring.unlink()
+    return lat
+
+
+MECHS = {
+    "agnocast": bench_agnocast,
+    "bus": bench_bus,
+    "shm_copy": lambda nb, n: bench_ring(nb, n, "copy"),
+    "shm_loan": lambda nb, n: bench_ring(nb, n, "loan"),
+}
+
+
+def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None) -> list[Stats]:
+    sizes = sizes or SIZES
+    print(f"# fig9: IPC latency vs size ({n_msgs} msgs/point)")
+    print(HEADER)
+    out = []
+    results = {}
+    for mech, fn in MECHS.items():
+        for label, nbytes in sizes.items():
+            lat = fn(nbytes, n_msgs)[WARMUP:]
+            st = Stats.of(f"fig9/{mech}/{label}", lat)
+            results.setdefault(mech, {})[label] = st.__dict__
+            print(st.row(), flush=True)
+            out.append(st)
+    save_json("fig9_latency", results)
+    return out
+
+
+if __name__ == "__main__":
+    main()

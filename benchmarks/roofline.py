@@ -1,0 +1,113 @@
+"""Roofline analysis over the multi-pod dry-run artifacts.
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``)
+and reports, per (arch × shape × mesh):
+
+    compute    = HLO_dot_FLOPs_per_device / peak_bf16      [s]
+    memory     = HLO_bytes_per_device / HBM_bw             [s]
+    collective = wire_bytes_per_device / ICI_bw            [s]
+
+All three numerators are trip-count-scaled (repro.launch.hlo_analysis) —
+XLA's raw cost_analysis counts scan bodies once. The dominant term is the
+bottleneck; step time ≈ max(terms) under perfect overlap, and
+
+    roofline fraction = compute / max(compute, memory, collective)
+
+i.e. the fraction of the step the MXUs could be busy if every overlap
+works; 1.0 = compute-bound at the roofline. MODEL_FLOPS / HLO_FLOPs
+("useful-compute ratio") separates intrinsic cost from remat/attention
+overheads: HLO counts backward recompute and S² attention that 6·N·D does
+not.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HW
+
+__all__ = ["load_cells", "roofline_row", "main"]
+
+DRYRUN_DIR = os.environ.get("AGNO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR, mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "hlo" not in rec:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    n_dev = rec["n_devices"]
+    t_compute = hlo["flops"] / HW.PEAK_BF16_FLOPS
+    t_memory = hlo["bytes"] / HW.HBM_BW
+    t_coll = hlo["collective_wire_bytes"] / HW.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = terms[dominant]
+    model_flops_dev = rec["model_flops"] / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "kind": rec["kind"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": (t_compute / t_bound) if t_bound > 0 else 0.0,
+        "useful_ratio": (model_flops_dev / hlo["flops"]) if hlo["flops"] else 0.0,
+        "model_flops_per_dev": model_flops_dev,
+        "hlo_flops_per_dev": hlo["flops"],
+        "unresolved_whiles": hlo.get("unresolved_whiles", 0),
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:8.2f}ms"
+    return f"{x*1e6:8.1f}us"
+
+
+HEADER = ("arch,shape,mesh,tag,dominant,t_compute_s,t_memory_s,"
+          "t_collective_s,roofline_fraction,useful_ratio")
+
+
+def main(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16") -> list[dict]:
+    cells = load_cells(dryrun_dir, mesh=mesh)
+    if not cells:
+        print(f"# roofline: no dry-run artifacts in {dryrun_dir} "
+              f"(run: python -m repro.launch.dryrun --all)")
+        return []
+    print(f"# roofline: {len(cells)} cells on mesh {mesh} "
+          f"(v5e: {HW.PEAK_BF16_FLOPS/1e12:.0f} TF/s, "
+          f"{HW.HBM_BW/1e9:.0f} GB/s HBM, {HW.ICI_BW/1e9:.0f} GB/s ICI)")
+    print(HEADER)
+    rows = []
+    for rec in cells:
+        r = roofline_row(rec)
+        rows.append(r)
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['tag']},{r['dominant']},"
+              f"{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
+              f"{r['t_collective_s']:.4e},{r['roofline_fraction']:.3f},"
+              f"{r['useful_ratio']:.3f}")
+    from benchmarks.common import save_json
+
+    save_json(f"roofline_{mesh}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

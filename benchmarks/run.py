@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,roofline]
+
+Emits CSV-ish lines per benchmark and JSON under experiments/bench/.
+Sizes are reduced by default so the suite finishes on one CPU core; the
+paper-scale run is ``--full`` (1000 msgs/point as in §V-A).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="minimal sizes (CI)")
+    ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
+    ap.add_argument("--only", default="", help="comma list: fig9,fig10,fig11,fig13,roofline")
+    args = ap.parse_args(argv)
+
+    n9 = 1000 if args.full else (60 if args.quick else 300)
+    n10 = 600 if args.full else (60 if args.quick else 200)
+    n11 = 400 if args.full else (50 if args.quick else 150)
+    nf = 120 if args.full else (20 if args.quick else 60)
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.monotonic()
+    failures = 0
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    if want("fig9"):
+        from benchmarks import fig9_latency
+        sizes = ({"10KB": 10 << 10, "1MB": 1 << 20} if args.quick else None)
+        fig9_latency.main(n_msgs=n9, sizes=sizes)
+    if want("fig10"):
+        from benchmarks import fig10_load
+        loads = (0.0, 0.9) if args.quick else fig10_load.LOADS
+        fig10_load.main(n_msgs=n10, loads=loads)
+    if want("fig11"):
+        from benchmarks import fig11_bridge
+        sizes = ({"100KB": 100 << 10, "1MB": 1 << 20} if args.quick else None)
+        fig11_bridge.main(n_msgs=n11, sizes=sizes)
+    if want("fig13"):
+        from benchmarks import fig13_pipeline
+        fig13_pipeline.main(frames=nf)
+    if want("roofline"):
+        from benchmarks import roofline
+        for mesh in ("16x16", "2x16x16"):
+            roofline.main(mesh=mesh)
+
+    print(f"# benchmarks done in {time.monotonic()-t0:.0f}s")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

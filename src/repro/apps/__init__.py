@@ -1,0 +1,12 @@
+"""Application-level stage library (the Autoware-analogue workloads)."""
+
+from .pointcloud import (
+    ChainResult,
+    LidarSpec,
+    make_cloud,
+    preprocess_chain,
+    run_chain,
+)
+
+__all__ = ["LidarSpec", "ChainResult", "make_cloud", "preprocess_chain",
+           "run_chain"]

@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (full or smoke)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models import ModelConfig
+
+_MODULES: dict[str, str] = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "gemma-2b": "gemma_2b",
+    "llama3-8b": "llama3_8b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "whisper-small": "whisper_small",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {', '.join(ARCH_IDS)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).full()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()

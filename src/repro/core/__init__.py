@@ -1,0 +1,62 @@
+"""Agnocast core — the paper's contribution as a composable library.
+
+True zero-copy publish/subscribe IPC for *unsized* message types:
+
+* :mod:`repro.core.arena` — the heap-on-shared-memory analogue;
+* :mod:`repro.core.messages` — unsized message schema (``ArenaVector`` =
+  ``std::vector`` in the shared heap) + the serialized baseline format;
+* :mod:`repro.core.registry` — transactional metadata (kernel-module
+  analogue: flock + WAL journal + PID-liveness janitor);
+* :mod:`repro.core.smart_ptr` — the two-counter smart pointer (§IV-C);
+* :mod:`repro.core.topic` — ``create_publisher`` / ``create_subscription``
+  / ``borrow_loaded_message`` / move-``publish`` (Fig. 2 API);
+* :mod:`repro.core.bridge` — selective-adoption bridge to conventional
+  middleware (§IV-D);
+* :mod:`repro.core.transport` — conventional baselines (serialized bus =
+  DDS analogue, shm ring = IceOryx analogue) for the §V comparisons;
+* :mod:`repro.core.device_arena` — the same lifetime discipline applied to
+  device (HBM) KV pages for prefill→decode hand-off (TPU-native extension).
+"""
+
+from .arena import AllocRef, Arena, ArenaError, OutOfArenaMemory
+from .bridge import Bridge
+from .messages import (
+    BYTES_BLOB,
+    POINT_CLOUD2,
+    TOKEN_BATCH,
+    ArenaVector,
+    Fixed,
+    LoanedMessage,
+    MessageType,
+    PlainMessage,
+    Ragged,
+    ReceivedMessage,
+    deserialize,
+    message_nbytes,
+    serialize,
+)
+from .registry import (
+    DEPTH_MAX,
+    MAX_PUBS,
+    MAX_SUBS,
+    MAX_TOPICS,
+    AgnocastQueueFull,
+    Entry,
+    Registry,
+    RegistryError,
+)
+from .smart_ptr import MessagePtr
+from .topic import Domain, Publisher, Subscription
+from .transport import Bus, BusClient, ShmRing
+
+__all__ = [
+    "AllocRef", "Arena", "ArenaError", "OutOfArenaMemory",
+    "ArenaVector", "Fixed", "Ragged", "MessageType",
+    "LoanedMessage", "ReceivedMessage", "PlainMessage",
+    "POINT_CLOUD2", "TOKEN_BATCH", "BYTES_BLOB",
+    "serialize", "deserialize", "message_nbytes",
+    "Registry", "RegistryError", "AgnocastQueueFull", "Entry",
+    "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
+    "MessagePtr", "Domain", "Publisher", "Subscription",
+    "Bus", "BusClient", "ShmRing", "Bridge",
+]

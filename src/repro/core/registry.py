@@ -1,0 +1,498 @@
+"""Transactional pub/sub metadata — the Agnocast kernel-module analogue.
+
+The paper keeps topic metadata (message addresses, reference counts,
+unreceived-subscriber tracking) in a kernel module driven by ``ioctl``,
+for one reason (§IV-B): **transactionality** — metadata operations must
+complete (or roll back) even if a participating process dies at an
+arbitrary instruction.  The kernel also hooks process exit to release a
+dead participant's references.
+
+We cannot load kernel code in this environment, so we keep the *property*
+with user-space mechanisms the kernel still underwrites:
+
+* Metadata lives in a shared-memory segment of fixed-layout structured
+  arrays (the "module state").
+* Every operation runs under an ``flock`` on a lock file — an OS-owned
+  lock that **the kernel releases when the holder dies**, so a crashed
+  participant can never wedge the plane.
+* Row mutations are write-ahead journaled with before-images; the next
+  lock acquirer rolls back any PENDING mutation left by a dead process.
+  This is the "complete atomically or roll back" alternative the paper
+  explicitly names for a user-space implementation (§IV-B).
+* A janitor sweep detects dead PIDs (``kill(pid, 0)``) and releases their
+  unreceived/held bits — the process-exit hook analogue.
+
+Entry lifetime follows the paper's two-counter rule (§IV-C): an entry's
+payload may be freed only when its reference holders ("held", a bitmask of
+subscribers, popcount = refcount) and its unreceived-subscriber set are both
+empty — and only by the owning publisher.
+"""
+
+from __future__ import annotations
+
+import errno
+import fcntl
+import os
+import secrets
+from dataclasses import dataclass
+
+import numpy as np
+
+from .arena import _new_shm
+
+__all__ = ["Registry", "RegistryError", "AgnocastQueueFull", "Entry",
+           "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX"]
+
+MAX_TOPICS = 64
+MAX_PUBS = 4
+MAX_SUBS = 64          # one bit per subscriber in uint64 masks
+DEPTH_MAX = 64
+_MAGIC = 0xA6_0C_0D_01
+
+ST_FREE, ST_USED, ST_DEAD = 0, 1, 2
+ORIGIN_AGNOCAST, ORIGIN_BRIDGE = 0, 1
+
+TOPIC_DT = np.dtype(
+    [
+        ("name", "S96"),
+        ("in_use", "u1"),
+        ("_pad", "u1", (7,)),
+        ("sub_pids", "u8", (MAX_SUBS,)),
+        ("sub_alive", "u8"),                 # bitmask of live subscriber slots
+        ("pub_pids", "u8", (MAX_PUBS,)),
+        ("pub_alive", "u1", (MAX_PUBS,)),
+        ("pub_arena", "S32", (MAX_PUBS,)),
+        ("pub_depth", "u4", (MAX_PUBS,)),
+        ("pub_next_seq", "u8", (MAX_PUBS,)),
+        ("pub_drops", "u8", (MAX_PUBS,)),
+    ]
+)
+
+ENTRY_DT = np.dtype(
+    [
+        ("seq", "u8"),
+        ("desc_off", "u8"),
+        ("desc_len", "u8"),
+        ("unreceived", "u8"),   # bitmask: subscribers that have not taken it
+        ("held", "u8"),         # bitmask: subscribers currently holding a ref
+        ("state", "u1"),
+        ("origin", "u1"),
+        ("_pad", "u2"),
+        ("pub_refs", "u4"),     # publisher-local refs (0 after move-publish)
+    ]
+)
+
+_J_CLEAN, _J_PENDING = 0, 1
+JOURNAL_DT = np.dtype(
+    [
+        ("state", "u8"),
+        ("pid", "u8"),
+        ("tidx", "i8"),
+        ("pidx", "i8"),
+        ("slot", "i8"),
+        ("has_topic", "u8"),
+        ("has_entry", "u8"),
+        ("topic_img", "V%d" % TOPIC_DT.itemsize),
+        ("entry_img", "V%d" % ENTRY_DT.itemsize),
+    ]
+)
+
+
+class RegistryError(RuntimeError):
+    pass
+
+
+class AgnocastQueueFull(RegistryError):
+    """All ring slots hold messages still referenced by subscribers."""
+
+
+@dataclass(frozen=True)
+class Entry:
+    seq: int
+    desc_off: int
+    desc_len: int
+    origin: int
+    pub_idx: int
+
+
+def _alive(pid: int) -> bool:
+    if pid == 0:
+        return False
+    try:
+        os.kill(int(pid), 0)
+        return True
+    except ProcessLookupError:
+        return False
+    except PermissionError:  # exists, not ours
+        return True
+
+
+class _Flock:
+    """Kernel-released mutual exclusion (survives holder death)."""
+
+    def __init__(self, path: str):
+        self._path = path
+        self._fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o666)
+
+    def __enter__(self):
+        fcntl.flock(self._fd, fcntl.LOCK_EX)
+        return self
+
+    def __exit__(self, *exc):
+        fcntl.flock(self._fd, fcntl.LOCK_UN)
+
+    def close(self):
+        try:
+            os.close(self._fd)
+        except OSError:
+            pass
+
+
+class Registry:
+    """The shared metadata plane. One per "domain" (cf. ROS_DOMAIN_ID)."""
+
+    def __init__(self, shm, *, owner: bool, name: str):
+        self.name = name
+        self._shm = shm
+        self.owner = owner
+        buf = shm.buf
+        self._hdr = np.frombuffer(buf, dtype=np.uint64, count=8)
+        off = 64
+        self._journal = np.frombuffer(buf, dtype=JOURNAL_DT, count=1, offset=off)
+        off += JOURNAL_DT.itemsize
+        off = (off + 63) & ~63
+        self.topics = np.frombuffer(buf, dtype=TOPIC_DT, count=MAX_TOPICS, offset=off)
+        off += TOPIC_DT.itemsize * MAX_TOPICS
+        off = (off + 63) & ~63
+        n_entries = MAX_TOPICS * MAX_PUBS * DEPTH_MAX
+        self.entries = np.frombuffer(buf, dtype=ENTRY_DT, count=n_entries, offset=off).reshape(
+            MAX_TOPICS, MAX_PUBS, DEPTH_MAX
+        )
+        self._lock = _Flock(f"/tmp/.agnocast-{name}.lock")
+        if owner:
+            self._hdr[0] = _MAGIC
+        elif int(self._hdr[0]) != _MAGIC:
+            raise RegistryError(f"{name!r} is not an agnocast registry")
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @staticmethod
+    def segment_size() -> int:
+        off = 64 + JOURNAL_DT.itemsize
+        off = (off + 63) & ~63
+        off += TOPIC_DT.itemsize * MAX_TOPICS
+        off = (off + 63) & ~63
+        off += ENTRY_DT.itemsize * MAX_TOPICS * MAX_PUBS * DEPTH_MAX
+        return off
+
+    @classmethod
+    def create(cls, name: str | None = None) -> "Registry":
+        name = name or f"agnoreg-{secrets.token_hex(4)}"
+        shm = _new_shm(name, create=True, size=cls.segment_size())
+        return cls(shm, owner=True, name=name)
+
+    @classmethod
+    def attach(cls, name: str) -> "Registry":
+        return cls(_new_shm(name, create=False), owner=False, name=name)
+
+    def close(self):
+        import gc
+
+        self._lock.close()
+        for a in ("_hdr", "_journal", "topics", "entries"):
+            setattr(self, a, None)
+        gc.collect()
+        try:
+            self._shm.close()
+        except BufferError:
+            pass
+
+    def unlink(self):
+        if self.owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+            try:
+                os.unlink(f"/tmp/.agnocast-{self.name}.lock")
+            except OSError:
+                pass
+
+    # -- journaled row mutation (transactionality core) ----------------------
+
+    def _recover(self):
+        j = self._journal[0]
+        if int(j["state"]) == _J_PENDING and not _alive(int(j["pid"])):
+            # roll back the dead writer's in-flight mutation (before-images)
+            t, p, s = int(j["tidx"]), int(j["pidx"]), int(j["slot"])
+            if int(j["has_topic"]) and t >= 0:
+                self.topics[t] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
+            if int(j["has_entry"]) and t >= 0 and s >= 0:
+                self.entries[t, p, s] = np.frombuffer(bytes(j["entry_img"]), dtype=ENTRY_DT)[0]
+            self._journal[0]["state"] = _J_CLEAN
+
+    class _Txn:
+        def __init__(self, reg: "Registry", tidx: int, pidx: int = -1, slot: int = -1,
+                     *, topic: bool = False, entry: bool = False):
+            self.reg, self.tidx, self.pidx, self.slot = reg, tidx, pidx, slot
+            self.topic, self.entry = topic, entry
+
+        def __enter__(self):
+            r, j = self.reg, self.reg._journal
+            j[0]["pid"] = os.getpid()
+            j[0]["tidx"], j[0]["pidx"], j[0]["slot"] = self.tidx, self.pidx, self.slot
+            j[0]["has_topic"] = 1 if self.topic else 0
+            j[0]["has_entry"] = 1 if self.entry else 0
+            if self.topic:
+                j[0]["topic_img"] = r.topics[self.tidx].tobytes()
+            if self.entry:
+                j[0]["entry_img"] = r.entries[self.tidx, self.pidx, self.slot].tobytes()
+            j[0]["state"] = _J_PENDING  # fence: images valid before PENDING
+            return self
+
+        def __exit__(self, et, ev, tb):
+            if et is None:
+                self.reg._journal[0]["state"] = _J_CLEAN
+            # on exception: leave PENDING; rollback happens via _recover on
+            # the next acquisition (we are still alive, so roll back now)
+            elif int(self.reg._journal[0]["state"]) == _J_PENDING:
+                j = self.reg._journal[0]
+                if int(j["has_topic"]):
+                    self.reg.topics[self.tidx] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
+                if int(j["has_entry"]):
+                    self.reg.entries[self.tidx, self.pidx, self.slot] = np.frombuffer(
+                        bytes(j["entry_img"]), dtype=ENTRY_DT)[0]
+                j["state"] = _J_CLEAN
+            return False
+
+    # -- topic / participant management --------------------------------------
+
+    def topic_index(self, name: str, *, create: bool = True) -> int:
+        key = name.encode()
+        with self._lock:
+            self._recover()
+            free = -1
+            for i in range(MAX_TOPICS):
+                t = self.topics[i]
+                if t["in_use"] and bytes(t["name"]).rstrip(b"\0") == key:
+                    return i
+                if not t["in_use"] and free < 0:
+                    free = i
+            if not create:
+                raise RegistryError(f"unknown topic {name!r}")
+            if free < 0:
+                raise RegistryError("topic table full")
+            with self._Txn(self, free, topic=True):
+                t = self.topics[free]
+                t["name"] = key
+                t["in_use"] = 1
+                t["sub_alive"] = 0
+                t["pub_alive"][:] = 0
+            return free
+
+    def add_publisher(self, tidx: int, pid: int, arena_name: str, depth: int) -> int:
+        if not (1 <= depth <= DEPTH_MAX):
+            raise RegistryError(f"depth must be in [1,{DEPTH_MAX}]")
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            for p in range(MAX_PUBS):
+                if not t["pub_alive"][p] or not _alive(int(t["pub_pids"][p])):
+                    with self._Txn(self, tidx, topic=True):
+                        t["pub_pids"][p] = pid
+                        t["pub_alive"][p] = 1
+                        t["pub_arena"][p] = arena_name.encode()
+                        t["pub_depth"][p] = depth
+                        t["pub_next_seq"][p] = 1
+                        t["pub_drops"][p] = 0
+                    self.entries[tidx, p, :] = np.zeros((), dtype=ENTRY_DT)
+                    return p
+            raise RegistryError("publisher table full")
+
+    def add_subscriber(self, tidx: int, pid: int) -> int:
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            alive = int(t["sub_alive"])
+            for s in range(MAX_SUBS):
+                if not (alive >> s) & 1 or not _alive(int(t["sub_pids"][s])):
+                    with self._Txn(self, tidx, topic=True):
+                        t["sub_pids"][s] = pid
+                        t["sub_alive"] = np.uint64(alive | (1 << s))
+                    return s
+            raise RegistryError("subscriber table full")
+
+    def remove_subscriber(self, tidx: int, sidx: int) -> None:
+        with self._lock:
+            self._recover()
+            self._drop_subscriber(tidx, sidx)
+
+    def _drop_subscriber(self, tidx: int, sidx: int) -> None:
+        mask = np.uint64(~np.uint64(1 << sidx))
+        t = self.topics[tidx]
+        with self._Txn(self, tidx, topic=True):
+            t["sub_alive"] = np.uint64(int(t["sub_alive"]) & int(mask))
+            t["sub_pids"][sidx] = 0
+        e = self.entries[tidx]
+        e["unreceived"] &= mask
+        e["held"] &= mask  # releases the dead subscriber's references (§IV-C)
+
+    def publishers(self, tidx: int) -> list[tuple[int, str]]:
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            return [
+                (p, bytes(t["pub_arena"][p]).rstrip(b"\0").decode())
+                for p in range(MAX_PUBS)
+                if t["pub_alive"][p]
+            ]
+
+    # -- the ioctl surface: publish / take / release --------------------------
+
+    def publish(self, tidx: int, pidx: int, desc_off: int, desc_len: int,
+                *, origin: int = ORIGIN_AGNOCAST,
+                exclude_sub: int = -1) -> tuple[int, list[int]]:
+        """Enqueue an entry; returns (seq, freeable_seqs_for_owner).
+
+        QoS keep-last(depth): an *unreceived* occupant of the target slot is
+        dropped; a *held* occupant means subscribers are holding every slot —
+        AgnocastQueueFull (cf. loaned-chunk exhaustion in iceoryx).
+        """
+        freeable: list[int] = []
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            depth = int(t["pub_depth"][pidx])
+            seq = int(t["pub_next_seq"][pidx])
+            slot = seq % depth
+            e = self.entries[tidx, pidx, slot]
+            if int(e["state"]) == ST_USED:
+                if int(e["held"]):
+                    raise AgnocastQueueFull(
+                        f"topic {tidx} pub {pidx}: ring slot {slot} still referenced"
+                    )
+                if int(e["unreceived"]):
+                    with self._Txn(self, tidx, pidx, slot, topic=True, entry=True):
+                        t["pub_drops"][pidx] += 1
+                        e["state"] = ST_FREE
+                else:
+                    e["state"] = ST_FREE
+                freeable.append(int(e["seq"]))
+            # prune: any fully-released older entries the owner may reclaim
+            ring = self.entries[tidx, pidx]
+            done = (ring["state"] == ST_USED) & (ring["unreceived"] == 0) & \
+                   (ring["held"] == 0) & (ring["pub_refs"] == 0)
+            for s in np.nonzero(done)[0]:
+                freeable.append(int(ring[s]["seq"]))
+                ring[s]["state"] = ST_FREE
+            sub_mask = int(t["sub_alive"])
+            if exclude_sub >= 0:
+                sub_mask &= ~(1 << exclude_sub)
+            with self._Txn(self, tidx, pidx, slot, topic=True, entry=True):
+                e["seq"] = seq
+                e["desc_off"] = desc_off
+                e["desc_len"] = desc_len
+                e["unreceived"] = np.uint64(sub_mask)
+                e["held"] = 0
+                e["origin"] = origin
+                e["pub_refs"] = 0  # move semantics: rvalue publish (§VII-A)
+                e["state"] = ST_USED
+                t["pub_next_seq"][pidx] = seq + 1
+        return seq, freeable
+
+    def take(self, tidx: int, sidx: int) -> list[Entry]:
+        """Claim all unreceived entries for subscriber ``sidx`` (clears the
+        unreceived bit, sets the held bit — refcount acquisition)."""
+        got: list[Entry] = []
+        bit = np.uint64(1 << sidx)
+        with self._lock:
+            self._recover()
+            for pidx in range(MAX_PUBS):
+                ring = self.entries[tidx, pidx]
+                mask = (ring["state"] == ST_USED) & ((ring["unreceived"] & bit) != 0)
+                slots = np.nonzero(mask)[0]
+                order = np.argsort(ring["seq"][slots]) if len(slots) else []
+                for s in (slots[i] for i in order):
+                    with self._Txn(self, tidx, pidx, int(s), entry=True):
+                        e = ring[int(s)]
+                        e["unreceived"] = np.uint64(int(e["unreceived"]) & ~int(bit))
+                        e["held"] = np.uint64(int(e["held"]) | int(bit))
+                        got.append(
+                            Entry(int(e["seq"]), int(e["desc_off"]), int(e["desc_len"]),
+                                  int(e["origin"]), pidx)
+                        )
+        got.sort(key=lambda en: en.seq)
+        return got
+
+    def release(self, tidx: int, pidx: int, sidx: int, seq: int) -> None:
+        """Drop subscriber ``sidx``'s reference on entry ``seq``."""
+        bit = np.uint64(1 << sidx)
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            slot = seq % int(t["pub_depth"][pidx])
+            e = self.entries[tidx, pidx, slot]
+            if int(e["seq"]) == seq and int(e["state"]) == ST_USED:
+                with self._Txn(self, tidx, pidx, slot, entry=True):
+                    e["held"] = np.uint64(int(e["held"]) & ~int(bit))
+
+    def reclaimable(self, tidx: int, pidx: int) -> list[int]:
+        """Owner-side query: seqs whose payload may now be freed (both
+        counters zero — the paper's deallocation condition, Fig. 7)."""
+        out: list[int] = []
+        with self._lock:
+            self._recover()
+            ring = self.entries[tidx, pidx]
+            done = (ring["state"] == ST_USED) & (ring["unreceived"] == 0) & \
+                   (ring["held"] == 0) & (ring["pub_refs"] == 0)
+            for s in np.nonzero(done)[0]:
+                out.append(int(ring[s]["seq"]))
+                ring[s]["state"] = ST_FREE
+        return out
+
+    # -- process-exit hook analogue -------------------------------------------
+
+    def sweep(self) -> dict:
+        """Detect dead participants and release their references/slots.
+
+        The paper's kernel module hooks process exit; our janitor detects
+        death via PID liveness and is invoked by any participant. Idempotent
+        (safe to crash mid-sweep and re-run).
+        """
+        report = {"dead_subs": 0, "dead_pubs": 0, "orphan_arenas": []}
+        with self._lock:
+            self._recover()
+            for tidx in range(MAX_TOPICS):
+                t = self.topics[tidx]
+                if not t["in_use"]:
+                    continue
+                alive = int(t["sub_alive"])
+                for s in range(MAX_SUBS):
+                    if (alive >> s) & 1 and not _alive(int(t["sub_pids"][s])):
+                        self._drop_subscriber(tidx, s)
+                        report["dead_subs"] += 1
+                for p in range(MAX_PUBS):
+                    if t["pub_alive"][p] and not _alive(int(t["pub_pids"][p])):
+                        arena = bytes(t["pub_arena"][p]).rstrip(b"\0").decode()
+                        with self._Txn(self, tidx, topic=True):
+                            t["pub_alive"][p] = 0
+                            t["pub_pids"][p] = 0
+                        self.entries[tidx, p]["state"] = ST_DEAD
+                        report["dead_pubs"] += 1
+                        report["orphan_arenas"].append(arena)
+        return report
+
+    # -- introspection ---------------------------------------------------------
+
+    def stats(self, tidx: int) -> dict:
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            ring = self.entries[tidx]
+            return {
+                "subs_alive": bin(int(t["sub_alive"])).count("1"),
+                "pubs_alive": int(np.sum(t["pub_alive"])),
+                "drops": [int(d) for d in t["pub_drops"]],
+                "used_entries": int(np.sum(ring["state"] == ST_USED)),
+                "held_entries": int(np.sum((ring["state"] == ST_USED) & (ring["held"] != 0))),
+            }

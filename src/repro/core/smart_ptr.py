@@ -1,0 +1,105 @@
+"""The Agnocast smart pointer (§IV-C).
+
+A message buffer is freed only when BOTH its reference count and its
+unreceived-subscriber count are zero — and only by the publisher that
+allocated it.  The registry tracks the cross-process component (held /
+unreceived bitmasks); this module implements the in-process component:
+``MessagePtr`` instances sharing one ``_RefState`` increment/decrement a
+local count, and the registry's held-bit for this subscriber is released
+exactly when the local count reaches zero.  Destruction is hooked with
+``weakref.finalize`` so dropping the last Python reference releases the
+shared ref even without an explicit ``close()`` — and process death is
+covered by the registry janitor (kernel exit-hook analogue).
+"""
+
+from __future__ import annotations
+
+import weakref
+
+from .messages import ReceivedMessage
+from .registry import Entry, Registry
+
+__all__ = ["MessagePtr"]
+
+
+class _RefState:
+    __slots__ = ("count", "released", "registry", "tidx", "sidx", "entry")
+
+    def __init__(self, registry: Registry, tidx: int, sidx: int, entry: Entry):
+        self.count = 1
+        self.released = False
+        self.registry = registry
+        self.tidx = tidx
+        self.sidx = sidx
+        self.entry = entry
+
+    def decref(self) -> None:
+        self.count -= 1
+        if self.count <= 0 and not self.released:
+            self.released = True
+            try:
+                self.registry.release(self.tidx, self.entry.pub_idx, self.sidx, self.entry.seq)
+            except Exception:
+                pass  # registry torn down; janitor covers us
+
+
+def _finalizer(state: _RefState) -> None:
+    if not state.released:
+        state.count = 1
+        state.decref()
+
+
+class MessagePtr:
+    """Subscriber-side smart pointer over a zero-copy ``ReceivedMessage``."""
+
+    def __init__(self, msg: ReceivedMessage, state: _RefState):
+        self._msg = msg
+        self._state = state
+        self._own = True
+        self._fin = weakref.finalize(self, _finalizer, state)
+
+    @classmethod
+    def first(cls, msg: ReceivedMessage, registry: Registry, tidx: int, sidx: int,
+              entry: Entry) -> "MessagePtr":
+        return cls(msg, _RefState(registry, tidx, sidx, entry))
+
+    # -- access ----------------------------------------------------------------
+
+    @property
+    def msg(self) -> ReceivedMessage:
+        if not self._own:
+            raise ValueError("use after release of agnocast message_ptr")
+        return self._msg
+
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "_msg"), name)
+
+    @property
+    def seq(self) -> int:
+        return self._state.entry.seq
+
+    @property
+    def origin(self) -> int:
+        return self._state.entry.origin
+
+    # -- refcount management (create/duplicate/destroy, §IV-C) -----------------
+
+    def clone(self) -> "MessagePtr":
+        if not self._own:
+            raise ValueError("clone after release")
+        self._state.count += 1
+        return MessagePtr(self._msg, self._state)
+
+    def release(self) -> None:
+        if self._own:
+            self._own = False
+            self._fin.detach()
+            self._state.decref()
+
+    close = release
+
+    def __enter__(self) -> "MessagePtr":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()

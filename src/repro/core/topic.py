@@ -1,0 +1,287 @@
+"""Publisher / Subscription API — the paper's Fig. 2 surface.
+
+Usage mirrors the paper::
+
+    dom = Domain.create()
+    pub = dom.create_publisher(POINT_CLOUD2, "mytopic", depth=10)
+    msg = pub.borrow_loaded_message()
+    msg.data.extend(points)             # unsized: push_back/extend freely
+    pub.publish(msg)                    # move; constant-cost metadata op
+
+    sub = dom.create_subscription(POINT_CLOUD2, "mytopic")
+    for ptr in sub.take():              # zero-copy read-only views
+        consume(ptr.data)
+        ptr.release()
+
+Publish passes only a constant-size descriptor through the metadata plane;
+payload bytes are never copied (true zero-copy).  Wake-ups use a per-
+subscriber FIFO write of one byte — O(1) in payload size, preserving the
+paper's size-independent latency property.
+"""
+
+from __future__ import annotations
+
+import errno
+import os
+import pickle
+import secrets
+import select
+
+from .arena import Arena
+from .messages import LoanedMessage, MessageType, ReceivedMessage
+from .registry import ORIGIN_AGNOCAST, Registry
+from .smart_ptr import MessagePtr
+
+__all__ = ["Domain", "Publisher", "Subscription"]
+
+_DEFAULT_ARENA = 64 << 20
+
+
+def _fifo_dir(reg: str) -> str:
+    return f"/tmp/.agnocast-{reg}.d"
+
+
+def _fifo_path(reg: str, tidx: int, sidx: int) -> str:
+    return os.path.join(_fifo_dir(reg), f"t{tidx}s{sidx}.fifo")
+
+
+class Domain:
+    """A participant's handle on one agnocast metadata plane + its arena."""
+
+    def __init__(self, registry: Registry, arena: Arena | None, *, owner: bool):
+        self.registry = registry
+        self.arena = arena  # this process's own heap (publishers only)
+        self._owner = owner
+        self._closed = False
+        self._attached: dict[str, Arena] = {}
+        self._pubs: list[Publisher] = []
+        self._subs: list[Subscription] = []
+        os.makedirs(_fifo_dir(registry.name), exist_ok=True)
+        import atexit
+
+        atexit.register(self.close)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    @classmethod
+    def create(cls, name: str | None = None, *, arena_capacity: int = _DEFAULT_ARENA) -> "Domain":
+        reg = Registry.create(name)
+        arena = Arena.create(arena_capacity)
+        return cls(reg, arena, owner=True)
+
+    @classmethod
+    def join(cls, name: str, *, arena_capacity: int = _DEFAULT_ARENA,
+             publisher: bool = True) -> "Domain":
+        reg = Registry.attach(name)
+        arena = Arena.create(arena_capacity) if publisher else None
+        return cls(reg, arena, owner=False)
+
+    @property
+    def name(self) -> str:
+        return self.registry.name
+
+    def attach_arena(self, name: str) -> Arena:
+        a = self._attached.get(name)
+        if a is None:
+            if self.arena is not None and name == self.arena.name:
+                a = self.arena
+            else:
+                a = Arena.attach(name)
+            self._attached[name] = a
+        return a
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for s in self._subs:
+            s.close()
+        for p in self._pubs:
+            p.close()
+        for a in self._attached.values():
+            if self.arena is None or a.name != self.arena.name:
+                a.close()
+        if self.arena is not None:
+            self.arena.close()
+            self.arena.unlink()
+        self.registry.close()
+        if self._owner:
+            self.registry.unlink()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def sweep(self) -> dict:
+        return self.registry.sweep()
+
+    # -- factory (paper Fig. 2) --------------------------------------------------
+
+    def create_publisher(self, mtype: MessageType, topic: str, *, depth: int = 10) -> "Publisher":
+        if self.arena is None:
+            raise RuntimeError("this domain handle was joined without a heap arena")
+        p = Publisher(self, mtype, topic, depth)
+        self._pubs.append(p)
+        return p
+
+    def create_subscription(self, mtype: MessageType, topic: str, callback=None) -> "Subscription":
+        s = Subscription(self, mtype, topic, callback)
+        self._subs.append(s)
+        return s
+
+
+class Publisher:
+    def __init__(self, dom: Domain, mtype: MessageType, topic: str, depth: int):
+        self.dom = dom
+        self.mtype = mtype
+        self.topic = topic
+        self.tidx = dom.registry.topic_index(topic)
+        self.pidx = dom.registry.add_publisher(self.tidx, os.getpid(), dom.arena.name, depth)
+        self._inflight: dict[int, tuple[int, int, list[int]]] = {}  # seq -> (desc_off, desc_len, payload offs)
+        self._fifo_fds: dict[int, int] = {}
+
+    # -- the Fig. 2 API ----------------------------------------------------------
+
+    def borrow_loaded_message(self) -> LoanedMessage:
+        return self.mtype.loan(self.dom.arena)
+
+    def publish(self, loan: LoanedMessage, *, origin: int = ORIGIN_AGNOCAST,
+                exclude_sub: int = -1) -> int:
+        """Move-publish: the loan is consumed (rvalue semantics, §VII-A)."""
+        if loan.arena is not self.dom.arena:
+            raise ValueError("loan does not belong to this publisher's arena")
+        desc = pickle.dumps(loan.descriptor(), protocol=5)  # constant-size metadata
+        off = self.dom.arena.alloc(len(desc))
+        self.dom.arena.write_bytes(off, desc)
+        try:
+            seq, freeable = self.dom.registry.publish(
+                self.tidx, self.pidx, off, len(desc), origin=origin, exclude_sub=exclude_sub
+            )
+        except Exception:
+            self.dom.arena.free(off)  # queue full: loan stays valid for retry
+            raise
+        self._inflight[seq] = (off, len(desc), loan.alloc_offsets())
+        loan._ragged, loan._fixed = {}, {}  # invalidate: ownership moved
+        self._reclaim(freeable)
+        self._notify()
+        return seq
+
+    # -- owner-side deallocation (Fig. 7 timing) ----------------------------------
+
+    def _reclaim(self, seqs) -> None:
+        for seq in seqs:
+            rec = self._inflight.pop(seq, None)
+            if rec is None:
+                continue
+            desc_off, _, offs = rec
+            self.dom.arena.free(desc_off)
+            for o in offs:
+                self.dom.arena.free(o)
+
+    def reclaim(self) -> int:
+        seqs = self.dom.registry.reclaimable(self.tidx, self.pidx)
+        self._reclaim(seqs)
+        return len(seqs)
+
+    # -- O(1) wake-ups -------------------------------------------------------------
+
+    def _notify(self) -> None:
+        t = self.dom.registry.topics[self.tidx]
+        alive = int(t["sub_alive"])
+        s = 0
+        while alive >> s:
+            if (alive >> s) & 1:
+                fd = self._fifo_fds.get(s)
+                if fd is None:
+                    try:
+                        fd = os.open(_fifo_path(self.dom.name, self.tidx, s),
+                                     os.O_WRONLY | os.O_NONBLOCK)
+                        self._fifo_fds[s] = fd
+                    except OSError:
+                        fd = None
+                if fd is not None:
+                    try:
+                        os.write(fd, b"\x01")
+                    except OSError as e:
+                        if e.errno == errno.EPIPE:
+                            os.close(fd)
+                            self._fifo_fds.pop(s, None)
+            s += 1
+
+    def close(self) -> None:
+        for fd in self._fifo_fds.values():
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+        self._fifo_fds = {}
+
+
+class Subscription:
+    def __init__(self, dom: Domain, mtype: MessageType, topic: str, callback=None):
+        self.dom = dom
+        self.mtype = mtype
+        self.topic = topic
+        self.callback = callback
+        self.tidx = dom.registry.topic_index(topic)
+        self.sidx = dom.registry.add_subscriber(self.tidx, os.getpid())
+        path = _fifo_path(dom.name, self.tidx, self.sidx)
+        try:
+            os.mkfifo(path)
+        except FileExistsError:
+            pass
+        self._fifo = os.open(path, os.O_RDONLY | os.O_NONBLOCK)
+        self._arenas: dict[int, str] = {}
+
+    # -- zero-copy take -------------------------------------------------------------
+
+    def take(self) -> list[MessagePtr]:
+        out: list[MessagePtr] = []
+        entries = self.dom.registry.take(self.tidx, self.sidx)
+        if not entries:
+            return out
+        pubs = dict(self.dom.registry.publishers(self.tidx))
+        for e in entries:
+            arena_name = pubs.get(e.pub_idx)
+            if arena_name is None:
+                continue  # publisher died; entry payload is gone
+            arena = self.dom.attach_arena(arena_name)
+            raw = arena.read_bytes(e.desc_off, e.desc_len)
+            desc = pickle.loads(raw)
+            msg = ReceivedMessage(arena, desc)
+            out.append(MessagePtr.first(msg, self.dom.registry, self.tidx, self.sidx, e))
+        return out
+
+    def wait(self, timeout: float | None = None) -> bool:
+        r, _, _ = select.select([self._fifo], [], [], timeout)
+        if r:
+            try:
+                os.read(self._fifo, 4096)  # drain wake tokens
+            except OSError:
+                pass
+            return True
+        return False
+
+    def spin_once(self, timeout: float | None = 1.0) -> int:
+        """Wait for a wake-up, take, and run the callback on each message."""
+        msgs = self.take()
+        if not msgs and self.wait(timeout):
+            msgs = self.take()
+        for ptr in msgs:
+            if self.callback is not None:
+                self.callback(ptr)
+            else:
+                ptr.release()
+        return len(msgs)
+
+    def close(self) -> None:
+        try:
+            os.close(self._fifo)
+        except OSError:
+            pass
+        try:
+            self.dom.registry.remove_subscriber(self.tidx, self.sidx)
+        except Exception:
+            pass

@@ -1,0 +1,261 @@
+"""Conventional transports — the paths Agnocast is compared against (§V).
+
+* :class:`Bus` / :class:`BusClient` — a loopback publish/subscribe bus over
+  Unix domain sockets with length-prefixed serialized frames.  This is the
+  "ROS 2 via CycloneDDS" analogue: every publish pays serialization + two
+  socket copies + deserialization, all O(payload).
+* :class:`ShmRing` — a shared-memory ring.  In ``copy`` mode the producer
+  serializes into a slot and the consumer deserializes out (the "IceOryx
+  with unsized message types" case the paper measures: transparent
+  serialization to/from shared memory).  In ``loan`` mode the producer
+  writes payload bytes directly in the slot and the consumer reads in
+  place (the "IceOryx with static-sized types" true zero-copy case —
+  constant latency, but only for fixed-size payloads).
+
+These exist so the benchmarks reproduce Fig. 9/10/11's *comparisons*, and
+so the bridge (§IV-D) has a conventional space to relay to.
+"""
+
+from __future__ import annotations
+
+import os
+import secrets
+import selectors
+import socket
+import struct
+import threading
+from multiprocessing import shared_memory
+
+import numpy as np
+
+from .arena import _new_shm
+
+__all__ = ["Bus", "BusClient", "ShmRing"]
+
+_FRAME = struct.Struct("<I")
+_PUBHDR = struct.Struct("<HB")  # topic_len, origin
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+class Bus:
+    """Loopback pub/sub hub (the conventional-middleware stand-in)."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or f"\0agnobus-{secrets.token_hex(6)}"
+        self._srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._srv.bind(self.path)
+        self._srv.listen(64)
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._srv, selectors.EVENT_READ, None)
+        self._subs: dict[socket.socket, set[str]] = {}
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "Bus":
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            for key, _ in self._sel.select(timeout=0.1):
+                if key.data is None:
+                    conn, _ = self._srv.accept()
+                    self._subs[conn] = set()
+                    self._sel.register(conn, selectors.EVENT_READ, "c")
+                else:
+                    self._handle(key.fileobj)
+
+    def _handle(self, conn: socket.socket) -> None:
+        try:
+            hdr = _recv_exact(conn, 4)
+            if hdr is None:
+                raise ConnectionError
+            (n,) = _FRAME.unpack(hdr)
+            frame = _recv_exact(conn, n)
+            if frame is None:
+                raise ConnectionError
+        except (ConnectionError, OSError):
+            self._sel.unregister(conn)
+            self._subs.pop(conn, None)
+            conn.close()
+            return
+        kind, body = frame[0], frame[1:]
+        if kind == 1:  # SUB topic
+            self._subs[conn].add(body.decode())
+        else:  # PUB: fan out to subscribers of the topic
+            (tlen, _origin) = _PUBHDR.unpack(body[: _PUBHDR.size])
+            topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
+            out = _FRAME.pack(len(frame)) + frame
+            dead = []
+            for c, topics in self._subs.items():
+                if topic in topics and c is not conn:
+                    try:
+                        c.sendall(out)
+                    except OSError:
+                        dead.append(c)
+            for c in dead:
+                self._sel.unregister(c)
+                self._subs.pop(c, None)
+                c.close()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+        self._srv.close()
+
+
+class BusClient:
+    def __init__(self, path: str):
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.connect(path)
+
+    def subscribe(self, topic: str) -> None:
+        body = b"\x01" + topic.encode()
+        self._sock.sendall(_FRAME.pack(len(body)) + body)
+
+    def publish(self, topic: str, payload: bytes, *, origin: int = 0) -> None:
+        t = topic.encode()
+        body = b"\x00" + _PUBHDR.pack(len(t), origin) + t + payload
+        self._sock.sendall(_FRAME.pack(len(body)) + body)
+
+    def recv(self, timeout: float | None = None) -> tuple[str, int, bytes] | None:
+        import select as _select
+
+        if timeout is not None:
+            r, _, _ = _select.select([self._sock], [], [], timeout)
+            if not r:
+                return None
+        # frame is available (or timeout=None): blocking reads for the frame
+        self._sock.settimeout(None)
+        hdr = _recv_exact(self._sock, 4)
+        if hdr is None:
+            return None
+        (n,) = _FRAME.unpack(hdr)
+        frame = _recv_exact(self._sock, n)
+        if frame is None:
+            return None
+        body = frame[1:]
+        (tlen, origin) = _PUBHDR.unpack(body[: _PUBHDR.size])
+        topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
+        return topic, origin, body[_PUBHDR.size + tlen :]
+
+    def close(self) -> None:
+        self._sock.close()
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory ring (IceOryx analogue)
+# ---------------------------------------------------------------------------
+
+_RING_HDR = 64  # head (u8 x 8 reserved)
+_SLOT_HDR = 16  # seq u8, nbytes u8
+
+
+class ShmRing:
+    """Single-producer shared-memory ring with ``loan`` and ``copy`` modes."""
+
+    def __init__(self, shm, slots: int, slot_bytes: int, *, owner: bool):
+        self._shm = shm
+        self.slots = slots
+        self.slot_bytes = slot_bytes
+        self.owner = owner
+        self.name = shm.name
+        self._head = np.frombuffer(shm.buf, dtype=np.uint64, count=8)
+        self._buf = np.frombuffer(shm.buf, dtype=np.uint8, offset=_RING_HDR)
+        if owner:
+            self._head[0] = 0  # next seq to write
+        self._rseq = 1  # consumer cursor
+
+    @classmethod
+    def create(cls, slots: int, slot_bytes: int, name: str | None = None) -> "ShmRing":
+        name = name or f"agnoring-{secrets.token_hex(6)}"
+        size = _RING_HDR + slots * (_SLOT_HDR + slot_bytes)
+        return cls(_new_shm(name, create=True, size=size), slots, slot_bytes, owner=True)
+
+    @classmethod
+    def attach(cls, name: str, slots: int, slot_bytes: int) -> "ShmRing":
+        return cls(_new_shm(name, create=False), slots, slot_bytes, owner=False)
+
+    def _slot(self, seq: int) -> int:
+        return (seq % self.slots) * (_SLOT_HDR + self.slot_bytes)
+
+    # producer -----------------------------------------------------------------
+
+    def loan(self) -> np.ndarray:
+        """Zero-copy produce: write payload directly into the next slot."""
+        seq = int(self._head[0]) + 1
+        off = self._slot(seq)
+        return self._buf[off + _SLOT_HDR : off + _SLOT_HDR + self.slot_bytes]
+
+    def commit(self, nbytes: int) -> int:
+        seq = int(self._head[0]) + 1
+        off = self._slot(seq)
+        hdr = self._buf[off : off + _SLOT_HDR].view(np.uint64)
+        hdr[1] = nbytes
+        hdr[0] = seq
+        self._head[0] = seq  # release
+        return seq
+
+    def push_copy(self, payload: bytes | np.ndarray) -> int:
+        """Copy-mode produce (IceOryx-with-unsized: serialize into shm)."""
+        data = np.frombuffer(payload, dtype=np.uint8) if isinstance(payload, (bytes, bytearray, memoryview)) else payload.view(np.uint8).reshape(-1)
+        slot = self.loan()
+        slot[: data.size] = data  # the copy the paper measures
+        return self.commit(data.size)
+
+    # consumer -----------------------------------------------------------------
+
+    def poll(self) -> tuple[int, np.ndarray] | None:
+        """Read next message; returns (seq, read-only view) — view is only
+        stable until the producer laps the ring (benchmark harness keeps
+        slots ≥ in-flight)."""
+        latest = int(self._head[0])
+        if latest < self._rseq:
+            return None
+        seq = self._rseq
+        off = self._slot(seq)
+        hdr = self._buf[off : off + _SLOT_HDR].view(np.uint64)
+        if int(hdr[0]) != seq:  # lapped: jump forward
+            seq = latest
+            off = self._slot(seq)
+            hdr = self._buf[off : off + _SLOT_HDR].view(np.uint64)
+        n = int(hdr[1])
+        self._rseq = seq + 1
+        view = self._buf[off + _SLOT_HDR : off + _SLOT_HDR + n]
+        ro = view[...]
+        ro.flags.writeable = False
+        return seq, ro
+
+    def pop_copy(self, timeout_spin: int = 0) -> tuple[int, bytes] | None:
+        """Copy-mode consume (deserialize out of shm)."""
+        got = self.poll()
+        if got is None:
+            return None
+        seq, view = got
+        return seq, view.tobytes()  # the copy-out
+
+    def close(self) -> None:
+        self._head = None
+        self._buf = None
+        try:
+            self._shm.close()
+        except BufferError:
+            pass
+
+    def unlink(self) -> None:
+        if self.owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass

@@ -1,0 +1,94 @@
+"""Decode attention Pallas kernel (flash-decoding dataflow).
+
+One new token per request attends to a long KV cache.  Grid
+``(B, KV, Ns)``: the sequence axis streams KV tiles through VMEM with
+running (max, sum, acc) scratch — the same online-softmax state machine as
+the prefill kernel, but the tile is (G, bs) where G is the GQA group width,
+so the MXU operates on [G × hd] @ [hd × bs].  Per-request valid lengths
+mask the tail tile.  On TPU the Ns axis is where sequence-parallel
+partitioning happens (each shard computes a partial (m, l, acc) and the
+combiner merges — see sharding/decode_sp.py for the XLA-level version).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -2.0e38
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_s: int, ns: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+
+    @pl.when(ik * block_s < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ik * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.where(s > 0.5 * _NEG, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bs, hd)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, lengths, *,
+                            scale: float | None = None, block_s: int = 256,
+                            interpret: bool = True):
+    """q: (B, H, hd); caches: (B, KV, S, hd); lengths: (B,) int32."""
+    b, h, hd = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    block_s = min(block_s, s)
+    assert s % block_s == 0, "pad cache to tile multiple"
+    ns = s // block_s
+    qg = q.reshape(b, kvh, g, hd)
+
+    kern = functools.partial(_kernel, scale=scale, block_s=block_s, ns=ns)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, kv_, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, kv_, ik: (b_, kv_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, kv_, ik: (b_, kv_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, hd)

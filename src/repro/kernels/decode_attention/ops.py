@@ -1,0 +1,31 @@
+"""Public jit'd wrapper for the decode attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+from .ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 256):
+    """q: (B, H, hd); caches (B, KV, S, hd); lengths (B,) -> (B, H, hd)."""
+    s = k_cache.shape[2]
+    bs = min(block_s, s)
+    pad = (-s) % bs
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return decode_attention_kernel(q, k_cache, v_cache, lengths,
+                                   block_s=bs, interpret=not _on_tpu())
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

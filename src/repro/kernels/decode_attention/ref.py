@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token decode attention with per-request lengths."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.0e38
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """q: (B, H, hd); caches: (B, KV, S, hd); lengths: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, hd).astype(q.dtype)

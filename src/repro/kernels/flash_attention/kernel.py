@@ -1,0 +1,113 @@
+"""Flash attention Pallas kernel (TPU target: VMEM tiles, MXU matmuls).
+
+Grid ``(B, H, Nq, Nk)``; the Nk axis is the streaming axis: running
+(max, sum, acc) live in VMEM scratch across Nk steps and the output tile is
+written once at the last step.  Tiles default to 128×128 — MXU-aligned on
+both matmul dims.  GQA is handled in the K/V index maps (``h -> h // G``),
+so KV tiles are fetched once per group from HBM.
+
+Causal masking: whole K-tiles strictly above the diagonal are skipped via
+``pl.when`` (no compute, no HBM traffic for masked tiles beyond the fetch),
+and the diagonal tile applies an element mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, block_q: int, block_k: int, nk: int,
+            kv_valid: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            s = jnp.where(qpos >= kpos, s, _NEG)
+        if kv_valid % block_k != 0 or kv_valid < nk * block_k:
+            s = jnp.where(kpos < kv_valid, s, _NEG)  # padded keys masked out
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.where(s > 0.5 * _NEG, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip K-tiles strictly above the diagonal
+        pl.when(ik * block_k <= iq * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                            jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           kv_valid: int | None = None,
+                           interpret: bool = True):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, "pad seq to tile multiple"
+    nq, nk = sq // block_q, sk // block_k
+    kv_valid = sk if kv_valid is None else kv_valid
+
+    grid = (b, h, nq, nk)
+    kern = functools.partial(_kernel, causal=causal, scale=scale,
+                             block_q=block_q, block_k=block_k, nk=nk,
+                             kv_valid=kv_valid)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),   # running max m
+            _vmem((block_q, 1), jnp.float32),   # running sum l
+            _vmem((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

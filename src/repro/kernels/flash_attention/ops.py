@@ -1,0 +1,45 @@
+"""Public jit'd wrapper for the flash attention kernel.
+
+On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
+``interpret=True`` executes the same kernel body for correctness validation
+against :func:`ref.flash_attention_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
+
+    Pads Sq/Sk up to tile multiples; GQA via H % KV == 0.
+    """
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, max(sq, 1))
+    bk = min(block_k, max(sk, 1))
+    pq = (-sq) % bq
+    pk = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    out = flash_attention_kernel(qp, kp, vp, causal=causal,
+                                 block_q=bq, block_k=bk, kv_valid=sk,
+                                 interpret=not _on_tpu())
+    return out[:, :, :sq]
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd); GQA via H % KV == 0.
+
+    Returns (B, H, Sq, hd). fp32 softmax, output in q.dtype.
+    """
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, kvh, g, sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)

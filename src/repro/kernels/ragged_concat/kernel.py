@@ -1,0 +1,61 @@
+"""Ragged concatenation Pallas kernel — the paper's flagship workload
+(Autoware PointCloud *concatenate*) as a TPU kernel.
+
+The host-side Agnocast plane hands the concatenate stage N variable-length
+point buffers zero-copy; on device, this kernel packs them into one
+contiguous buffer without host serialization: grid ``(N,)``, each step
+read-modify-writes its destination window ``[offset_i, offset_i + Lmax)``
+with a validity mask, so payload bytes move HBM→VMEM→HBM exactly once.
+
+The destination offset is data-dependent (prefix sums of the lengths,
+prefetched to SMEM); the output block is revisited by every grid step —
+the TPU grid is sequential, so read-modify-write over the shared VMEM
+window is race-free by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, off_ref, src_ref, o_ref, *, lmax: int, cap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    length = len_ref[0]
+    off = off_ref[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (lmax, 1), 0)
+    valid = rows < length
+    old = pl.load(o_ref, (pl.ds(off, lmax), slice(None)))
+    new = jnp.where(valid, src_ref[0].astype(o_ref.dtype), old)
+    pl.store(o_ref, (pl.ds(off, lmax), slice(None)), new)
+
+
+def ragged_concat_kernel(src, lengths, offsets, capacity: int, *,
+                         interpret: bool = True):
+    """src: (N, Lmax, C); lengths/offsets: (N,) -> out (capacity, C).
+
+    capacity must be >= offsets[-1] + Lmax (ops.py pads then trims).
+    """
+    n, lmax, c = src.shape
+    kern = functools.partial(_kernel, lmax=lmax, cap=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, lmax, c), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((capacity, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((capacity, c), src.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), offsets.astype(jnp.int32), src)

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the ragged concat kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ragged_concat_kernel
+from .ref import ragged_concat_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def ragged_concat(src, lengths, *, capacity: int):
+    """Pack N ragged sources into one contiguous (capacity, C) buffer.
+
+    src: (N, Lmax, C); lengths: (N,). Returns (out, offsets, total).
+    """
+    n, lmax, c = src.shape
+    lengths = lengths.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(lengths)[:-1]])
+    # the kernel writes Lmax-row windows; give it slack, then trim
+    cap_pad = capacity + lmax
+    out = ragged_concat_kernel(src, lengths, offsets, cap_pad,
+                               interpret=not _on_tpu())
+    return out[:capacity], offsets, jnp.sum(lengths)
+
+
+__all__ = ["ragged_concat", "ragged_concat_ref"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for ragged concatenation (the Autoware *concatenate* node).
+
+N variable-length sources (padded to Lmax) are packed into one contiguous
+buffer. Returns (out (cap, C), offsets (N,), total).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ragged_concat_ref(src, lengths, capacity: int):
+    """src: (N, Lmax, C); lengths: (N,) -> (out (capacity, C), offsets, total)."""
+    n, lmax, c = src.shape
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(lengths.astype(jnp.int32))[:-1]])
+    out = jnp.zeros((capacity, c), src.dtype)
+    for i in range(n):  # static python loop: N is small and static
+        rows = jnp.arange(lmax)
+        valid = rows < lengths[i]
+        dest = jnp.where(valid, offsets[i] + rows, capacity)  # OOB rows dropped
+        out = out.at[dest].add(jnp.where(valid[:, None], src[i], 0),
+                               mode="drop")
+    total = jnp.sum(lengths.astype(jnp.int32))
+    return out, offsets, total

@@ -1,0 +1,37 @@
+"""Public jit'd wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_kernel
+from .ref import rmsnorm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def fused_rmsnorm(x, residual, scale, *, eps: float = 1e-6,
+                  block_rows: int = 256):
+    """x/residual: (..., D); scale (D,). Returns (normed, new_residual)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    r2 = residual.reshape(-1, d)
+    rows = x2.shape[0]
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+    y, h = rmsnorm_kernel(x2, r2, scale, eps=eps, block_rows=br,
+                          interpret=not _on_tpu())
+    return y[:rows].reshape(shape), h[:rows].reshape(shape)
+
+
+__all__ = ["fused_rmsnorm", "rmsnorm_ref"]

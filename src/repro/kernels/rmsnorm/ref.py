@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused residual-add + RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, residual, scale, *, eps: float = 1e-6):
+    """out = rms_norm(x + residual) * scale; also returns the new residual."""
+    h = (x.astype(jnp.float32) + residual.astype(jnp.float32))
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype), h.astype(x.dtype)

@@ -1,0 +1,4 @@
+from .ops import slstm_scan
+from .ref import slstm_scan_ref
+
+__all__ = ["slstm_scan", "slstm_scan_ref"]

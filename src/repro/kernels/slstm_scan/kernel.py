@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: the whole sLSTM time recurrence on-chip.
+
+Why this kernel exists (EXPERIMENTS.md §Perf B3): the sLSTM chain is
+sequential in time, and as XLA HLO it is one while-iteration per token —
+32k iterations of tiny elementwise ops, each a round-trip through
+scheduling and (on conservative layouts) HBM for the carried state. The
+TPU-native form is ONE kernel invocation per (batch-tile × seq-chunk):
+state lives in VMEM scratch across the sequence grid dimension, the
+per-step work is VPU elementwise plus one small per-head MXU product
+(h·w_hh), and xg streams through VMEM in S-chunks.
+
+Grid: (B/bb, S/sc) with the S dimension sequential ("arbitrary") —
+state scratch carries across S-chunks of the same batch tile; it is
+re-initialized whenever the batch-tile index advances.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["slstm_scan_kernel"]
+
+
+def _kernel(xg_ref, whh_ref, b_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+            hs_ref, hN_ref, cN_ref, nN_ref, mN_ref,
+            h_s, c_s, n_s, m_s, *, seq_chunk: int, nh: int, valid_len: int):
+    sj = pl.program_id(1)
+
+    @pl.when(sj == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+        n_s[...] = n0_ref[...].astype(jnp.float32)
+        m_s[...] = m0_ref[...].astype(jnp.float32)
+
+    bsz, d = h_s.shape
+    dh = d // nh
+    whh = whh_ref[...].astype(jnp.float32)           # (H, dh, 4dh)
+    bias = b_ref[...].astype(jnp.float32)            # (4D,)
+
+    def step(t, carry):
+        h, c, n, m = carry
+        xg_t = xg_ref[:, t, :].astype(jnp.float32)   # (bb, 4D)
+        rec = jax.lax.dot_general(
+            h.reshape(bsz, nh, dh), whh,
+            (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                             # (H, bb, 4dh) batched
+        rec = rec.transpose(1, 0, 2).reshape(bsz, 4 * d)
+        g = xg_t + rec + bias
+        gh = g.reshape(bsz, nh, 4 * dh)
+        gi = gh[:, :, 0 * dh:1 * dh].reshape(bsz, d)
+        gf = gh[:, :, 1 * dh:2 * dh].reshape(bsz, d)
+        gz = gh[:, :, 2 * dh:3 * dh].reshape(bsz, d)
+        go = gh[:, :, 3 * dh:4 * dh].reshape(bsz, d)
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        iprime = jnp.exp(gi - m_new)
+        fprime = jnp.exp(logf + m - m_new)
+        c_new = fprime * c + iprime * jnp.tanh(gz)
+        n_new = fprime * n + iprime
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        hs_ref[:, t, :] = h_new.astype(hs_ref.dtype)
+        # sequence padding must not advance the state past valid_len
+        valid = (sj * seq_chunk + t) < valid_len
+        keep = lambda new, old: jnp.where(valid, new, old)
+        return (keep(h_new, h), keep(c_new, c), keep(n_new, n),
+                keep(m_new, m))
+
+    h, c, n, m = jax.lax.fori_loop(
+        0, seq_chunk, step, (h_s[...], c_s[...], n_s[...], m_s[...]))
+    h_s[...], c_s[...], n_s[...], m_s[...] = h, c, n, m
+    nsj = pl.num_programs(1)
+
+    @pl.when(sj == nsj - 1)
+    def _emit():
+        hN_ref[...] = h
+        cN_ref[...] = c
+        nN_ref[...] = n
+        mN_ref[...] = m
+
+
+def slstm_scan_kernel(xg, w_hh, b_ih, h0, c0, n0, m0, *,
+                      block_batch: int = 8, seq_chunk: int = 256,
+                      valid_len: int | None = None, interpret: bool = True):
+    """xg: (B, S, 4D); returns (hs (B, S, D) f32, (h, c, n, m) (B, D) f32)."""
+    bsz, s, d4 = xg.shape
+    d = d4 // 4
+    nh = w_hh.shape[0]
+    bb = min(block_batch, bsz)
+    sc = min(seq_chunk, s)
+    assert bsz % bb == 0 and s % sc == 0, "pad batch/seq to tile multiples"
+    kern = functools.partial(_kernel, seq_chunk=sc, nh=nh,
+                             valid_len=valid_len if valid_len is not None else s)
+    grid = (bsz // bb, s // sc)
+    state_spec = pl.BlockSpec((bb, d), lambda i, j: (i, 0))
+    out_shapes = [jax.ShapeDtypeStruct((bsz, s, d), jnp.float32)] + \
+        [jax.ShapeDtypeStruct((bsz, d), jnp.float32)] * 4
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, sc, d4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((nh, d // nh, 4 * (d // nh)), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((d4,), lambda i, j: (0,)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_specs=[pl.BlockSpec((bb, sc, d), lambda i, j: (i, j, 0)),
+                   state_spec, state_spec, state_spec, state_spec],
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((bb, d), jnp.float32)] * 4,
+        interpret=interpret,
+    )(xg, w_hh, b_ih, h0, c0, n0, m0)

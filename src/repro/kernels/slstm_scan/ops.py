@@ -1,0 +1,43 @@
+"""Public jit'd wrapper for the sLSTM scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import slstm_scan_kernel
+from .ref import slstm_scan_ref
+
+__all__ = ["slstm_scan", "slstm_scan_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "seq_chunk"))
+def slstm_scan(xg, w_hh, b_ih, h0, c0, n0, m0, *,
+               block_batch: int = 8, seq_chunk: int = 256):
+    """sLSTM recurrence over (B, S, 4D) pre-projected gates.
+
+    TPU: one kernel, state resident in VMEM across the sequence grid.
+    Elsewhere: interpret mode (tests) — semantics identical to the oracle.
+    Returns (hs (B, S, D) f32, (h, c, n, m) each (B, D) f32).
+    """
+    bsz, s, d4 = xg.shape
+    bb = min(block_batch, bsz)
+    sc = min(seq_chunk, s)
+    pad_b = (-bsz) % bb
+    pad_s = (-s) % sc
+    if pad_b or pad_s:
+        xg = jnp.pad(xg, ((0, pad_b), (0, pad_s), (0, 0)))
+        pads = ((0, pad_b), (0, 0))
+        h0, c0, n0 = (jnp.pad(t, pads) for t in (h0, c0, n0))
+        m0 = jnp.pad(m0, pads, constant_values=0.0)
+    out = slstm_scan_kernel(xg, w_hh, b_ih, h0, c0, n0, m0,
+                            block_batch=bb, seq_chunk=sc, valid_len=s,
+                            interpret=not _on_tpu())
+    hs, h, c, n, m = out
+    return hs[:bsz, :s], (h[:bsz], c[:bsz], n[:bsz], m[:bsz])

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the sLSTM time scan (stabilized exponential gating).
+
+Matches repro.models.xlstm._slstm_step exactly: gates laid out per head as
+(..., 4*dh) = [i | f | z | o], block-diagonal recurrence via w_hh
+(H, dh, 4dh), running-max stabilizer m, normalizer n.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["slstm_scan_ref"]
+
+
+def slstm_scan_ref(xg, w_hh, b_ih, h0, c0, n0, m0):
+    """xg: (B, S, 4D); w_hh: (H, dh, 4dh); b_ih: (4D,);
+    h0/c0/n0/m0: (B, D). Returns (hs (B, S, D), (h, c, n, m))."""
+    bsz, s, d4 = xg.shape
+    d = d4 // 4
+    nh = w_hh.shape[0]
+    dh = d // nh
+
+    def step(carry, xg_t):
+        h_prev, c_prev, n_prev, m_prev = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h_prev.reshape(bsz, nh, dh),
+                         w_hh).reshape(bsz, 4 * d)
+        g = (xg_t + rec).astype(jnp.float32) + b_ih
+        gi, gf, gz, go = jnp.split(g.reshape(bsz, nh, 4 * dh), 4, axis=-1)
+        gi, gf, gz, go = (t.reshape(bsz, d) for t in (gi, gf, gz, go))
+        logf = jax.nn.log_sigmoid(gf)
+        m = jnp.maximum(logf + m_prev, gi)
+        iprime = jnp.exp(gi - m)
+        fprime = jnp.exp(logf + m_prev - m)
+        c = fprime * c_prev + iprime * jnp.tanh(gz)
+        n = fprime * n_prev + iprime
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(
+        step, (h0.astype(jnp.float32), c0.astype(jnp.float32),
+               n0.astype(jnp.float32), m0.astype(jnp.float32)),
+        jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c, n, m)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("AGNO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("AGNO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod) out
+     of 512 placeholder host devices (flag above — set before ANY jax
+     import, since jax locks the device count on first init);
+  2. assigns shardings (params via logical rules, caches/batches via the
+     tables in launch/steps.py);
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(**specs)``
+     against ShapeDtypeStructs — no allocation anywhere;
+  4. ``.compile()`` — sharding mismatches, non-divisible tilings,
+     unsupported collectives and compile-time OOMs all surface here;
+  5. records ``memory_analysis()`` / ``cost_analysis()`` / collective bytes
+     (parsed from the post-SPMD optimized HLO) to a JSON the roofline
+     analysis (benchmarks/roofline.py) consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh 2x4 --smoke
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.steps import (
+    batch_specs,
+    cache_partition_specs,
+    decode_rules,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    shardings_for,
+    train_rules,
+)
+from repro.models import Model, WORKLOADS
+from repro.optim import AdamW
+from repro.sharding import param_partition_specs, use_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b(bf16|f64|f32|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = _DTYPE_BYTES[dt]
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format: [num_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(line)
+    if m:  # explicit format: size of first group
+        return max(len(m.group(1).split(",")), 1)
+    return world  # replica_groups={} -> one group of everything
+
+
+def collective_stats(hlo_text: str, world: int = 1) -> dict:
+    """Per-device ICI wire bytes of every collective in post-SPMD HLO.
+
+    Post-optimization HLO prints operands without type annotations, so we
+    parse the RESULT type (between ``=`` and the opcode) and convert to
+    bytes-on-the-wire per participating device with ring-algorithm costs:
+
+        all-gather          result × (g-1)/g     (receives all but own shard)
+        all-reduce          2 × size × (g-1)/g   (reduce-scatter + all-gather)
+        reduce-scatter      result × (g-1)       (input = result × g)
+        all-to-all          size × (g-1)/g
+        collective-permute  size                 (one send + one receive)
+    """
+    stats: dict[str, dict] = {
+        c: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for c in _COLLECTIVES:
+            start = False
+            if f" {c}(" in s:
+                head = s.split(f" {c}(", 1)[0]
+            elif f" {c}-start(" in s:
+                head = s.split(f" {c}-start(", 1)[0]
+                start = True
+            else:
+                continue
+            # result type(s): after the `=`, before the opcode
+            if "=" in head:
+                head = head.split("=", 1)[1]
+            types = _TYPE_RE.findall(head)
+            if not types:
+                break
+            if start:
+                # async-start results are (operand_buf, result_buf, ...): last typed
+                # entry is the result; counting all would double-count.
+                types = types[-1:]
+            rb = sum(_shape_bytes(dt, dims) for dt, dims in types)
+            g = _group_size(s, world)
+            if c == "all-gather":
+                wb = rb * (g - 1) / g
+            elif c == "all-reduce":
+                wb = 2.0 * rb * (g - 1) / g
+            elif c == "reduce-scatter":
+                wb = rb * (g - 1)
+            elif c == "all-to-all":
+                wb = rb * (g - 1) / g
+            else:  # collective-permute
+                wb = float(rb)
+            stats[c]["count"] += 1
+            stats[c]["result_bytes"] += rb
+            stats[c]["wire_bytes"] += wb
+            break
+    stats["total_bytes"] = sum(v["wire_bytes"] for v in stats.values()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _model_flops(cfg, wl) -> float:
+    n_active = cfg.active_param_count()
+    if wl.kind == "train":
+        tokens = wl.global_batch * wl.seq_len
+        return 6.0 * n_active * tokens
+    if wl.kind == "prefill":
+        tokens = wl.global_batch * wl.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * wl.global_batch  # decode: 1 token per request
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def build_cell(arch: str, shape: str, mesh, *, smoke: bool = False,
+               cfg_overrides: dict | None = None):
+    """Returns (jitted_fn, lower_args, cfg, wl) for one cell, inside a mesh ctx."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    wl = WORKLOADS[shape]
+    model = Model(cfg)
+    ok, why = model.supports(wl)
+    if not ok:
+        return None, why, cfg, wl
+    return model, "", cfg, wl
+
+
+def lower_cell(model: Model, wl, mesh, ctx):
+    cfg = model.cfg
+    params_abs = model.abstract_params()
+    pspecs = param_partition_specs(params_abs, ctx)
+    psh = shardings_for(pspecs, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if wl.kind == "train":
+        opt = AdamW(lr=3e-4)
+        state_abs = jax.eval_shape(opt.init, params_abs)
+        state_sh = {
+            "params": psh,
+            "master": psh, "m": psh, "v": psh,
+            "step": repl,
+        }
+        batch_abs = model.input_specs(wl)
+        bsh = shardings_for(batch_specs(cfg, batch_abs, ctx), mesh)
+        step = make_train_step(model, opt)
+        metrics_sh = {"grad_norm": repl, "lr": repl, "loss": repl}
+        fn = jax.jit(step, in_shardings=(state_sh, bsh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+        return fn.lower(state_abs, batch_abs)
+
+    if wl.kind == "prefill":
+        batch_abs = model.input_specs(wl)
+        bsh = shardings_for(batch_specs(cfg, batch_abs, ctx), mesh)
+        step = make_prefill_step(model, wl)
+        logits_abs, cache_abs = jax.eval_shape(
+            lambda p, b: step(p, b), params_abs, batch_abs)
+        csh = shardings_for(cache_partition_specs(cache_abs, ctx), mesh)
+        lsh = NamedSharding(mesh, logits_spec(logits_abs.shape, ctx))
+        fn = jax.jit(step, in_shardings=(psh, bsh), out_shardings=(lsh, csh))
+        return fn.lower(params_abs, batch_abs)
+
+    # decode
+    specs = model.input_specs(wl)
+    cache_abs, tok_abs = specs["cache"], specs["tokens"]
+    csh = shardings_for(cache_partition_specs(cache_abs, ctx), mesh)
+    tsh = NamedSharding(mesh, logical_tok_spec(tok_abs.shape, ctx))
+    step = make_decode_step(model)
+    fn = jax.jit(step, in_shardings=(psh, csh, tsh),
+                 out_shardings=(tsh, csh), donate_argnums=(1,))
+    return fn.lower(params_abs, cache_abs, tok_abs)
+
+
+def logits_spec(shape, ctx):
+    from repro.sharding import logical_to_spec
+
+    return logical_to_spec(("batch", None, "vocab"), shape, ctx)
+
+
+def logical_tok_spec(shape, ctx):
+    from repro.sharding import logical_to_spec
+
+    return logical_to_spec(("batch", None), shape, ctx)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             mesh_spec: str = "", smoke: bool = False, out_dir: str | None = None,
+             rules_extra: dict | None = None, tag: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    wl = WORKLOADS[shape]
+    if mesh_spec:
+        dims = tuple(int(x) for x in mesh_spec.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(d) for d in mesh.devices.shape)
+
+    model, why, cfg, wl = build_cell(arch, shape, mesh, smoke=smoke,
+                                     cfg_overrides=cfg_overrides)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "kind": wl.kind,
+           "smoke": smoke, "tag": tag}
+    if model is None:
+        rec["status"] = "skipped"
+        rec["why"] = why
+        return _finish(rec, out_dir)
+
+    rules = (train_rules(cfg, mesh) if wl.kind == "train"
+             else decode_rules(cfg, mesh))
+    rules.update(rules_extra or {})
+    t0 = time.time()
+    try:
+        with use_mesh(mesh, rules) as ctx:
+            lowered = lower_cell(model, wl, mesh, ctx)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ca = compiled.cost_analysis() or {}
+            hlo_text = compiled.as_text()
+            world = int(mesh.devices.size)
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+                # raw XLA numbers (scan bodies counted ONCE — see hlo_analysis)
+                flops=float(ca.get("flops", 0.0)),
+                bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                utilization_ops=float(ca.get("utilization", 0.0) or 0.0),
+                memory=_mem_analysis(compiled),
+                collectives=collective_stats(hlo_text, world=world),
+                # trip-count-scaled per-device costs (the roofline inputs)
+                hlo=analyze_hlo(hlo_text, world=world).as_dict(),
+                model_flops=_model_flops(cfg, wl),
+                n_params=int(cfg.param_count()),
+                n_active_params=int(cfg.active_param_count()),
+                n_devices=world,
+            )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug, record it
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-4000:]
+    return _finish(rec, out_dir)
+
+
+def _finish(rec: dict, out_dir: str | None) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"__{rec['tag']}" if rec.get("tag") else ""
+        path = os.path.join(
+            out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        coll = rec["collectives"]["total_bytes"]
+        extra = (f" flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e}"
+                 f" coll={coll:.3e} compile={rec['compile_s']}s")
+        mem = rec.get("memory", {})
+        if mem:
+            extra += f" mem={ {k: f'{v/1e9:.2f}GB' for k, v in mem.items() if 'size' in k or 'peak' in k} }"
+    elif status == "skipped":
+        extra = f" ({rec['why']})"
+    else:
+        extra = f" !! {rec['error']}"
+    print(f"[dryrun] {rec['arch']} × {rec['shape']} × {rec['mesh']}: {status}{extra}",
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(WORKLOADS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default="", help="override, e.g. 2x4 or 2x2x4")
+    ap.add_argument("--smoke", action="store_true", help="use reduced configs")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in WORKLOADS:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    bad = 0
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       mesh_spec=args.mesh, smoke=args.smoke, out_dir=args.out)
+        bad += rec["status"] == "error"
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

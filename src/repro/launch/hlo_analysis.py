@@ -1,0 +1,441 @@
+"""Trip-count-aware cost analysis of post-SPMD optimized HLO.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, but our models stack layers with ``lax.scan`` (and SSMs scan over
+sequence chunks), so XLA's numbers undercount a 94-layer model by ~94x.
+This module reparses ``compiled.as_text()`` and rebuilds the three roofline
+inputs with loop multiplicities applied:
+
+* **FLOPs** — every ``dot`` contributes ``2 x result_elems x k`` where ``k``
+  is the product of the lhs contracting dims (types resolved through a
+  module-wide symbol table). Convolutions are absent from our models (the
+  audio/vision frontends are stubs per the brief).
+* **Bytes** — every top-level instruction contributes operand + result
+  bytes (the same convention XLA uses), EXCEPT known zero/partial-traffic
+  ops: bitcast/tuple/get-tuple-element/parameter are free, and
+  ``dynamic-update-slice`` counts only the updated window (in-place on
+  TPU/CPU), not the full aliased buffer — without this, a decode step that
+  appends one token would be charged the whole KV cache per layer.
+* **Collectives** — result-type bytes converted to ring wire-bytes
+  (see ``dryrun.collective_stats``), scaled by loop multiplicity.
+
+Loop multiplicities: each computation's multiplier is propagated from the
+entry through calls/fusions/conditionals (x1) and whiles (x trip count).
+Trip counts are recovered from the loop condition: jax's scan/fori lower
+to ``compare(iter, constant, LT)`` — we take the largest scalar-integer
+constant compared against in the cond computation. Unresolvable conds
+(none in our suite) fall back to 1 and are reported in
+``unresolved_whiles``.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCosts", "top_instructions"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# a type token: dtype[dims]{layout}  (layout optional)
+_TYPE_RE = re.compile(
+    r"\b(f8e4m3fn|f8e5m2|bf16|f64|f32|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|[^,]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLEE_RE = re.compile(
+    r"(?:to_apply|calls|condition|body|true_computation|false_computation|"
+    r"branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+# ops that move no bytes (aliases / metadata)
+_FREE_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+             "after-all", "opt-barrier", "partition-id", "replica-id",
+             "copy-done", "send-done", "recv-done"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _TYPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Comp:
+    name: str
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = field(default_factory=lambda: defaultdict(int))
+    whiles: list = field(default_factory=list)      # (cond, body)
+    callees: list = field(default_factory=list)     # x1 computations
+    constants: dict = field(default_factory=dict)   # name -> int value
+    compares: list = field(default_factory=list)    # operand names in compare()
+    records: list = field(default_factory=list)     # raw instr records
+    instrs: list = field(default_factory=list)      # (name, op, bytes, flops, meta)
+    root_op: str = ""
+    root_operands: list = field(default_factory=list)
+    params: list = field(default_factory=list)       # param names, in order
+    fused: bool = False                              # body of a kLoop/kOutput fusion
+
+
+@dataclass
+class HloCosts:
+    flops: float
+    bytes: float
+    collective_wire_bytes: float
+    collectives: dict
+    unresolved_whiles: int
+    while_trips: dict
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collectives": self.collectives,
+            "unresolved_whiles": self.unresolved_whiles,
+            "while_trips": self.while_trips,
+        }
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return world
+
+
+def _wire_bytes(kind: str, rb: float, g: int) -> float:
+    if kind == "all-gather":
+        return rb * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * rb * (g - 1) / g
+    if kind == "reduce-scatter":
+        return rb * (g - 1)
+    if kind == "all-to-all":
+        return rb * (g - 1) / g
+    return float(rb)  # collective-permute
+
+
+def _parse_with_mult(text: str, world: int = 1):
+    """Parse computations and propagate loop multiplicities; returns
+    (comps, mult, trips, unresolved)."""
+    comps: dict[str, _Comp] = {}
+    fused_bodies: set[str] = set()
+    types: dict[str, str] = {}          # instruction/param name -> type str
+    cur: _Comp | None = None
+    entry: str | None = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # computation header
+        if s.endswith("{") and ") -> " in s:
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                cur = comps.setdefault(m.group(1), _Comp(m.group(1)))
+                if s.startswith("ENTRY") or raw.startswith("ENTRY"):
+                    entry = m.group(1)
+                for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                    types[pname] = ptype
+                    cur.params.append(pname)
+                continue
+        if cur is None:
+            continue
+        # scalar integer constants (trip-count candidates)
+        mc = _CONST_RE.match(s)
+        if mc:
+            cur.constants[mc.group(1)] = int(mc.group(2))
+            types[mc.group(1)] = s.split("=", 1)[1]
+            continue
+        mi = _INSTR_RE.match(s)
+        if mi is None:
+            continue
+        name, rtype, op, rest = mi.groups()
+        types[name] = rtype
+        if op in _FREE_OPS:
+            continue
+        # operand names: inside the parens, before the attribute list
+        oper_str = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(oper_str)
+
+        if op == "compare":
+            cur.compares.append((operands, rest))
+            continue
+        if op == "while":
+            mw = _WHILE_ATTR_RE.search(rest)
+            if mw:
+                cur.whiles.append((mw.group(1), mw.group(2)))
+            continue
+        # nested computation refs at multiplicity 1 (fusions, calls, reduces,
+        # conditionals, sort comparators, ...)
+        for mcal in _CALLEE_RE.finditer(rest):
+            if mcal.group(0).startswith(("condition", "body")):
+                continue
+            for callee in mcal.group(1).split(","):
+                cur.callees.append(callee.strip().lstrip("%"))
+
+        meta = ""
+        mm = re.search(r'op_name="([^"]*)"', rest)
+        if mm:
+            meta = mm.group(1)
+        if s.lstrip().startswith("ROOT"):
+            cur.root_op = op
+            cur.root_operands = list(operands)
+
+        # ---- flops (dots are never fused on this backend) ----
+        iflops = 0.0
+        if op == "dot":
+            k = 1
+            mctr = _CONTRACT_RE.search(rest)
+            lhs_type = types.get(operands[0], "") if operands else ""
+            dims = _dims_of(lhs_type)
+            if mctr and dims:
+                for ci in mctr.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+            iflops = 2.0 * _type_elems(rtype) * k
+            cur.dot_flops += iflops
+
+        is_coll = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                is_coll = c
+                break
+        if is_coll:
+            rb = _type_bytes(rtype)
+            if op.endswith("-start"):
+                # start result is (operand_buf, result_buf): halve to undo the
+                # double-count of aliased in/out tuple entries.
+                rb //= 2
+            g = _group_size(rest, world)
+            cur.coll[is_coll] += _wire_bytes(is_coll, rb, g)
+            cur.coll_count[is_coll] += 1
+            cur.records.append({"name": name, "op": op, "rtype": rtype,
+                                "operands": operands, "rest": rest,
+                                "meta": meta, "flops": 0.0, "coll_rb": rb})
+            continue
+
+        # bytes are computed in a post-pass (fusion bodies need their callee's
+        # root op, which may be defined later in the text)
+        cur.records.append({"name": name, "op": op, "rtype": rtype,
+                            "operands": operands, "rest": rest, "meta": meta,
+                            "flops": iflops, "coll_rb": None})
+        # fused computations' internals must not double-count: mark bodies
+        mcalls = re.search(r"calls=%?([\w.\-]+)", rest)
+        if op == "fusion" and mcalls:
+            fused_bodies.add(mcalls.group(1))
+
+    # ---- post-pass: per-instruction bytes (fusion-aware) ----
+    for fb in fused_bodies:
+        if fb in comps:
+            comps[fb].fused = True
+
+    _WINDOW_OPS = ("dynamic-slice", "slice", "gather")
+
+    def _fusion_operand_bytes(body: _Comp, operands) -> float:
+        """Traffic of a fusion's inputs: a parameter consumed ONLY by
+        windowed reads (slice / dynamic-slice / gather) costs the windows,
+        not the whole array — a scan body that dynamic-slices one timestep
+        from a carried (B,S,D) buffer must not be charged the full buffer
+        every trip."""
+        uses: dict[str, list] = {}
+        for r2 in body.records:
+            for o in r2["operands"]:
+                uses.setdefault(o, []).append(r2)
+        total = 0.0
+        for i, o in enumerate(operands):
+            ob = float(_type_bytes(types.get(o, "")))
+            pname = body.params[i] if i < len(body.params) else None
+            if pname is not None:
+                pu = uses.get(pname, [])
+                if pu and all(r2["op"] in _WINDOW_OPS and r2["operands"]
+                              and r2["operands"][0] == pname for r2 in pu):
+                    ob = float(sum(_type_bytes(r2["rtype"]) for r2 in pu))
+                elif pu and all(r2["op"] == "dynamic-update-slice"
+                                and r2["operands"]
+                                and r2["operands"][0] == pname for r2 in pu):
+                    ob = 0.0   # aliased in-place buffer: writes counted at root
+            total += ob
+        return total
+
+    def _op_bytes(rec) -> float:
+        op, rtype, operands, rest = (rec["op"], rec["rtype"],
+                                     rec["operands"], rec["rest"])
+        if rec["coll_rb"] is not None:
+            return float(rec["coll_rb"])
+        if op == "dynamic-update-slice":
+            upd = types.get(operands[1], "") if len(operands) > 1 else ""
+            return 2.0 * _type_bytes(upd)      # read update + write window
+        if op in ("dynamic-slice", "slice"):
+            return 2.0 * _type_bytes(rtype)
+        if op == "gather":
+            idx = _type_bytes(types.get(operands[1], "")) if len(operands) > 1 else 0
+            return 2.0 * _type_bytes(rtype) + idx
+        if op == "fusion":
+            mcalls = re.search(r"calls=%?([\w.\-]+)", rest)
+            body = comps.get(mcalls.group(1)) if mcalls else None
+            if body is None:
+                return float(_type_bytes(rtype)
+                             + sum(_type_bytes(types.get(o, "")) for o in operands))
+            in_b = _fusion_operand_bytes(body, operands)
+            if body.root_op == "dynamic-update-slice":
+                # in-place fused DUS: result aliases the buffer operand
+                # (charged 0 above); traffic = the other inputs + the
+                # written window (= the DUS update operand's type)
+                upd = 0.0
+                for r2 in body.records:
+                    if r2["op"] == "dynamic-update-slice" and len(r2["operands"]) > 1:
+                        upd += _type_bytes(types.get(r2["operands"][1], ""))
+                return in_b + upd
+            return float(_type_bytes(rtype)) + in_b
+        ibytes = _type_bytes(rtype)
+        for o in operands:
+            ibytes += _type_bytes(types.get(o, ""))
+        return float(ibytes)
+
+    for comp in comps.values():
+        for rec in comp.records:
+            ib = _op_bytes(rec)
+            if not comp.fused:                  # fused bodies: flops only
+                comp.bytes_accessed += ib
+                comp.instrs.append((rec["name"], rec["op"], ib,
+                                    rec["flops"], rec["meta"]))
+
+    # ---- trip counts ----
+    # jax lowers scan/fori to `while iter < L`: the cond computation's ROOT
+    # is either `compare(iter, L)` or `fusion(iter, L)` wrapping the compare
+    # — either way the loop bound is a scalar-int constant operand of the
+    # ROOT, defined in the cond computation itself. Anything else is
+    # unresolved (-> 1 trip, reported); a broader "max constant in scope"
+    # fallback proved dangerous (it grabbed unrelated bounds and inflated
+    # nested-loop multipliers by orders of magnitude).
+    trips: dict[str, int] = {}
+    unresolved = 0
+    for comp in comps.values():
+        for cond_name, _body in comp.whiles:
+            cond = comps.get(cond_name)
+            cands: list[int] = []
+            if cond is not None:
+                for o in cond.root_operands:
+                    if o in cond.constants:
+                        cands.append(cond.constants[o])
+                if not cands:
+                    # direct `compare` root whose constants sit one hop away
+                    for operands, _rest in cond.compares:
+                        for o in operands:
+                            if o in cond.constants:
+                                cands.append(cond.constants[o])
+            if cands:
+                trips[cond_name] = max(cands)
+            else:
+                trips[cond_name] = 1
+                unresolved += 1
+
+    # ---- propagate multiplicities from the entry ----
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is not None:
+        stack = [(entry, 1.0)]
+        while stack:
+            name, m = stack.pop()
+            comp = comps.get(name)
+            if comp is None:
+                continue
+            mult[name] += m
+            for callee in comp.callees:
+                stack.append((callee, m))
+            for cond_name, body_name in comp.whiles:
+                t = trips.get(cond_name, 1)
+                stack.append((body_name, m * t))
+                stack.append((cond_name, m * (t + 1)))
+    return comps, mult, trips, unresolved
+
+
+def analyze_hlo(text: str, world: int = 1) -> HloCosts:
+    comps, mult, trips, unresolved = _parse_with_mult(text, world)
+    flops = byts = wire = 0.0
+    coll: dict[str, dict] = {c: {"count": 0, "wire_bytes": 0.0}
+                             for c in _COLLECTIVES}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += m * comp.dot_flops
+        byts += m * comp.bytes_accessed
+        for c, wb in comp.coll.items():
+            coll[c]["wire_bytes"] += m * wb
+            wire += m * wb
+        for c, n in comp.coll_count.items():
+            coll[c]["count"] += int(m * n)
+
+    wt = {f"{c}->{b}": trips.get(c, 1)
+          for comp in comps.values() for (c, b) in comp.whiles}
+    return HloCosts(flops=flops, bytes=byts, collective_wire_bytes=wire,
+                    collectives=coll, unresolved_whiles=unresolved,
+                    while_trips=wt)
+
+
+def top_instructions(text: str, world: int = 1, n: int = 25,
+                     by: str = "bytes") -> list[tuple]:
+    """Debug view: the n most expensive instructions, loop-scaled.
+
+    Returns (scaled_cost, comp, instr, op, op_name_metadata). ``by`` is
+    "bytes" or "flops". Used by the §Perf hillclimb to find what to attack.
+    """
+    comps, mult, _trips, _unres = _parse_with_mult(text, world)
+    out = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for (iname, op, ibytes, iflops, meta) in comp.instrs:
+            cost = m * (ibytes if by == "bytes" else iflops)
+            if cost > 0:
+                out.append((cost, cname, iname, op, meta))
+    out.sort(key=lambda t: -t[0])
+    return out[:n]

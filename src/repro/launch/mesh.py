@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets the 512-placeholder-device XLA flag
+before any jax import; tests and benches see 1 device).
+
+TPU v5e constants used by the roofline analysis live here too.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e per-chip hardware constants (roofline denominators)."""
+
+    PEAK_BF16_FLOPS = 197e12      # FLOP/s
+    HBM_BW = 819e9                # B/s
+    ICI_BW = 50e9                 # B/s per link
+
+
+def _mk(shape, axes):
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:  # older jax: no axis_types kwarg
+        return jax.make_mesh(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests use small ones, e.g. (2, 4) on 8 host devices)."""
+    return _mk(shape, axes)

@@ -1,0 +1,76 @@
+"""Training launcher.
+
+CPU-runnable end-to-end driver (the multi-pod configuration is exercised by
+``dryrun.py``; this launcher actually *trains*, so it defaults to a ~100M
+variant of the chosen architecture on the host devices):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 200 --batch 8 --seq 256 --size 100m
+
+``--size full`` uses the paper-exact config (TPU-scale — only sensible on a
+real pod). ``--resume`` restores the latest checkpoint in --ckpt-dir; this
+is also what a restarted job does automatically.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import Model
+from repro.runtime import Trainer, TrainerConfig
+
+__all__ = ["main", "model_100m"]
+
+
+def model_100m(arch: str):
+    """~100M-param reduction of ``arch`` (same family/features, small dims)."""
+    cfg = get_config(arch)
+    over = dict(num_layers=max(4, min(8, cfg.num_layers)), d_model=512,
+                num_heads=8, num_kv_heads=min(8, max(1, cfg.num_kv_heads)),
+                d_ff=2048, vocab_size=32_000, head_dim=64,
+                param_dtype="float32", compute_dtype="float32")
+    if cfg.num_experts:
+        over.update(num_experts=8, top_k=2, d_ff=512)
+    if cfg.encoder_layers:
+        over.update(encoder_layers=2, encoder_positions=128)
+    if cfg.vision_tokens:
+        over.update(vision_tokens=64, cross_attn_every=2)
+    if cfg.ssm_state:
+        over.update(ssm_state=16)
+    return cfg.scaled(**over)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--size", choices=("smoke", "100m", "full"), default="100m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/agnocast-train-ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", choices=("zero-copy", "in-process"),
+                    default="zero-copy")
+    args = ap.parse_args(argv)
+
+    cfg = {"smoke": get_smoke_config, "100m": model_100m,
+           "full": get_config}[args.size](args.arch)
+    model = Model(cfg)
+    n = cfg.param_count()
+    print(f"[train] {args.arch} ({args.size}): {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    tc = TrainerConfig(batch=args.batch, seq_len=args.seq, lr=args.lr,
+                       total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       zero_copy_data=(args.data == "zero-copy"))
+    with Trainer(model, tc) as tr:
+        summary = tr.run()
+    print(f"[train] done: loss {summary['loss_first']:.4f} -> "
+          f"{summary['loss_last']:.4f} in {summary['wall_s']:.1f}s")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .common import ModelConfig
+from .model import Model, Workload, WORKLOADS
+
+__all__ = ["ModelConfig", "Model", "Workload", "WORKLOADS"]

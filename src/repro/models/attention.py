@@ -1,0 +1,176 @@
+"""Attention: GQA/MQA with einsum, chunked online-softmax, and decode paths.
+
+Three execution strategies share one math definition (tested against each
+other and against the Pallas kernels' ``ref.py`` oracles):
+
+* ``einsum`` — materializes (B, KV, G, S, S) scores; right at short seq.
+* ``chunked`` — ``lax.scan`` over KV chunks with running (max, sum) online
+  softmax: flash-attention dataflow expressed in XLA, bounding HBM traffic
+  at long sequence length (used for 32k prefill and training; this is also
+  exactly the algorithm the Pallas kernel implements with VMEM tiling).
+* ``decode`` — single-query attention over a KV cache with per-request
+  lengths; seq-dim shardable (partial-softmax reductions become small
+  cross-shard collectives).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention", "decode_attention", "decode_attention_plus"]
+
+_NEG = -2.0e38
+
+
+def _group(q, num_kv: int):
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _einsum_attention(q, k, v, *, causal: bool, q_offset, kv_len=None):
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+    logits *= scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]
+        logits = jnp.where(valid[:, None, None, None], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset, chunk: int, kv_len=None,
+                       scores_bf16: bool = False):
+    """Online-softmax over KV chunks: O(S·chunk) live scores instead of O(S²).
+
+    ``scores_bf16`` stores the materialized (B, KV, G, Sq, chunk) score and
+    probability tensors in bf16 — the dot still accumulates in f32 (MXU
+    behaviour), max/exp upcast in-register inside the fusion, and the
+    normalizer/accumulator carries stay f32, so only *storage* precision of
+    the pre-softmax logits drops (≤2^-8 relative). This halves the HBM
+    traffic of the XLA-fallback attention (§Perf A3); the Pallas flash
+    kernel (kernels/flash_attention) makes the whole tensor VMEM-resident
+    and is the production TPU path.
+    """
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    nchunk = -(-sk // chunk)
+    pad = nchunk * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    qpos = q_offset + jnp.arange(sq)
+    sdt = jnp.dtype(jnp.bfloat16) if scores_bf16 else jnp.dtype(jnp.float32)
+    neg = float(jnp.finfo(sdt).min) * 0.5
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        base = ci * chunk
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q, kb,
+                            preferred_element_type=sdt) * sdt.type(scale)
+        kpos = base + jnp.arange(chunk)
+        valid = jnp.broadcast_to(kpos[None, :] < sk, (sq, chunk))  # (sq, chunk)
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        logits = jnp.where(valid[None, None, None], logits, sdt.type(neg))
+        if kv_len is not None:
+            lv = kpos[None, :] < kv_len[:, None]  # (b, chunk)
+            logits = jnp.where(lv[:, None, None, None, :], logits, sdt.type(neg))
+        lf = logits.astype(jnp.float32)           # in-fusion upcast (free)
+        m_new = jnp.maximum(m, lf.max(axis=-1))
+        # guard: fully-masked rows must contribute 0, not exp(0)
+        p = jnp.where(lf > 0.5 * neg, jnp.exp(lf - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nchunk), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (b, sq, kv, g, hd)
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset=0, chunk: int = 0,
+              kv_len=None, scores_bf16: bool = False):
+    """q: (B, S, H, hd); k/v: (B, Skv, KV, hd) -> (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _group(q, kvh)
+    if chunk and k.shape[1] > chunk:
+        out = _chunked_attention(qg, k, v, causal=causal, q_offset=q_offset,
+                                 chunk=chunk, kv_len=kv_len,
+                                 scores_bf16=scores_bf16)
+    else:
+        out = _einsum_attention(qg, k, v, causal=causal, q_offset=q_offset,
+                                kv_len=kv_len)
+    return out.reshape(b, sq, h, hd)
+
+
+def decode_attention_plus(q, k_cache, v_cache, k_new, v_new, kv_len):
+    """Decode attention over a READ-ONLY cache plus the current token.
+
+    Equivalent to appending (k_new, v_new) at position ``kv_len`` and
+    attending with length ``kv_len+1`` — but the cache is never rewritten
+    inside the layer, so the per-layer "rebuild a full cache slice" traffic
+    disappears; the caller scatters the one new token per layer into the
+    donated cache once, at the top level (§Perf C4).
+
+    q/k_new/v_new: (B, 1, H|KV, hd); caches: (B, Smax, KV, hd); kv_len: (B,).
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    qg = _group(q, kvh)[:, 0]  # (B, KV, G, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1])[None, :] < kv_len[:, None]
+    logits = jnp.where(valid[:, None, None], logits, _NEG)
+    l_new = jnp.einsum("bkgd,bkd->bkg", qg, k_new[:, 0],
+                       preferred_element_type=jnp.float32) * scale
+    m = jnp.maximum(logits.max(axis=-1), l_new)
+    p = jnp.exp(logits - m[..., None])
+    p_new = jnp.exp(l_new - m)
+    denom = p.sum(axis=-1) + p_new
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = (out + p_new[..., None] * v_new[:, 0, :, None, :]) / denom[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """Single new token against a cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); kv_len: (B,) valid lengths.
+    The Smax dim may be sharded: max/sum/weighted-V reduce across shards.
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    qg = _group(q, kvh)[:, 0]  # (B, KV, G, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1])[None, :] < kv_len[:, None]
+    logits = jnp.where(valid[:, None, None], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,194 @@
+"""Shared model substrate: config, init helpers, norms, RoPE, losses."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+__all__ = ["ModelConfig", "rms_norm", "layer_norm", "apply_rope", "rope_freqs",
+           "dense_init", "cross_entropy", "dtype_of", "ModelConfig"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | xlstm | zamba2 | whisper | mllama
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention / mlp features
+    mlp_act: str = "swiglu"          # swiglu | geglu
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    embed_scale: bool = False        # gemma: inputs scaled by sqrt(d_model)
+    gemma_norm: bool = False         # RMSNorm with (1 + scale)
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    router_aux_weight: float = 0.001
+    moe_capacity_factor: float = 0.0  # 0: dropless ragged_dot path; >0:
+                                      # token-drop capacity (gather/GEMM/scatter)
+    # ssm (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    attn_every: int = 0              # zamba2: shared attention block cadence
+    # xlstm
+    slstm_every: int = 8             # xLSTM [7:1]: every 8th block is sLSTM
+    # enc-dec / vlm
+    encoder_layers: int = 0
+    encoder_positions: int = 0       # whisper: frames after the (stub) conv frontend
+    cross_attn_every: int = 0        # mllama: cross-attn layer cadence
+    vision_tokens: int = 0           # mllama: patch embeddings from the (stub) frontend
+    # numerics / system
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"             # none | block
+    seq_shard_activations: bool = False
+    attn_chunk: int = 0              # 0 -> einsum attention; >0 -> online-softmax chunks
+    attn_scores_bf16: bool = False   # store score/prob tensors bf16 (XLA fallback)
+    use_pallas: bool = False         # TPU target: Pallas kernels for attention hot-spots
+    max_seq: int = 0                 # learned-pos-embed capacity (0 -> 4096)
+
+    def max_positions(self) -> int:
+        return self.max_seq or 4096
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return replace(self, **overrides)
+
+    # -- analytics -----------------------------------------------------------
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND model-FLOPs)."""
+        d, hd = self.d_model, self.head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        if self.family == "moe":
+            ffn = 3 * d * self.d_ff * self.num_experts
+            if self.num_shared_experts:
+                ffn += 3 * d * self.d_ff_shared + d
+        elif self.family in ("xlstm", "zamba2"):
+            ffn = 0  # accounted inside block_params below
+        else:
+            ffn = 3 * d * self.d_ff
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "xlstm":
+            di = self.ssm_expand * d
+            m = 4 * d * di + 2 * di * d  # mLSTM-ish in/out + gates
+            return self.num_layers * m + emb
+        if self.family == "zamba2":
+            di = self.ssm_expand * d
+            mamba = d * (2 * di + 2 * self.ssm_state) + di * d
+            n_attn = self.num_layers // max(self.attn_every, 1)
+            shared = attn + 3 * d * self.d_ff  # ONE shared block
+            return self.num_layers * mamba + shared + emb + n_attn * 0
+        layers = self.num_layers * (attn + ffn)
+        if self.family == "whisper":
+            layers += self.encoder_layers * (attn + 3 * d * self.d_ff)
+            layers += self.num_layers * attn  # decoder cross-attention
+        if self.family == "mllama":
+            n_cross = self.num_layers // max(self.cross_attn_every, 1)
+            layers = (self.num_layers - n_cross) * (attn + ffn) + n_cross * (attn + ffn)
+        return layers + emb
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        hd = self.head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        ffn = 3 * d * self.d_ff * self.top_k
+        if self.num_shared_experts:
+            ffn += 3 * d * self.d_ff_shared + d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.num_layers * (attn + ffn) + emb
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(cfg: ModelConfig):
+    return cfg.cdt
+
+
+def rms_norm(x, scale, eps: float = 1e-6, *, gemma: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if gemma else scale.astype(jnp.float32)
+    return (x * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions (..., S) -> (sin, cos) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, hd); sin/cos: (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, *, fan_in: int | None = None, scale: float = 1.0):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = scale / (fan ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def cross_entropy(logits, targets, *, z_loss: float = 0.0):
+    """Token-mean CE over (B, S, V) logits, fp32 softmax; optional z-loss."""
+    logits = constrain(logits, "batch", "seq", "vocab").astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

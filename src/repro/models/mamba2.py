@@ -1,0 +1,197 @@
+"""Mamba2 (SSD — state space duality) blocks, chunked-parallel + recurrent.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of length Q
+the recurrence is computed as a decay-masked quadratic form (MXU-friendly),
+and chunk-end states are passed by a short ``lax.scan`` over S/Q chunks.
+All decay factors are ≤ 1 (dt > 0, A < 0), so the exponentials are computed
+directly from within-chunk cumulative sums without log-space gymnastics.
+
+Decode is the O(1) recurrent form over a per-head matrix state (H, N, P) —
+this is what makes the 500k-token long-context cell *linear*, the reason
+this family runs ``long_500k`` while pure-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode", "init_mamba_state",
+           "mamba_dims"]
+
+_CONV_K = 4
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nheads, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    d_in_proj = 2 * d_inner + 2 * n + nheads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), cfg.pdt),
+        "conv_w": dense_init(ks[1], (_CONV_K, conv_dim), cfg.pdt, fan_in=_CONV_K),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdt),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),       # A = -exp(A_log) in [-1, ...)
+        "D_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_inner": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d), cfg.pdt, fan_in=d_inner),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, nheads, n = mamba_dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, S, Cdim) with kernel (K, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # window sum: sum_k w[k] * x[t - (K-1) + k]
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, B_, C_, A, chunk: int):
+    """x: (B,S,H,P); dt: (B,S,H); B_/C_: (B,S,N); A: (H,) negative.
+
+    Returns y: (B,S,H,P). Chunked SSD: intra-chunk quadratic + inter-chunk
+    state scan (S/chunk sequential steps).
+    """
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    q = chunk
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B_.reshape(b, nc, q, n)
+    Cc = C_.reshape(b, nc, q, n)
+
+    log_a = dtc * A  # (b,nc,q,h), all <= 0
+    cs = jnp.cumsum(log_a, axis=2)  # inclusive cumulative log-decay
+
+    # intra-chunk: W[b,c,h,i,j] = (C_i . B_j) * exp(cs_i - cs_j) * dt_j, j <= i
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    cst = cs.transpose(0, 1, 3, 2)                       # (b,c,h,q)
+    decay = jnp.exp(cst[:, :, :, :, None] - cst[:, :, :, None, :])  # (b,c,h,i,j)
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :]).astype(decay.dtype)
+    W = scores[:, :, None] * decay * causal * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", W.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-local end states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j
+    dec_last = jnp.exp(cs[:, :, -1:, :] - cs)           # (b,c,q,h)
+    sl = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    (dec_last * dtc).astype(x.dtype), Bc, xc,
+                    preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (b,c,h)
+
+    def body(S, xs):
+        dec_c, sl_c = xs
+        S_prev = S
+        S = S * dec_c[..., None, None] + sl_c
+        return S, S_prev
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    S_final, S_prev = jax.lax.scan(
+        body, S0, (chunk_decay.transpose(1, 0, 2), sl.transpose(1, 0, 2, 3, 4)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)             # (b,c,h,n,p)
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc, S_prev.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cs)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)
+    # S_final is exact under padding: padded steps have dt=0 (no decay, no
+    # contribution), so the scan's final carry IS the state at position s.
+    return y[:, :s].astype(x.dtype), S_final
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, final recurrent state].
+
+    ``return_state`` hands back the chunk scan's final SSD state plus the
+    causal-conv tail — decode-ready, from the PARALLEL pass (§Perf Z1; the
+    previous prefill replayed S decode steps to rebuild these)."""
+    b, s, d = x.shape
+    d_inner, nheads, n = mamba_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, s, nheads, cfg.ssm_head_dim)
+    y, S_final = _ssd_chunked(xh, dt, B_, C_, A, cfg.ssm_chunk)
+    y = y + xh * p["D_skip"][:, None].astype(x.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_inner"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    tail = xbc_raw[:, -(_CONV_K - 1):]
+    if s < _CONV_K - 1:
+        tail = jnp.pad(xbc_raw, ((0, 0), (_CONV_K - 1 - s, 0), (0, 0)))
+    state = {"ssm": S_final, "conv": tail.astype(cfg.cdt)}
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# recurrent decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, nheads, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, nheads, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(p, x1, state, cfg: ModelConfig):
+    """x1: (B, 1, D) one token; returns (y (B,1,D), new state). O(1) in S."""
+    b = x1.shape[0]
+    d_inner, nheads, n = mamba_dims(cfg)
+    proj = x1[:, 0] @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    # conv over the stored window + this input
+    win = jnp.concatenate([state["conv"], xbc[:, None, :].astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:]
+    xs, B_, C_ = jnp.split(xbc_t, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                              # (B,H)
+    xh = xs.reshape(b, nheads, cfg.ssm_head_dim).astype(jnp.float32)
+    # S' = a S + dt * B (x) x ; y = C . S' + D x
+    S = state["ssm"] * a[..., None, None] + \
+        dt[..., None, None] * jnp.einsum("bn,bhp->bhnp", B_.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), S)
+    y = y + xh * p["D_skip"][:, None]
+    y = y.reshape(b, d_inner).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_inner"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": S, "conv": new_conv}

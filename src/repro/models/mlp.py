@@ -1,0 +1,319 @@
+"""Feed-forward layers: gated dense MLP and expert-parallel MoE.
+
+The MoE layer uses a sort + ``lax.ragged_dot`` grouped-GEMM formulation
+(dropless, exact active-FLOPs — no one-hot dispatch tensors polluting the
+roofline).  Under a mesh it runs inside ``shard_map``: activations are
+replicated over the ``model`` axis (they already are in TP), each model
+shard owns ``E / tp`` experts, locally selects and computes the (token,
+expert) pairs it owns, and a single ``psum`` over ``model`` combines expert
+outputs — the same collective volume as a dense TP FFN's all-reduce, i.e.
+EP comes at no extra collective cost over TP at these shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+shard_map = jax.shard_map
+
+from repro.sharding import active
+
+__all__ = ["gated_mlp", "moe_ffn", "init_mlp", "init_moe"]
+
+
+def _act(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "geglu":
+        return functools.partial(jax.nn.gelu, approximate=True)
+    raise ValueError(name)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    from .common import dense_init
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def gated_mlp(params, x, *, act: str = "swiglu"):
+    a = _act(act)
+    h = a(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg):
+    from .common import dense_init
+
+    keys = jax.random.split(key, 8)
+    d, e, fe = cfg.d_model, cfg.num_experts, cfg.d_ff
+    p = {
+        "router": dense_init(keys[0], (d, e), jnp.float32),
+        "e_gate": dense_init(keys[1], (e, d, fe), cfg.pdt),
+        "e_up": dense_init(keys[2], (e, d, fe), cfg.pdt),
+        "e_down": dense_init(keys[3], (e, fe, d), cfg.pdt, fan_in=fe),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff_shared
+        p["shared"] = {
+            "w_gate": dense_init(keys[4], (d, fs), cfg.pdt),
+            "w_up": dense_init(keys[5], (d, fs), cfg.pdt),
+            "w_down": dense_init(keys[6], (fs, d), cfg.pdt, fan_in=fs),
+            "shared_gate": dense_init(keys[7], (d,), jnp.float32),
+        }
+    return p
+
+
+def _moe_local(x2d, router, e_gate, e_up, e_down, *, cfg, n_local: int,
+               offset, axis_name: str | None, e_valid: int | None = None):
+    """Token-choice top-k over the experts owned by this shard.
+
+    x2d: (T, D) tokens (replicated over the model axis). Selected
+    (token, expert) pairs owned by [offset, offset+n_local) are sorted by
+    local expert id and pushed through grouped GEMMs (ragged_dot); an
+    overflow group (id == n_local, zero weights) absorbs pairs owned by
+    other shards so shapes stay static.
+    """
+    t, d = x2d.shape
+    k = cfg.top_k
+    logits = (x2d.astype(jnp.float32) @ router)  # (T, E) fp32 router
+    if e_valid is not None and e_valid < router.shape[-1]:
+        pad_mask = jnp.arange(router.shape[-1]) < e_valid
+        logits = jnp.where(pad_mask, logits, -1e30)  # phantom experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)       # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    flat_e = top_e.reshape(-1)                   # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    mine = (flat_e >= offset) & (flat_e < offset + n_local)
+    local_e = jnp.where(mine, flat_e - offset, n_local)  # overflow bucket
+    order = jnp.argsort(local_e)                 # stable
+    st, se, sp = flat_t[order], local_e[order], flat_p[order]
+    group_sizes = jnp.bincount(se, length=n_local + 1)
+
+    xs = x2d[st]                                  # (T*k, D) gather
+    zg = jnp.zeros((1,) + e_gate.shape[1:], e_gate.dtype)
+    zu = jnp.zeros((1,) + e_up.shape[1:], e_up.dtype)
+    zd = jnp.zeros((1,) + e_down.shape[1:], e_down.dtype)
+    act = _act(cfg.mlp_act)
+    h = act(jax.lax.ragged_dot(xs, jnp.concatenate([e_gate, zg]), group_sizes)) * \
+        jax.lax.ragged_dot(xs, jnp.concatenate([e_up, zu]), group_sizes)
+    y = jax.lax.ragged_dot(h, jnp.concatenate([e_down, zd]), group_sizes)
+    y = y * sp[:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[st].add(y)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.zeros(probs.shape[-1], jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = probs.shape[-1] * jnp.sum(me * ce)
+    return out, aux
+
+
+def _moe_local_capacity(x2d, router, e_gate, e_up, e_down, *, cfg,
+                        n_local: int, offset, axis_name: str | None,
+                        e_valid: int | None = None):
+    """Capacity-based gather→grouped-GEMM→scatter (MegaBlocks-lite).
+
+    ``lax.ragged_dot`` lowers to a dense all-experts contraction on
+    backends without grouped-GEMM support (an E× FLOP/byte overcount —
+    measured in EXPERIMENTS.md §Perf). This path keeps shapes static the
+    TPU-friendly way instead: every local expert gets a fixed ``capacity``
+    row budget (MXU-aligned), tokens beyond capacity are dropped (standard
+    token-drop MoE; cf. Switch/GShard), and the three expert GEMMs are
+    plain batched ``dot_general``s of exactly active-FLOPs × capacity
+    slack. Routing weights renormalize over the *kept* assignments.
+    """
+    t, d = x2d.shape
+    k = cfg.top_k
+    e_total = e_valid or router.shape[-1]       # capacity sized on real experts
+    logits = (x2d.astype(jnp.float32) @ router)
+    if e_valid is not None and e_valid < router.shape[-1]:
+        pad_mask = jnp.arange(router.shape[-1]) < e_valid
+        logits = jnp.where(pad_mask, logits, -1e30)  # phantom experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                    # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    mine = (flat_e >= offset) & (flat_e < offset + n_local)
+    local_e = jnp.where(mine, flat_e - offset, n_local)   # overflow bucket
+    order = jnp.argsort(local_e)
+    st, se, sp = flat_t[order], local_e[order], flat_p[order]
+
+    # per-expert capacity: expected rows/expert × factor, 128-aligned (MXU)
+    cap = int(cfg.moe_capacity_factor * t * k / e_total) + 1
+    cap = -(-cap // 128) * 128
+    seg_sizes = jnp.bincount(se, length=n_local + 1)
+    seg_start = jnp.concatenate([jnp.zeros(1, seg_sizes.dtype),
+                                 jnp.cumsum(seg_sizes)])[:-1]
+    pos = jnp.arange(se.shape[0]) - seg_start[se]
+    keep = (se < n_local) & (pos < cap)
+    dest = jnp.where(keep, se * cap + pos, n_local * cap)  # drop bucket
+
+    xbuf = jnp.zeros((n_local * cap + 1, d), x2d.dtype).at[dest].set(x2d[st])
+    xg = xbuf[:-1].reshape(n_local, cap, d)
+    act = _act(cfg.mlp_act)
+    h = act(jnp.einsum("ecd,edf->ecf", xg, e_gate)) * \
+        jnp.einsum("ecd,edf->ecf", xg, e_up)
+    y = jnp.einsum("ecf,efd->ecd", h, e_down).reshape(n_local * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])   # drop bucket reads 0
+    contrib = y[dest] * (sp * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((t, d), y.dtype).at[st].add(contrib)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros(probs.shape[-1], jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = probs.shape[-1] * jnp.sum(me * ce)
+    return out, aux
+
+
+def _moe_serving(params, x, *, cfg, ctx):
+    """Serving-time EP×TP dispatch: experts over ``model``, each expert's
+    FFN column-split over the batch axes (``expert_ff`` rule).
+
+    At decode, FSDP-style weight sharding would all-gather EVERY expert
+    weight EVERY step (29 GB/step/device for qwen3-moe — §Perf C3's
+    baseline pathology). Here weights never move: the *tokens* are
+    all-gathered across the batch axes (~1 MB), every (model, data) shard
+    computes its experts' columns for all tokens, and one psum over
+    (model × batch axes) combines — per-layer collective volume drops from
+    the weight gather to O(tokens × d_model).
+    """
+    b, s, d = x.shape
+    e = cfg.num_experts
+    tp = ctx.mesh.shape["model"]
+    e_pad = (-e) % tp
+    router = params["router"]
+    e_gate, e_up, e_down = params["e_gate"], params["e_up"], params["e_down"]
+    if e_pad:
+        router = jnp.pad(router, ((0, 0), (0, e_pad)))
+        e_gate = jnp.pad(e_gate, ((0, e_pad), (0, 0), (0, 0)))
+        e_up = jnp.pad(e_up, ((0, e_pad), (0, 0), (0, 0)))
+        e_down = jnp.pad(e_down, ((0, e_pad), (0, 0), (0, 0)))
+    n_local = (e + e_pad) // tp
+    bax = tuple(a for a in ("pod", "data") if a in ctx.mesh.axis_names)
+    ef = ctx.rule("expert_ff")           # e.g. ("data",)
+
+    def shard_fn(xb, router, e_gate, e_up, e_down):
+        t_idx = jax.lax.axis_index("model")
+        x2d = xb.reshape(-1, d)
+        t_local = x2d.shape[0]
+        xa = x2d
+        for a in bax:                     # tokens to everyone (cheap)
+            xa = jax.lax.all_gather(xa, a, tiled=True)
+        out, aux = _moe_local(
+            xa, router, e_gate, e_up, e_down, cfg=cfg,
+            n_local=n_local, offset=t_idx * n_local,
+            axis_name=None, e_valid=e)
+        out = jax.lax.psum(out, ("model",) + tuple(ef))
+        # slice back this shard's tokens
+        off = jnp.int32(0)
+        for a in bax:
+            off = off * ctx.mesh.shape[a] + jax.lax.axis_index(a)
+        out = jax.lax.dynamic_slice_in_dim(out, off * t_local, t_local, axis=0)
+        return out.reshape(xb.shape), aux.reshape(1)
+
+    from jax.sharding import PartitionSpec as P
+
+    ef_spec = ef[0] if len(ef) == 1 else (tuple(ef) or None)
+    out, aux = shard_map(
+        shard_fn, mesh=ctx.mesh,
+        in_specs=(P(bax, None, None), P(None, None),
+                  P("model", None, ef_spec), P("model", None, ef_spec),
+                  P("model", ef_spec, None)),
+        out_specs=(P(bax, None, None), P(bax)),
+        check_vma=False,
+    )(x, router, e_gate, e_up, e_down)
+    return out, jnp.mean(aux)
+
+
+def moe_ffn(params, x, *, cfg):
+    """x: (B, S, D) -> (B, S, D), plus aux loss scalar."""
+    b, s, d = x.shape
+    ctx = active()
+    e = cfg.num_experts
+
+    if ctx is not None and "model" in ctx.mesh.axis_names and \
+            ctx.rule("expert_ff"):
+        out, aux = _moe_serving(params, x, cfg=cfg, ctx=ctx)
+    elif ctx is not None and "model" in ctx.mesh.axis_names and \
+            ctx.mesh.shape["model"] > 1:
+        tp = ctx.mesh.shape["model"]
+        # expert counts that do not tile the model axis (qwen2-moe: 60 over
+        # tp=16) are padded with zero-weight phantom experts whose router
+        # logits are masked to -inf — without this the layer silently falls
+        # back to replicating ALL experts on every device (a tp× compute and
+        # memory regression caught by the roofline; §Perf A2).
+        e_pad = (-e) % tp
+        router = params["router"]
+        e_gate, e_up, e_down = params["e_gate"], params["e_up"], params["e_down"]
+        if e_pad:
+            router = jnp.pad(router, ((0, 0), (0, e_pad)))
+            e_gate = jnp.pad(e_gate, ((0, e_pad), (0, 0), (0, 0)))
+            e_up = jnp.pad(e_up, ((0, e_pad), (0, 0), (0, 0)))
+            e_down = jnp.pad(e_down, ((0, e_pad), (0, 0), (0, 0)))
+        n_local = (e + e_pad) // tp
+        batch_axes = tuple(a for a in ("pod", "data") if a in ctx.mesh.axis_names)
+
+        # dispatch strategy is shape-dependent (§Perf A1 vs C2): capacity
+        # GEMMs win when experts see enough rows to fill MXU tiles; at
+        # decode-scale token counts the 128-row capacity floor overcomputes
+        # and the dropless path wins. Static decision at trace time.
+        tokens_per_expert = (b * s * cfg.top_k) / max(e, 1)
+        use_capacity = cfg.moe_capacity_factor > 0 and tokens_per_expert >= 64
+        local = _moe_local_capacity if use_capacity else _moe_local
+
+        def shard_fn(xb, router, e_gate, e_up, e_down):
+            t_idx = jax.lax.axis_index("model")
+            x2d = xb.reshape(-1, d)
+            out, aux = local(
+                x2d, router, e_gate, e_up, e_down, cfg=cfg,
+                n_local=n_local, offset=t_idx * n_local, axis_name="model",
+                e_valid=e)
+            return out.reshape(xb.shape), aux.reshape(1)
+
+        out, aux = shard_map(
+            shard_fn, mesh=ctx.mesh,
+            in_specs=(P(batch_axes, None, None), P(None, None),
+                      P("model", None, None), P("model", None, None),
+                      P("model", None, None)),
+            out_specs=(P(batch_axes, None, None), P(batch_axes)),
+            check_vma=False,
+        )(x, router, e_gate, e_up, e_down)
+        aux = jnp.mean(aux)
+    else:
+        tokens_per_expert = (b * s * cfg.top_k) / max(e, 1)
+        use_capacity = cfg.moe_capacity_factor > 0 and tokens_per_expert >= 64
+        local = _moe_local_capacity if use_capacity else _moe_local
+        out, aux = local(
+            x.reshape(-1, d), params["router"], params["e_gate"],
+            params["e_up"], params["e_down"], cfg=cfg,
+            n_local=e, offset=0, axis_name=None)
+        out = out.reshape(b, s, d)
+
+    out = out.astype(x.dtype)
+    if cfg.num_shared_experts:
+        sh = params["shared"]
+        gate = jax.nn.sigmoid(x.astype(jnp.float32) @ sh["shared_gate"])
+        out = out + gated_mlp(sh, x, act=cfg.mlp_act) * gate[..., None].astype(x.dtype)
+    return out, aux

@@ -1,0 +1,126 @@
+"""Unified model API: one surface over all six families.
+
+``Model`` dispatches init / loss / prefill / decode to the family modules
+and builds ``input_specs`` — ShapeDtypeStruct stand-ins for every model
+input of a given workload shape (the multi-pod dry-run lowers against
+these; nothing is ever allocated).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+__all__ = ["Model", "WORKLOADS", "Workload"]
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+WORKLOADS: dict[str, Workload] = {
+    "train_4k": Workload("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Workload("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Workload("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Workload("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _family_module(family: str):
+    if family in ("dense", "moe"):
+        from . import transformer as m
+    elif family == "xlstm":
+        from . import xlstm_model as m
+    elif family == "zamba2":
+        from . import zamba2_model as m
+    elif family == "whisper":
+        from . import whisper_model as m
+    elif family == "mllama":
+        from . import mllama_model as m
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    return m
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._m = _family_module(cfg.family)
+
+    # -- parameters -----------------------------------------------------------
+
+    def init(self, rng):
+        return self._m.init_params(self.cfg, rng)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self._m.init_params(self.cfg, jax.random.PRNGKey(0)))
+
+    # -- steps ------------------------------------------------------------------
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family in ("whisper", "mllama"):
+            return self._m.loss_fn(params, batch, cfg)
+        return self._m.loss_fn(params, batch, cfg)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        if cfg.family in ("whisper", "mllama"):
+            return self._m.forward(params, batch, cfg)
+        return self._m.forward(params, batch["tokens"], cfg)
+
+    def prefill(self, params, batch, *, max_seq: int | None = None):
+        cfg = self.cfg
+        if cfg.family in ("whisper", "mllama"):
+            return self._m.prefill(params, batch, cfg, max_seq=max_seq)
+        return self._m.prefill(params, batch["tokens"], cfg, max_seq=max_seq)
+
+    def decode_step(self, params, cache, tokens):
+        return self._m.decode_step(params, cache, tokens, self.cfg)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        return self._m.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # -- dry-run inputs ------------------------------------------------------------
+
+    def input_specs(self, wl: Workload) -> dict:
+        """ShapeDtypeStruct stand-ins for one workload's model inputs."""
+        cfg = self.cfg
+        B = wl.global_batch
+        S = wl.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if wl.kind in ("train", "prefill"):
+            batch = {"tokens": sds((B, S), i32)}
+            if cfg.family == "whisper":
+                batch["frames"] = sds((B, cfg.encoder_positions, cfg.d_model), cfg.cdt)
+            if cfg.family == "mllama":
+                batch["vision"] = sds((B, cfg.vision_tokens, cfg.d_model), cfg.cdt)
+            return batch
+        # decode: one new token against a cache of S tokens. Cache capacity is
+        # rounded up to a multiple of 256 — an S+1 cache (32769) is coprime
+        # with every mesh axis and silently forfeits kv_seq sharding (a 16x
+        # per-device memory regression caught by the roofline; §Perf C1).
+        cap = -(-(S + 1) // 256) * 256
+        cache = jax.tree.map(
+            lambda l: sds(l.shape, l.dtype), self.abstract_cache(B, cap))
+        cache["len"] = sds((B,), i32)
+        return {"tokens": sds((B, 1), i32), "cache": cache}
+
+    def supports(self, wl: Workload) -> tuple[bool, str]:
+        """Arch × shape applicability (DESIGN.md §Arch-applicability)."""
+        cfg = self.cfg
+        if wl.name == "long_500k" and cfg.family not in ("xlstm", "zamba2"):
+            return False, "500k decode needs sub-quadratic attention (SSM/hybrid only)"
+        return True, ""

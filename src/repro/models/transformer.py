@@ -1,0 +1,302 @@
+"""Decoder-only LM (dense and MoE families) with scanned layers.
+
+Layer parameters are stacked along a leading ``layers`` axis and iterated
+with ``lax.scan`` — HLO stays O(1) in depth (a 94-layer MoE compiles as
+fast as a 2-layer one) and the remat policy wraps the scan body.  The same
+block implements training (full-sequence), prefill (returns the KV cache),
+and decode (single token against the cache, per-request lengths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .attention import attention, decode_attention_plus
+from .common import (
+    ModelConfig,
+    apply_rope,
+    cross_entropy,
+    dense_init,
+    rms_norm,
+    rope_freqs,
+)
+from .mlp import gated_mlp, init_mlp, init_moe, moe_ffn
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), cfg.pdt),
+        "wk": dense_init(ks[1], (d, kv, hd), cfg.pdt),
+        "wv": dense_init(ks[2], (d, kv, hd), cfg.pdt),
+        "wo": dense_init(ks[3], (h, hd, d), cfg.pdt, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.pdt)
+        p["bk"] = jnp.zeros((kv, hd), cfg.pdt)
+        p["bv"] = jnp.zeros((kv, hd), cfg.pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig):
+    k_attn, k_mlp = jax.random.split(key)
+    layer = {
+        "attn": init_attn(k_attn, cfg),
+        "ln1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "ln2": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if cfg.family == "moe":
+        layer["moe"] = init_moe(k_mlp, cfg)
+    else:
+        layer["mlp"] = init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.pdt)
+    return layer
+
+
+def init_params(cfg: ModelConfig, rng):
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "tok_embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.pdt,
+                                fan_in=cfg.d_model),
+        "layers": layers,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.vocab_size, cfg.d_model), cfg.pdt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _cache_update(cache_l, new, lengths):
+    """Per-request append: cache (B, Smax, KV, hd), new (B, 1, KV, hd)."""
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(cache_l, new, lengths)
+
+
+def _cache_scatter(cache, new, lengths, *, batch_axis: int = 1):
+    """All-layer append: cache (..., B@batch_axis, ..., Smax, KV, hd), new
+    same with seq dim 1, lengths (B,) — one window write per request
+    covering every layer (and layer-group) at once. The seq dim is the
+    third-from-last in every cache layout used by the families."""
+    def upd(c, n, i):
+        start = (0,) * (c.ndim - 3) + (i, 0, 0)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), start)
+
+    return jax.vmap(upd, in_axes=(batch_axis, batch_axis, 0),
+                    out_axes=batch_axis)(cache, new, lengths)
+
+
+def attn_block(p, x, sin, cos, cfg: ModelConfig, *, cache=None, kv_len=None,
+               decode=False, cache_write=False):
+    """Self-attention sublayer.
+
+    Train/prefill: returns (out, (k, v)) — this call's K/V for cache build.
+    Decode (``cache_write=False``, the transformer path): attends over the
+    READ-ONLY cache plus the current token and returns (out, (k, v)) of the
+    one new token — the caller scatters it into the donated cache at the
+    top level (§Perf C4). ``cache_write=True`` (zamba2's shared block, whose
+    cache is carried per group) keeps the legacy in-layer update.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = constrain(q, "batch", "seq", "heads", None)
+
+    if decode and cache_write:
+        k_c, v_c = cache
+        out = decode_attention_plus(q, k_c, v_c, k, v, kv_len)
+        k_c = _cache_update(k_c, k, kv_len)
+        v_c = _cache_update(v_c, v, kv_len)
+        kv_out = (k_c, v_c)
+    elif decode:
+        # read-only cache + current token; the ONE new (k, v) per layer is
+        # scattered into the donated cache at the top level (§Perf C4) —
+        # rewriting cache slices inside the layer cost a full-slice pass
+        # per layer per step.
+        k_c, v_c = cache
+        out = decode_attention_plus(q, k_c, v_c, k, v, kv_len)
+        kv_out = (k, v)
+    else:
+        out = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                        scores_bf16=cfg.attn_scores_bf16)
+        kv_out = (k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, kv_out
+
+
+def layer_body(p, x, sin, cos, cfg: ModelConfig, *, cache=None, kv_len=None,
+               decode=False):
+    h, kv_out = attn_block(
+        p["attn"],
+        rms_norm(x, p["ln1"]["scale"], cfg.norm_eps, gemma=cfg.gemma_norm),
+        sin, cos, cfg, cache=cache, kv_len=kv_len, decode=decode)
+    x = x + h
+    x = constrain(x, "batch", "seq", None)
+    h2 = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps, gemma=cfg.gemma_norm)
+    if cfg.family == "moe":
+        ff, aux = moe_ffn(p["moe"], h2, cfg=cfg)
+    else:
+        ff, aux = gated_mlp(p["mlp"], h2, act=cfg.mlp_act), jnp.float32(0)
+    x = x + ff
+    x = constrain(x, "batch", "res_seq", None)
+    return x, kv_out, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.cdt)
+    return constrain(x, "batch", "seq", None)
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    table = params.get("lm_head", params["tok_embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _maybe_remat(body, cfg: ModelConfig):
+    """Per-layer remat policy.
+
+    * ``block`` — save only layer boundaries, recompute everything (min
+      memory, max recompute traffic);
+    * ``dots``  — additionally save matmul outputs (bf16): the backward
+      reloads them instead of re-running the f32 norm/softmax chains
+      (§Perf A4 measures the traffic trade);
+    * ``none``  — no remat (only viable at small scale).
+    """
+    if cfg.remat == "none":
+        return body
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+
+def _scan_layers(params, x, sin, cos, cfg: ModelConfig, *, cache=None,
+                 kv_len=None, decode=False):
+    """Scan over stacked layer params; optionally thread the KV cache."""
+
+    def body(carry, xs):
+        x = carry
+        if decode:
+            p, k_c, v_c = xs
+            x, (k_c, v_c), aux = layer_body(
+                p, x, sin, cos, cfg, cache=(k_c, v_c), kv_len=kv_len, decode=True)
+            return x, (k_c, v_c, aux)
+        p = xs
+        x, (k_new, v_new), aux = layer_body(p, x, sin, cos, cfg)
+        return x, (k_new, v_new, aux)
+
+    body_fn = _maybe_remat(body, cfg)
+
+    if decode:
+        xs = (params["layers"], cache["k"], cache["v"])
+        x, (k_new, v_new, aux) = jax.lax.scan(body_fn, x, xs)
+        # k_new/v_new: (L, B, 1, KV, hd) — one token per layer. Write them
+        # all with a single per-request scatter into the donated cache.
+        new_cache = {
+            "k": _cache_scatter(cache["k"], k_new, kv_len),
+            "v": _cache_scatter(cache["v"], v_new, kv_len),
+            "len": kv_len + 1,
+        }
+        return x, new_cache, jnp.sum(aux)
+    x, (k_all, v_all, aux) = jax.lax.scan(body_fn, x, params["layers"])
+    return x, {"k": k_all, "v": v_all}, jnp.sum(aux)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg)
+    sin, cos = rope_freqs(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+    x, _, aux = _scan_layers(params, x, sin, cos, cfg)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, gemma=cfg.gemma_norm)
+    return _unembed(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_weight * aux / cfg.num_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.cdt
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_seq: int | None = None):
+    """Run the prompt; returns (last-position logits, cache)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = _embed(params, tokens, cfg)
+    sin, cos = rope_freqs(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+    x, kv, _ = _scan_layers(params, x, sin, cos, cfg)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, gemma=cfg.gemma_norm)
+    logits = _unembed(params, x[:, -1:], cfg)
+    pad = max_seq - s
+    k, v = kv["k"], kv["v"]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    k = constrain(k, "layers", "batch", "kv_seq", "kv_heads", None)
+    v = constrain(v, "layers", "batch", "kv_seq", "kv_heads", None)
+    cache = {"k": k, "v": v, "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = _embed(params, tokens, cfg)
+    pos = cache["len"]  # (B,) per-request positions
+    sin, cos = rope_freqs(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    x, new_cache, _ = _scan_layers(params, x, sin, cos, cfg,
+                                   cache=cache, kv_len=cache["len"], decode=True)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, gemma=cfg.gemma_norm)
+    logits = _unembed(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the brief, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_positions, D).  The transformer
+backbone is faithful: pre-LayerNorm blocks, GELU MLPs, learned positional
+embeddings, decoder with causal self-attention + cross-attention to the
+encoder output, tied unembedding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .attention import attention, decode_attention
+from .common import ModelConfig, cross_entropy, dense_init, layer_norm
+from .transformer import _cache_update
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+def _init_ln(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_attn(key, cfg, *, kv_from: int | None = None):
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.head_dim
+    dk = kv_from or d
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), cfg.pdt),
+        "wk": dense_init(ks[1], (dk, h, hd), cfg.pdt, fan_in=dk),
+        "wv": dense_init(ks[2], (dk, h, hd), cfg.pdt, fan_in=dk),
+        "wo": dense_init(ks[3], (h, hd, d), cfg.pdt, fan_in=h * hd),
+    }
+
+
+def _init_mlp(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (cfg.d_model, cfg.d_ff), cfg.pdt),
+        "w_out": dense_init(k2, (cfg.d_ff, cfg.d_model), cfg.pdt, fan_in=cfg.d_ff),
+    }
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w_in"], approximate=True) @ p["w_out"]
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"attn": _init_attn(k1, cfg), "mlp": _init_mlp(k2, cfg),
+            "ln1": _init_ln(cfg.d_model), "ln2": _init_ln(cfg.d_model)}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_attn": _init_attn(k1, cfg), "cross_attn": _init_attn(k2, cfg),
+            "mlp": _init_mlp(k3, cfg), "ln1": _init_ln(cfg.d_model),
+            "ln2": _init_ln(cfg.d_model), "ln3": _init_ln(cfg.d_model)}
+
+
+def init_params(cfg: ModelConfig, rng):
+    k_e, k_d, k_pe, k_pd, k_emb = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(k_e, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_d, cfg.num_layers)
+    d = cfg.d_model
+    return {
+        "encoder": {
+            "pos_embed": dense_init(k_pe, (cfg.encoder_positions, d), cfg.pdt, fan_in=d),
+            "layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+            "final_ln": _init_ln(d),
+        },
+        "decoder": {
+            "tok_embed": dense_init(k_emb, (cfg.vocab_size, d), cfg.pdt, fan_in=d),
+            "pos_embed": dense_init(k_pd, (cfg.max_positions(), d), cfg.pdt, fan_in=d),
+            "layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+            "final_ln": _init_ln(d),
+        },
+    }
+
+
+def _qkv(p, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    return q, k, v
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, P_enc, D) stub embeddings -> encoder output."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.cdt) + enc["pos_embed"][None, : frames.shape[1]].astype(cfg.cdt)
+    x = constrain(x, "batch", "seq", None)
+
+    def body(x, p):
+        h = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        q, k, v = _qkv(p["attn"], h, h)
+        a = attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                      scores_bf16=cfg.attn_scores_bf16)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+        x = x + _mlp(p["mlp"], layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"]))
+        return constrain(x, "batch", "res_seq", None), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, enc["layers"])
+    return layer_norm(x, enc["final_ln"]["scale"], enc["final_ln"]["bias"])
+
+
+def _dec_stack(params, x, enc_out, cfg: ModelConfig, *, cache=None, kv_len=None,
+               decode=False):
+    dec = params["decoder"]
+
+    def body(x, xs):
+        if decode:
+            p, k_c, v_c, ck, cv = xs
+        else:
+            p = xs
+        h = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        q, k, v = _qkv(p["self_attn"], h, h)
+        if decode:
+            k_c = _cache_update(k_c, k, kv_len)
+            v_c = _cache_update(v_c, v, kv_len)
+            a = decode_attention(q, k_c, v_c, kv_len + 1)
+        else:
+            a = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          scores_bf16=cfg.attn_scores_bf16)
+            k_c, v_c = k, v
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["self_attn"]["wo"])
+        h = layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        if decode:
+            qx = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+            ca = attention(qx, ck, cv, causal=False)
+        else:
+            qx, ck, cv = _qkv(p["cross_attn"], h, enc_out)
+            ca = attention(qx, ck, cv, causal=False, chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", ca, p["cross_attn"]["wo"])
+        x = x + _mlp(p["mlp"], layer_norm(x, p["ln3"]["scale"], p["ln3"]["bias"]))
+        x = constrain(x, "batch", "res_seq", None)
+        if decode:
+            return x, (k_c, v_c)
+        return x, (k_c, v_c, ck, cv)
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat != "none" else body
+    if decode:
+        xs = (dec["layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+        x, (k_all, v_all) = jax.lax.scan(body_fn, x, xs)
+        return x, {"k": k_all, "v": v_all, "ck": cache["ck"], "cv": cache["cv"],
+                   "len": kv_len + 1}
+    x, (k_all, v_all, ck_all, cv_all) = jax.lax.scan(body_fn, x, dec["layers"])
+    return x, {"k": k_all, "v": v_all, "ck": ck_all, "cv": cv_all}
+
+
+def _head(params, x, cfg):
+    dec = params["decoder"]
+    x = layer_norm(x, dec["final_ln"]["scale"], dec["final_ln"]["bias"])
+    return constrain(jnp.einsum("bsd,vd->bsv", x, dec["tok_embed"]),
+                     "batch", "seq", "vocab")
+
+
+def forward(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    dec = params["decoder"]
+    x = jnp.take(dec["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x = x + dec["pos_embed"][None, : tokens.shape[1]].astype(cfg.cdt)
+    x = constrain(x, "batch", "seq", None)
+    x, _ = _dec_stack(params, x, enc_out, cfg)
+    return _head(params, x, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(params, batch, cfg)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving --------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.cdt
+    L, h, hd = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_seq, h, hd), dt),
+        "v": jnp.zeros((L, batch, max_seq, h, hd), dt),
+        "ck": jnp.zeros((L, batch, cfg.encoder_positions, h, hd), dt),
+        "cv": jnp.zeros((L, batch, cfg.encoder_positions, h, hd), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_seq: int | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    enc_out = encode(params, batch["frames"], cfg)
+    dec = params["decoder"]
+    x = jnp.take(dec["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x = x + dec["pos_embed"][None, :s].astype(cfg.cdt)
+    x, kv = _dec_stack(params, x, enc_out, cfg)
+    logits = _head(params, x[:, -1:], cfg)
+    pad = max_seq - s
+    k = jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else kv["k"]
+    v = jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else kv["v"]
+    cache = {"k": constrain(k, "layers", "batch", "kv_seq", "kv_heads", None),
+             "v": constrain(v, "layers", "batch", "kv_seq", "kv_heads", None),
+             "ck": kv["ck"], "cv": kv["cv"],
+             "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    dec = params["decoder"]
+    b = tokens.shape[0]
+    x = jnp.take(dec["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    pos = jnp.clip(cache["len"], 0, params["decoder"]["pos_embed"].shape[0] - 1)
+    x = x + dec["pos_embed"][pos][:, None].astype(cfg.cdt)
+    x, new_cache = _dec_stack(params, x, None, cfg, cache=cache,
+                              kv_len=cache["len"], decode=True)
+    return _head(params, x, cfg), new_cache

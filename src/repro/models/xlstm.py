@@ -1,0 +1,351 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) + sLSTM (scalar).
+
+mLSTM is linear-attention-like: the parallel form is a decay-weighted
+quadratic form and the recurrent form carries a per-head matrix state
+(C: dk×dv) — O(1) decode state, which is why this family runs the
+``long_500k`` cell.  We implement the *stabilized* formulation of the xLSTM
+paper (running max ``m``; denominator floored by ``exp(-m)``) in a
+flash-attention-style online scan over KV chunks, so prefill at 32k never
+materializes an S×S weight matrix.
+
+sLSTM has exponential gating with a normalizer state and block-diagonal
+(per-head) recurrence; it is sequential by construction (``lax.scan`` over
+time) — the paper's [7:1] pattern keeps it to every 8th block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = [
+    "init_mlstm", "mlstm_block", "mlstm_decode", "init_mlstm_state",
+    "init_slstm", "slstm_block", "slstm_decode", "init_slstm_state",
+    "xlstm_dims",
+]
+
+_CONV_K = 4
+_NEG = -1.0e30
+
+
+def xlstm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model  # pf=2 up-projection
+    heads = cfg.num_heads
+    dh = d_inner // heads
+    return d_inner, heads, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, h, dh = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), cfg.pdt),      # [gate | mlstm]
+        "conv_w": dense_init(ks[1], (_CONV_K, di), cfg.pdt, fan_in=_CONV_K),
+        "conv_b": jnp.zeros((di,), cfg.pdt),
+        "wq": dense_init(ks[2], (di, h, dh), cfg.pdt),
+        "wk": dense_init(ks[3], (di, h, dh), cfg.pdt),
+        "wv": dense_init(ks[4], (di, h, dh), cfg.pdt),
+        "w_gates": dense_init(ks[5], (di, 2 * h), jnp.float32),  # [i | f]
+        "skip": jnp.ones((di,), cfg.pdt),
+        "norm_inner": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[6], (di, d), cfg.pdt, fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _mlstm_cell_chunked(q, k, v, i_gate, f_gate, chunk: int):
+    """Stabilized mLSTM, chunkwise-parallel (GLA/xLSTM chunk recurrence).
+
+    ONE sequential scan over chunks carries the (C, n, m) state — O(S/L)
+    loop trips — and each chunk combines an intra-chunk masked quadratic
+    with a rank-(dh) read of the carried state. (The previous form scanned
+    all KV chunks per query chunk: O((S/L)^2) trips whose loop-carried
+    copies dominated the 32k-prefill roofline — §Perf B2.)
+
+    Stabilization: within chunk j with local inclusive decay G_τ and
+    M_τ = max(m_in, cummax_{s≤τ}(i_s - G_s)):
+
+        m_t  = G_τ + M_τ
+        num_t = e^{m_in-M_τ} q_t·C_in + Σ_{s≤τ} e^{i_s-G_s-M_τ} (q_t·k_s) v_s
+        den_t = max(|e^{m_in-M_τ} q_t·n_in + Σ_s e^{i_s-G_s-M_τ} q_t·k_s|,
+                    e^{-m_t})
+
+    (every exponent is ≤ 0 by construction of M). Chunk-end state uses the
+    same weights at τ=L. Exactly equal to the per-token recurrence —
+    tested against ``mlstm_decode`` replay.
+
+    q,k,v: (B,S,H,dh); i_gate,f_gate: (B,S,H) raw gates. Returns
+    (h: (B,S,H,dh), final_state: dict(C, n, m)).
+    """
+    b, s, h, dh = q.shape
+    q = q * (dh ** -0.5)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,S,H)
+    ig = i_gate.astype(jnp.float32)
+
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+    L = chunk
+
+    def cseq(x):  # (B, S', ...) -> (nc, B, L, ...) scan-major
+        return jnp.moveaxis(x.reshape((b, nc, L) + x.shape[2:]), 1, 0)
+
+    qc, kc, vc = cseq(q), cseq(k), cseq(v)
+    lfc, igc = cseq(logf), cseq(ig)
+    ii = jnp.arange(L)
+    intra_mask = (ii[:, None] >= ii[None, :])[None, :, :, None]  # s<=τ
+
+    def body(carry, xs):
+        C_in, n_in, m_in = carry                 # (b,h,dh,dh) (b,h,dh) (b,h)
+        qb, kb, vb, lfb, igb = xs                # (b,L,h,*) chunk-local
+        G = jnp.cumsum(lfb, axis=1)              # (b,L,h) inclusive decay
+        ig_G = igb - G
+        A = jax.lax.cummax(ig_G, axis=1)
+        M = jnp.maximum(m_in[:, None], A)        # (b,L,h)
+        m_t = G + M
+        w_in = jnp.exp(m_in[:, None] - M)        # ≤ 1  (b,L,h)
+        # M_τ ≥ i_s - G_s only for s ≤ τ: mask the exponent BEFORE exp so the
+        # dropped branch is exp(-inf)=0, not inf*0 (inf would NaN the grad)
+        expo = ig_G[:, None, :, :] - M[:, :, None, :]            # (b,τ,s,h)
+        w_s = jnp.exp(jnp.where(intra_mask, expo, _NEG))
+        a = jnp.einsum("bihd,bjhd->bijh", qb, kb,
+                       preferred_element_type=jnp.float32)      # q_τ·k_s
+        inter_num = jnp.einsum("bihd,bhdv->bihv", qb.astype(jnp.float32),
+                               C_in)
+        inter_den = jnp.einsum("bihd,bhd->bih", qb.astype(jnp.float32), n_in)
+        num = w_in[..., None] * inter_num + \
+            jnp.einsum("bijh,bjhd->bihd", w_s * a, vb.astype(jnp.float32))
+        r = w_in * inter_den + jnp.einsum("bijh->bih", w_s * a)
+        den = jnp.maximum(jnp.abs(r), jnp.exp(jnp.clip(-m_t, -60.0, 60.0)))
+        hb = num / den[..., None]                # (b,L,h,dh)
+        # chunk-end state (τ = L weights)
+        ML = M[:, -1]                            # (b,h)
+        wL = jnp.exp(ig_G - ML[:, None])         # (b,L,h) ≤ 1
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        C_out = jnp.exp(m_in - ML)[..., None, None] * C_in + \
+            jnp.einsum("blh,blhk,blhv->bhkv", wL, kf, vf)
+        n_out = jnp.exp(m_in - ML)[..., None] * n_in + \
+            jnp.einsum("blh,blhk->bhk", wL, kf)
+        m_out = G[:, -1] + ML
+        return (C_out, n_out, m_out), hb
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lfc, igc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * L, h, dh)[:, :s]
+    return hs, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) [, final recurrent state].
+
+    ``return_state`` computes the post-sequence (C, n, m, conv) state in
+    CLOSED FORM — the stabilized recurrence telescopes:
+
+        m_S = F_S + max_j (i_j - F_j)            F = cumsum(log f)
+        C_S = Σ_j exp(i_j + F_S - F_j - m_S) k_j v_j^T
+        n_S = Σ_j exp(i_j + F_S - F_j - m_S) k_j
+
+    so prefill gets decode-ready states from the PARALLEL pass — one
+    weighted einsum over the sequence instead of replaying S recurrent
+    steps (§Perf B1)."""
+    b, s, d = x.shape
+    di, h, dh = xlstm_dims(cfg)
+    up = x @ p["w_in"]
+    gate, inner = jnp.split(up, 2, axis=-1)
+    conv = _causal_conv(inner, p["conv_w"], p["conv_b"])
+    q = jnp.einsum("bsd,dhk->bshk", conv, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", conv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", inner, p["wv"])
+    gates = conv.astype(jnp.float32) @ p["w_gates"]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    hcell, st = _mlstm_cell_chunked(q, k, v, ig, fg, cfg.ssm_chunk)
+    y = hcell.reshape(b, s, di).astype(x.dtype) + conv * p["skip"]
+    y = rms_norm(y, p["norm_inner"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    tail = inner[:, -(_CONV_K - 1):]
+    if s < _CONV_K - 1:
+        tail = jnp.pad(inner, ((0, 0), (_CONV_K - 1 - s, 0), (0, 0)))
+    st = dict(st, conv=tail.astype(cfg.cdt))
+    return out, st
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, h, dh = xlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, di), dtype),
+    }
+
+
+def mlstm_decode(p, x1, state, cfg: ModelConfig):
+    """x1: (B,1,D). O(1) recurrent step."""
+    b = x1.shape[0]
+    di, h, dh = xlstm_dims(cfg)
+    up = x1[:, 0] @ p["w_in"]
+    gate, inner = jnp.split(up, 2, axis=-1)
+    win = jnp.concatenate([state["conv"], inner[:, None].astype(state["conv"].dtype)], 1)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"])
+    q = jnp.einsum("bd,dhk->bhk", conv, p["wq"]).astype(jnp.float32) * (dh ** -0.5)
+    k = jnp.einsum("bd,dhk->bhk", conv, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", inner, p["wv"]).astype(jnp.float32)
+    gates = conv.astype(jnp.float32) @ p["w_gates"]
+    ig, fg = jnp.split(gates, 2, axis=-1)            # (B,H)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    fprime = jnp.exp(logf + state["m"] - m_new)
+    iprime = jnp.exp(ig - m_new)
+    C = state["C"] * fprime[..., None, None] + \
+        iprime[..., None, None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = state["n"] * fprime[..., None] + iprime[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(jnp.clip(-m_new, -60.0, 60.0)))
+    hcell = num / den[..., None]
+    y = hcell.reshape(b, di).astype(x1.dtype) + conv * p["skip"]
+    y = rms_norm(y, p["norm_inner"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"C": C, "n": n, "m": m_new, "conv": win[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    return max(64, int(round(cfg.d_model * 4 / 3 / 64)) * 64)
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 5)
+    ff = _slstm_ff(cfg)
+    return {
+        "w_ih": dense_init(ks[0], (d, 4 * d), cfg.pdt),     # i,f,z,o
+        "w_hh": dense_init(ks[1], (h, dh, 4 * dh), cfg.pdt, fan_in=dh),
+        "b_ih": jnp.zeros((4 * d,), jnp.float32),
+        "norm_inner": jnp.ones((d,), jnp.float32),
+        "mlp": {
+            "w_gate": dense_init(ks[2], (d, ff), cfg.pdt),
+            "w_up": dense_init(ks[3], (d, ff), cfg.pdt),
+            "w_down": dense_init(ks[4], (ff, d), cfg.pdt, fan_in=ff),
+        },
+    }
+
+
+def _slstm_step(p, xg, state, cfg: ModelConfig):
+    """One time step. xg: (B, 4D) precomputed input gates; state dict."""
+    h_prev, c_prev, n_prev, m_prev = state
+    b, d = h_prev.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev.reshape(b, nh, dh),
+                     p["w_hh"]).reshape(b, 4 * d)
+    g = (xg + rec).astype(jnp.float32) + p["b_ih"]
+    # per-head interleave: gates laid out as (..., 4*dh) per head
+    gi, gf, gz, go = jnp.split(g.reshape(b, nh, 4 * dh), 4, axis=-1)
+    gi, gf, gz, go = (t.reshape(b, d) for t in (gi, gf, gz, go))
+    logf = jax.nn.log_sigmoid(gf)
+    m = jnp.maximum(logf + m_prev, gi)
+    iprime = jnp.exp(gi - m)
+    fprime = jnp.exp(logf + m_prev - m)
+    c = fprime * c_prev + iprime * jnp.tanh(gz)
+    n = fprime * n_prev + iprime
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return (h.astype(jnp.float32), c, n, m)
+
+
+def slstm_block(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """sLSTM cell over the sequence: (B,S,D) -> (B,S,D). The block's FFN
+    sublayer is applied by the family driver (residual structure there).
+
+    The recurrence is inherently sequential, but the input projection is
+    hoisted into ONE sequence-wide GEMM (weights read once), and the time
+    loop is a ``fori_loop`` with ``dynamic_slice`` reads in the NATURAL
+    (B,S,·) layout — a scan over ``xg.transpose(1,0,2)`` made XLA carry a
+    relaid-out copy of the whole array through every iteration, which
+    dominated the 32k-prefill memory roofline (§Perf B3)."""
+    b, s, d = x.shape
+    xg = jnp.einsum("bsd,dk->bsk", x, p["w_ih"])  # (B,S,4D)
+    # The recurrence is d_model-sized elementwise work — replicating it over
+    # the model axis is cheaper than the per-step collective-permutes that
+    # model-sharded states force through every one of S iterations (§Perf B4)
+    xg = constrain(xg, "batch", None, None)
+    state0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+              jnp.zeros((b, d), jnp.float32),
+              jnp.full((b, d), -jnp.inf, jnp.float32))
+    state0 = tuple(constrain(t, "batch", None) for t in state0)
+
+    if cfg.use_pallas and jax.default_backend() == "tpu":
+        # one kernel for the whole time loop: state lives in VMEM across
+        # sequence chunks instead of 32k tiny while-iterations
+        # (kernels/slstm_scan; oracle-tested incl. resume-from-state)
+        from repro.kernels.slstm_scan import slstm_scan
+
+        hs, st = slstm_scan(xg, p["w_hh"], p["b_ih"], *state0)
+    else:
+        hs0 = jnp.zeros((b, s, d), jnp.float32)
+
+        def body(t, carry):
+            st, hs = carry
+            xg_t = jax.lax.dynamic_slice_in_dim(xg, t, 1, axis=1)[:, 0]
+            st = _slstm_step(p, xg_t, st, cfg)
+            hs = jax.lax.dynamic_update_slice_in_dim(hs, st[0][:, None], t,
+                                                     axis=1)
+            return st, hs
+
+        st, hs = jax.lax.fori_loop(0, s, body, (state0, hs0))
+    y = rms_norm(hs.astype(x.dtype), p["norm_inner"], cfg.norm_eps)
+    if not return_state:
+        return y
+    return y, {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+def slstm_decode(p, x1, state, cfg: ModelConfig):
+    xg = x1[:, 0] @ p["w_ih"]
+    st = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_step(p, xg, st, cfg)
+    y = rms_norm(h.astype(x1.dtype), p["norm_inner"], cfg.norm_eps)
+    return y[:, None], {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,198 @@
+"""xLSTM language model: [7 mLSTM : 1 sLSTM] grouped-scan stack.
+
+Blocks are grouped so the stack scans over homogeneous parameter pytrees:
+outer scan over groups, inner scan over the 7 mLSTM blocks, then the
+group's sLSTM block.  Decode threads O(1) per-block states — no KV cache —
+which is what makes the ``long_500k`` cell linear for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .common import ModelConfig, cross_entropy, dense_init, rms_norm
+from .mlp import gated_mlp
+from .xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_block,
+    mlstm_decode,
+    slstm_block,
+    slstm_decode,
+)
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, mlstm_per_group). slstm_every == 0 -> pure mLSTM."""
+    if cfg.slstm_every <= 0:
+        return 1, cfg.num_layers
+    assert cfg.num_layers % cfg.slstm_every == 0, "layers must tile the pattern"
+    return cfg.num_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def init_params(cfg: ModelConfig, rng):
+    ng, nm = _layout(cfg)
+    k_emb, k_m, k_s, k_head = jax.random.split(rng, 4)
+    m_keys = jax.random.split(k_m, ng * nm).reshape(ng, nm, 2)
+    mlstm = jax.vmap(jax.vmap(lambda k: init_mlstm(k, cfg)))(m_keys)
+    params = {
+        "tok_embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.pdt,
+                                fan_in=cfg.d_model),
+        "mlstm": mlstm,
+        "ln_m": {"scale": jnp.ones((ng, nm, cfg.d_model), jnp.float32)},
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if cfg.slstm_every > 0:
+        s_keys = jax.random.split(k_s, ng)
+        params["slstm"] = jax.vmap(lambda k: init_slstm(k, cfg))(s_keys)
+        params["ln_s"] = {"scale": jnp.ones((ng, cfg.d_model), jnp.float32)}
+        params["ln_s2"] = {"scale": jnp.ones((ng, cfg.d_model), jnp.float32)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.vocab_size, cfg.d_model), cfg.pdt)
+    return params
+
+
+def _stack(params, x, cfg: ModelConfig, *, states=None, decode=False,
+           collect=False):
+    """Run all groups; returns (x, new_states).
+
+    ``collect`` (parallel prefill): the parallel blocks also emit their
+    closed-form final recurrent states, stacked by the scans into exactly
+    the ``init_cache`` layout — no sequential replay (§Perf B1).
+    """
+    has_s = cfg.slstm_every > 0
+    b = x.shape[0]
+
+    def m_body(x, xs):
+        if decode:
+            p, ln, st = xs
+            h, st = mlstm_decode(p, rms_norm(x, ln, cfg.norm_eps), st, cfg)
+            x = x + h
+            return x, st
+        p, ln = xs
+        if collect:
+            h, st = mlstm_block(p, rms_norm(x, ln, cfg.norm_eps), cfg,
+                                return_state=True)
+            x = constrain(x + h, "batch", "res_seq", None)
+            return x, st
+        x = x + mlstm_block(p, rms_norm(x, ln, cfg.norm_eps), cfg)
+        x = constrain(x, "batch", "res_seq", None)
+        return x, None
+
+    m_body_fn = jax.checkpoint(m_body, prevent_cse=False) if cfg.remat != "none" else m_body
+
+    def group(x, xs):
+        if decode:
+            pm, lnm, ps, lns, lns2, stm, sts = xs
+            x, stm = jax.lax.scan(m_body_fn, x, (pm, lnm, stm))
+            if has_s:
+                h, sts = slstm_decode(ps, rms_norm(x, lns, cfg.norm_eps), sts, cfg)
+                x = x + h
+                x = x + gated_mlp(ps["mlp"], rms_norm(x, lns2, cfg.norm_eps), act="geglu")
+            return x, (stm, sts)
+        pm, lnm, ps, lns, lns2 = xs
+        x, stm = jax.lax.scan(m_body_fn, x, (pm, lnm))
+        sts = init_slstm_state(cfg, b)
+        if has_s:
+            if collect:
+                h, sts = slstm_block(ps, rms_norm(x, lns, cfg.norm_eps), cfg,
+                                     return_state=True)
+                x = x + h
+            else:
+                x = x + slstm_block(ps, rms_norm(x, lns, cfg.norm_eps), cfg)
+            x = x + gated_mlp(ps["mlp"], rms_norm(x, lns2, cfg.norm_eps), act="geglu")
+            x = constrain(x, "batch", "res_seq", None)
+        return x, ((stm, sts) if collect else None)
+
+    if has_s:
+        ps, lns, lns2 = params["slstm"], params["ln_s"]["scale"], params["ln_s2"]["scale"]
+    else:
+        ng, _ = _layout(cfg)
+        ps = lns = lns2 = jnp.zeros((ng, 0))
+    if decode:
+        stm, sts = states
+        xs = (params["mlstm"], params["ln_m"]["scale"], ps, lns, lns2, stm, sts)
+        x, new_states = jax.lax.scan(group, x, xs)
+        return x, new_states
+    xs = (params["mlstm"], params["ln_m"]["scale"], ps, lns, lns2)
+    x, ys = jax.lax.scan(group, x, xs)
+    return x, ys
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params.get("lm_head", params["tok_embed"])
+    return constrain(jnp.einsum("bsd,vd->bsv", x, table), "batch", "seq", "vocab")
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x = constrain(x, "batch", "seq", None)
+    x, _ = _stack(params, x, cfg)
+    return _head(params, x, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- recurrent serving --------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """State cache; size independent of max_seq (linear-time family)."""
+    ng, nm = _layout(cfg)
+    dt = dtype or cfg.cdt
+    stm = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (ng, nm) + l.shape).copy(),
+        init_mlstm_state(cfg, batch, dt))
+    sts = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (ng,) + l.shape).copy(),
+        init_slstm_state(cfg, batch))
+    return {"mlstm": stm, "slstm": sts, "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_seq: int | None = None):
+    """Parallel prefill: ONE parallel pass over the prompt that also emits
+    every block's closed-form final recurrent state (§Perf B1).
+
+    The old form — a scan of 32k decode steps — re-read every weight and
+    ran every TP collective once PER TOKEN; it survives as
+    ``prefill_sequential`` (the correctness oracle: both paths must agree,
+    see tests/test_xlstm_prefill.py)."""
+    b, s = tokens.shape
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x = constrain(x, "batch", "seq", None)
+    x, (stm, sts) = _stack(params, x, cfg, collect=True)
+    logits = _head(params, x[:, -1:], cfg)
+    return logits, {"mlstm": stm, "slstm": sts,
+                    "len": jnp.full((b,), s, jnp.int32)}
+
+
+def prefill_sequential(params, tokens, cfg: ModelConfig):
+    """Replay-of-decode-steps prefill (pre-B1 baseline + testing oracle)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, 0)
+
+    def step(cache, tok):
+        logits, cache = decode_step(params, cache, tok[:, None], cfg)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, tokens.T)
+    return logits[-1], cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x, (stm, sts) = _stack(params, x, cfg,
+                           states=(cache["mlstm"], cache["slstm"]), decode=True)
+    logits = _head(params, x, cfg)
+    return logits, {"mlstm": stm, "slstm": sts, "len": cache["len"] + 1}

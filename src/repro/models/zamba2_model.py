@@ -1,0 +1,211 @@
+"""Zamba2 hybrid: Mamba2 backbone + ONE shared attention block.
+
+Groups of ``attn_every`` Mamba2 blocks are followed by an invocation of a
+single weight-shared attention+MLP block (Zamba's signature trick: the
+attention weights are reused at every invocation point, so they are closed
+over by the group scan rather than stacked).  The shared block's KV caches
+are per-invocation (inputs differ), stacked on the group axis.
+
+Decode carries: Mamba states (groups, per_group, ...) — O(1) in sequence —
+plus the shared block's KV caches (groups, B, Smax, kv, hd).  ``long_500k``
+runs for this family: decode touches each 500k KV once (O(L) per token,
+not O(L²)), and the SSM backbone is O(1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .attention import decode_attention
+from .common import ModelConfig, apply_rope, cross_entropy, dense_init, rms_norm, rope_freqs
+from .mamba2 import init_mamba, init_mamba_state, mamba_block, mamba_decode
+from .mlp import gated_mlp, init_mlp
+from .transformer import attn_block, init_attn, _cache_update
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int]:
+    assert cfg.attn_every > 0 and cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every, cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, rng):
+    ng, per = _layout(cfg)
+    k_emb, k_m, k_a, k_f, k_head = jax.random.split(rng, 5)
+    m_keys = jax.random.split(k_m, ng * per).reshape(ng, per, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: init_mamba(k, cfg)))(m_keys)
+    shared = {
+        "attn": init_attn(k_a, cfg),
+        "mlp": init_mlp(k_f, cfg.d_model, cfg.d_ff, cfg.pdt),
+        "ln1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "ln2": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    params = {
+        "tok_embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.pdt,
+                                fan_in=cfg.d_model),
+        "mamba": mamba,
+        "ln_m": {"scale": jnp.ones((ng, per, cfg.d_model), jnp.float32)},
+        "shared": shared,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.vocab_size, cfg.d_model), cfg.pdt)
+    return params
+
+
+def _shared_attn(shared, x, sin, cos, cfg, *, cache=None, kv_len=None, decode=False):
+    h, kv_out = attn_block(shared["attn"],
+                           rms_norm(x, shared["ln1"]["scale"], cfg.norm_eps),
+                           sin, cos, cfg, cache=cache, kv_len=kv_len,
+                           decode=decode, cache_write=True)
+    x = x + h
+    x = x + gated_mlp(shared["mlp"], rms_norm(x, shared["ln2"]["scale"], cfg.norm_eps),
+                      act=cfg.mlp_act)
+    return constrain(x, "batch", "res_seq", None), kv_out
+
+
+def _stack(params, x, sin, cos, cfg: ModelConfig, *, cache=None, kv_len=None,
+           decode=False, collect=False):
+    shared = params["shared"]
+
+    def m_body(x, xs):
+        if decode:
+            p, ln, st = xs
+            h, st = mamba_decode(p, rms_norm(x, ln, cfg.norm_eps), st, cfg)
+            return x + h, st
+        p, ln = xs
+        if collect:
+            h, st = mamba_block(p, rms_norm(x, ln, cfg.norm_eps), cfg,
+                                return_state=True)
+            return constrain(x + h, "batch", "res_seq", None), st
+        x = x + mamba_block(p, rms_norm(x, ln, cfg.norm_eps), cfg)
+        return constrain(x, "batch", "res_seq", None), None
+
+    m_body_fn = jax.checkpoint(m_body, prevent_cse=False) if cfg.remat != "none" else m_body
+
+    def group(x, xs):
+        if decode:
+            pm, lnm, stm, k_c, v_c = xs
+            x, stm = jax.lax.scan(m_body_fn, x, (pm, lnm, stm))
+            x, (k_c, v_c) = _shared_attn(shared, x, sin, cos, cfg,
+                                         cache=(k_c, v_c), kv_len=kv_len, decode=True)
+            return x, (stm, k_c, v_c)
+        pm, lnm = xs
+        x, stm = jax.lax.scan(m_body_fn, x, (pm, lnm))
+        x, (k, v) = _shared_attn(shared, x, sin, cos, cfg)
+        return x, ((stm, k, v) if collect else (k, v))
+
+    if decode:
+        xs = (params["mamba"], params["ln_m"]["scale"],
+              cache["mamba"], cache["k"], cache["v"])
+        x, (stm, k_all, v_all) = jax.lax.scan(group, x, xs)
+        return x, {"mamba": stm, "k": k_all, "v": v_all, "len": kv_len + 1}
+    xs = (params["mamba"], params["ln_m"]["scale"])
+    if collect:
+        x, (stm, k_all, v_all) = jax.lax.scan(group, x, xs)
+        return x, {"mamba": stm, "k": k_all, "v": v_all}
+    x, (k_all, v_all) = jax.lax.scan(group, x, xs)
+    return x, {"k": k_all, "v": v_all}
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params.get("lm_head", params["tok_embed"])
+    return constrain(jnp.einsum("bsd,vd->bsv", x, table), "batch", "seq", "vocab")
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    x = constrain(x, "batch", "seq", None)
+    sin, cos = rope_freqs(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+    x, _ = _stack(params, x, sin, cos, cfg)
+    return _head(params, x, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    ng, per = _layout(cfg)
+    dt = dtype or cfg.cdt
+    stm = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (ng, per) + l.shape).copy(),
+        init_mamba_state(cfg, batch, dt))
+    kv_shape = (ng, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "mamba": stm,
+        "k": jnp.zeros(kv_shape, dt),
+        "v": jnp.zeros(kv_shape, dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_seq: int | None = None):
+    """ONE parallel pass: logits + attention KV + chunk-final SSD states
+    (§Perf Z1). The old replay-of-decode-steps form survives as
+    ``prefill_sequential`` (the correctness oracle)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    sin, cos = rope_freqs(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+    x, st = _stack(params, x, sin, cos, cfg, collect=True)
+    logits = _head(params, x[:, -1:], cfg)
+
+    cache = init_cache(cfg, b, max_seq, cfg.cdt)
+    pad = max_seq - s
+    k = jnp.pad(st["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else st["k"]
+    v = jnp.pad(st["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else st["v"]
+    cache["k"] = constrain(k, "layers", "batch", "kv_seq", "kv_heads", None)
+    cache["v"] = constrain(v, "layers", "batch", "kv_seq", "kv_heads", None)
+    cache["len"] = jnp.full((b,), s, jnp.int32)
+    cache["mamba"] = jax.tree.map(
+        lambda a, b_: a.astype(b_.dtype), st["mamba"], cache["mamba"])
+    return logits, cache
+
+
+def prefill_sequential(params, tokens, cfg: ModelConfig,
+                       *, max_seq: int | None = None):
+    """Replay-of-decode-steps prefill (pre-Z1 baseline + testing oracle)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    sin, cos = rope_freqs(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+    x, kv = _stack(params, x, sin, cos, cfg)
+    logits = _head(params, x[:, -1:], cfg)
+
+    cache = init_cache(cfg, b, max_seq, cfg.cdt)
+    pad = max_seq - s
+    k = jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else kv["k"]
+    v = jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad else kv["v"]
+    cache["k"] = constrain(k, "layers", "batch", "kv_seq", "kv_heads", None)
+    cache["v"] = constrain(v, "layers", "batch", "kv_seq", "kv_heads", None)
+    cache["len"] = jnp.full((b,), s, jnp.int32)
+
+    def full_step(cache_m, tok):
+        _, cache_m = decode_step(params, cache_m, tok[:, None], cfg)
+        return cache_m, None
+
+    replay = init_cache(cfg, b, max_seq, cfg.cdt)
+    replay, _ = jax.lax.scan(full_step, replay, tokens.T)
+    cache["mamba"] = replay["mamba"]
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(cfg.cdt)
+    pos = cache["len"]
+    sin, cos = rope_freqs(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    x, new_cache = _stack(params, x, sin, cos, cfg, cache=cache,
+                          kv_len=cache["len"], decode=True)
+    logits = _head(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,80 @@
+"""AdamW with fp32 master weights over low-precision compute params.
+
+State layout (all sharded like the params — ZeRO over data × model via the
+same partition specs):
+
+    params : compute dtype (bf16 in production)
+    master : fp32 master copy
+    m, v   : fp32 moments
+    step   : scalar
+
+Update: global-norm clip -> AdamW on master -> params = master.astype(bf16).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "TrainState"]
+
+TrainState = dict  # {"params", "master", "m", "v", "step"}
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> TrainState:
+        # copy=True: when params are already f32 (CPU smoke), astype would
+        # alias master to params and the donated train step would see the
+        # same buffer donated twice.
+        f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+        return {
+            "params": params,
+            "master": jax.tree.map(f32, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, state: TrainState, grads) -> tuple[TrainState, dict]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gsq = jax.tree.reduce(lambda a, g: a + jnp.sum(jnp.square(g)), grads, 0.0)
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, w):
+            g = g * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            w = w - lr * (mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * w)
+            return m, v, w
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), master, state["params"])
+        new_state = {"params": params, "master": master, "m": m, "v": v,
+                     "step": step}
+        return new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,123 @@
+"""Error-feedback int8 gradient compression for the cross-pod reduce.
+
+Hierarchical gradient reduction for the 2×16×16 production mesh: within a
+pod the reduce runs over fast ICI at full precision (XLA's own
+reduce-scatter/all-reduce), but the *cross-pod* hop traverses the slow
+inter-pod links, so we compress it 4× (bf16 grads → int8 + one f32 scale
+per tensor) with error feedback so the quantization bias does not
+accumulate (Karimireddy et al.-style EF-SGD memory).
+
+Mechanics: the train step is wrapped in ``jax.shard_map(...,
+axis_names={"pod"})`` — the ``pod`` axis becomes *manual* (we own its
+collectives) while ``data``/``model`` stay auto (XLA keeps sharding the
+per-pod computation). Inside, the cross-pod sum of a tensor ``g`` is::
+
+    x      = g + error              # apply EF memory
+    scale  = max|x| / 127
+    q      = round(x / scale) : int8
+    error' = x - q * scale          # what quantization lost, re-sent next step
+    qs     = all_gather(q, 'pod')   # int8 on the wire  (4x fewer bytes)
+    ss     = all_gather(scale,'pod')
+    sum    = Σ_p qs[p] * ss[p]
+
+Wire bytes per device: all-gather int8 = N·(P-1)/P bytes versus f32
+all-reduce = 8·N·(P-1)/P — an 8× reduction in cross-pod traffic (4× from
+the dtype, 2× from gather-once vs reduce+broadcast), at the cost of a
+local dequant-sum. For P=2 pods the extra HBM traffic is negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_int8_psum", "tree_ef_int8_psum", "init_error_state",
+           "make_hierarchical_train_step"]
+
+
+def ef_int8_psum(g, error, axis_name: str):
+    """Compressed psum of one tensor over ``axis_name``. Returns (sum, err')."""
+    x = g.astype(jnp.float32) + error
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_error = x - q.astype(jnp.float32) * scale
+    qs = jax.lax.all_gather(q, axis_name)           # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)       # one f32 scalar per pod
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))
+    return total.astype(g.dtype), new_error
+
+
+def tree_ef_int8_psum(grads, errors, axis_name: str):
+    """Tree-mapped compressed psum; scalar/small leaves (<1 KiB) go
+    uncompressed (psum) — compressing a scalar costs more than it saves."""
+
+    def one(g, e):
+        if g.size * g.dtype.itemsize < 1024:
+            return jax.lax.psum(g, axis_name), e
+        return ef_int8_psum(g, e, axis_name)
+
+    pairs = jax.tree.map(one, grads, errors)
+    summed = jax.tree.map(lambda p: p[0], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return summed, new_err
+
+
+def init_error_state(abstract_params, npods: int = 1):
+    """EF memory: per-pod f32 buffer per parameter leaf. The leading ``npods``
+    dim is sharded over the pod axis, so each pod owns (and updates) its own
+    error memory — EF state is inherently local to the compressing rank."""
+    return jax.tree.map(
+        lambda l: jnp.zeros((npods,) + tuple(l.shape), jnp.float32)
+        if hasattr(l, "shape") else l,
+        abstract_params)
+
+
+def make_hierarchical_train_step(model, opt, mesh, *, compress: bool = True):
+    """Train step with manual cross-pod gradient reduction.
+
+    Requires a mesh with a ``pod`` axis. The returned step takes
+    ``(state, ef_error, batch)`` where ``ef_error`` has a leading pod dim
+    (see :func:`init_error_state`). Loss/grads are computed per pod (batch
+    split over pod via in_specs); the cross-pod grad sum is the compressed
+    collective above. data/model axes remain *auto* — XLA still shards
+    everything inside the pod.
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError("hierarchical step needs a 'pod' mesh axis")
+    npods = mesh.shape["pod"]
+    from jax.sharding import PartitionSpec as P
+
+    def per_pod(state, ef_error, batch):
+        params = state["params"]
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        loss = jax.lax.pmean(loss, "pod")
+        err = jax.tree.map(lambda e: e[0], ef_error)  # this pod's slice
+        if compress:
+            grads, new_err = tree_ef_int8_psum(grads, err, "pod")
+            grads = jax.tree.map(lambda g: g / npods, grads)
+        else:
+            grads = jax.tree.map(
+                functools.partial(jax.lax.pmean, axis_name="pod"), grads)
+            new_err = err
+        new_state, metrics = opt.update(state, grads)
+        new_err = jax.tree.map(lambda e: e[None], new_err)  # restore pod dim
+        metrics = dict(metrics, loss=loss)
+        return new_state, new_err, metrics
+
+    def step(state, ef_error, batch):
+        state_specs = jax.tree.map(lambda _: P(), state)  # replicated over pod
+        err_specs = jax.tree.map(lambda _: P("pod"), ef_error)
+        batch_specs_ = jax.tree.map(lambda _: P("pod"), batch)
+        metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        f = jax.shard_map(per_pod, mesh=mesh,
+                          in_specs=(state_specs, err_specs, batch_specs_),
+                          out_specs=(state_specs, err_specs, metric_specs),
+                          axis_names={"pod"}, check_vma=False)
+        return f(state, ef_error, batch)
+
+    return step

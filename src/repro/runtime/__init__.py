@@ -1,0 +1,22 @@
+"""Distributed runtime: training loop, serving loop, fault tolerance.
+
+The runtime composes every substrate layer: the agnocast data plane feeds
+the trainer; the device page pool hands KV from prefill to decode in the
+server; the checkpointer + failure detector + re-mesh planner implement
+restartability and elasticity.
+"""
+
+from .fault_tolerance import (
+    FailureDetector,
+    RemeshPlan,
+    StragglerMonitor,
+    plan_remesh,
+)
+from .server import InferenceServer, Request, Result
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "Trainer", "TrainerConfig",
+    "InferenceServer", "Request", "Result",
+    "FailureDetector", "StragglerMonitor", "RemeshPlan", "plan_remesh",
+]

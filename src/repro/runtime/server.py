@@ -1,0 +1,189 @@
+"""Serving runtime: continuous batching with the device-arena KV hand-off.
+
+The serving loop is the paper's pub/sub discipline applied twice:
+
+* **host plane** — requests/results are agnocast messages (unsized: prompt
+  lengths vary) when wired to topics; in-process queues otherwise;
+* **device plane** — prefill "publishes" the KV pages it wrote for a
+  request and the decode loop "subscribes"; pages return to the free list
+  only when refcount == 0 AND unreceived == 0 (``DevicePagePool``), so
+  cancelled requests, fan-out beams and prefix-shared prompts can all hold
+  references without copies, and a vanished consumer is reclaimed by the
+  janitor (``expire_consumer``) exactly like the registry sweep.
+
+The decode cache is slot-contiguous ``(L, B_slots, S_max, KV, hd)``; pool
+pages map 1:1 onto fixed-size token ranges of a slot. On TPU the same
+metadata drives a paged Pallas decode kernel (the gather never
+materializes); on CPU the contiguous layout is the fast path.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_arena import DevicePagePool
+from repro.models import Model
+
+__all__ = ["Request", "Result", "InferenceServer"]
+
+
+@dataclass
+class Request:
+    rid: str
+    tokens: np.ndarray                  # prompt (unsized)
+    max_new: int = 16
+    stamp: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class Result:
+    rid: str
+    tokens: list[int]
+    prompt_len: int
+    ttft: float                          # time to first token
+    latency: float
+
+
+class InferenceServer:
+    def __init__(self, model: Model, *, slots: int = 4, max_seq: int = 512,
+                 page_tokens: int = 64, greedy: bool = True):
+        self.model = model
+        self.slots = slots
+        self.max_seq = max_seq
+        self.pool = DevicePagePool(
+            num_pages=slots * (max_seq // page_tokens), page_tokens=page_tokens)
+        self.queue: deque[Request] = deque()
+        self.results: dict[str, Result] = {}
+        self._active: dict[int, dict] = {}  # slot -> request state
+        self._free_slots = list(range(slots - 1, -1, -1))
+        self._cache = None
+        self._params = None
+        self._prefill = None
+        self._decode = None
+        self.steps = 0
+
+    # -- setup ---------------------------------------------------------------
+
+    def load(self, params) -> None:
+        self._params = params
+        m = self.model
+
+        def prefill(params, tokens):
+            logits, cache = m.prefill(params, {"tokens": tokens},
+                                      max_seq=self.max_seq)
+            return logits, cache
+
+        def decode(params, cache, tokens):
+            logits, new_cache = m.decode_step(params, cache, tokens)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._cache = m.init_cache(self.slots, self.max_seq)
+
+    # -- request surface --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def cancel(self, rid: str) -> bool:
+        """Consumer vanishes mid-decode: the janitor path frees its pages."""
+        for slot, st in list(self._active.items()):
+            if st["req"].rid == rid:
+                self.pool.expire_consumer(f"decode/{rid}")
+                self._retire(slot, finished=False)
+                return True
+        return False
+
+    # -- the loop ---------------------------------------------------------------
+
+    def _admit(self) -> None:
+        while self.queue and self._free_slots:
+            req = self.queue.popleft()
+            slot = self._free_slots.pop()
+            prompt = jnp.asarray(req.tokens, jnp.int32)[None, :]
+            t0 = time.monotonic()
+            logits, cache1 = self._prefill(self._params, prompt)
+            first = int(jnp.argmax(logits[0, -1]))
+            # prefill publishes this request's pages; decode subscribes.
+            npages = self.pool.pages_for_tokens(len(req.tokens) + req.max_new)
+            pages = self.pool.alloc(npages)
+            key = f"kv/{req.rid}"
+            self.pool.publish(key, pages, consumers=[f"decode/{req.rid}"])
+            self.pool.take(key, f"decode/{req.rid}")   # zero-copy receive
+            # splice the request's KV into its slot of the batched cache
+            self._cache = _splice_cache(self._cache, cache1, slot,
+                                        len(req.tokens))
+            self._active[slot] = {
+                "req": req, "key": key, "generated": [first],
+                "t0": t0, "ttft": time.monotonic() - t0,
+            }
+
+    def _retire(self, slot: int, *, finished: bool = True) -> None:
+        st = self._active.pop(slot)
+        if finished:
+            self.pool.release(st["key"], f"decode/{st['req'].rid}")
+            self.results[st["req"].rid] = Result(
+                rid=st["req"].rid, tokens=st["generated"],
+                prompt_len=len(st["req"].tokens), ttft=st["ttft"],
+                latency=time.monotonic() - st["req"].stamp)
+        # zero the slot length so decode ignores it
+        self._cache["len"] = self._cache["len"].at[slot].set(0)
+        self._free_slots.append(slot)
+
+    def _decode_round(self) -> None:
+        if not self._active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for slot, st in self._active.items():
+            toks[slot, 0] = st["generated"][-1]
+        nxt, self._cache = self._decode(self._params, self._cache,
+                                        jnp.asarray(toks))
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        for slot in list(self._active):
+            st = self._active[slot]
+            st["generated"].append(int(nxt[slot]))
+            done = (len(st["generated"]) >= st["req"].max_new
+                    or len(st["req"].tokens) + len(st["generated"])
+                    >= self.max_seq - 1)
+            if done:
+                self._retire(slot)
+
+    def serve(self, *, max_rounds: int = 10_000) -> dict[str, Result]:
+        """Run until queue and slots drain; returns results by request id."""
+        rounds = 0
+        while (self.queue or self._active) and rounds < max_rounds:
+            self._admit()
+            self._decode_round()
+            rounds += 1
+        return self.results
+
+    # -- introspection ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "free_pages": self.pool.free_pages,
+            "live_publications": self.pool.live_publications,
+            "active": len(self._active),
+            "queued": len(self.queue),
+            "decode_steps": self.steps,
+        }
+
+
+def _splice_cache(batched, single, slot: int, length: int):
+    """Write request ``single`` (batch=1) KV into slot ``slot``."""
+    def leaf(b, s):
+        if b.ndim >= 2 and s.shape[0] == b.shape[0] and s.shape[1] == 1:
+            return b.at[:, slot].set(s[:, 0])
+        return b
+    out = jax.tree.map(leaf, batched, single)
+    out["len"] = batched["len"].at[slot].set(length)
+    return out

@@ -1,0 +1,163 @@
+"""Training loop: zero-copy data plane + checkpoint/restart + stragglers.
+
+The trainer is the end-to-end composition:
+
+    ZeroCopyPipeline (separate process, agnocast topics)
+        └─▶ Trainer.step: device_put → jit(train_step) (donated state)
+                └─▶ Checkpointer (async, atomic) every ``ckpt_every``
+                └─▶ StragglerMonitor / FailureDetector hooks
+
+Crash-restart: ``Trainer.create`` restores the latest checkpoint if one
+exists (params, opt state, data cursor) and continues — kill the process at
+any step and relaunch to see it resume. The data plane is a separate OS
+process: killing *it* mid-run exercises the paper's fault-isolation story
+(registry janitor reclaims, pipeline respawns, training continues).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data import BatchSpec, InProcessPipeline, ZeroCopyPipeline
+from repro.launch.steps import batch_specs, make_train_step, shardings_for
+from repro.models import Model
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.sharding import param_partition_specs, use_mesh
+
+__all__ = ["Trainer", "TrainerConfig"]
+
+
+@dataclass
+class TrainerConfig:
+    batch: int = 8
+    seq_len: int = 256
+    lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/agnocast-ckpt"
+    ckpt_keep: int = 2
+    zero_copy_data: bool = True   # False -> in-process pipeline (tests)
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, tc: TrainerConfig, *, mesh=None,
+                 rules: dict | None = None):
+        self.model = model
+        self.tc = tc
+        self.mesh = mesh
+        self.rules = rules or {}
+        self.opt = AdamW(lr=cosine_schedule(tc.lr, tc.warmup, tc.total_steps))
+        self.ckpt = Checkpointer(tc.ckpt_dir, keep=tc.ckpt_keep)
+        self.monitor = StragglerMonitor([0])
+        self.metrics_log: list[dict] = []
+        self.step_num = 0
+        self._pipeline = None
+        self._state = None
+        self._step_fn = None
+
+    # -- setup -----------------------------------------------------------------
+
+    def _build_step(self):
+        step = make_train_step(self.model, self.opt)
+        if self.mesh is None:
+            self._step_fn = jax.jit(step, donate_argnums=(0,))
+            return
+        with use_mesh(self.mesh, self.rules) as ctx:
+            pspecs = param_partition_specs(self.model.abstract_params(), ctx)
+            psh = shardings_for(pspecs, self.mesh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            repl = NamedSharding(self.mesh, P())
+            state_sh = {"params": psh, "master": psh, "m": psh, "v": psh,
+                        "step": repl}
+            self._state_sh = state_sh
+            self._step_fn = jax.jit(step, donate_argnums=(0,),
+                                    out_shardings=(state_sh, None))
+
+    def _init_or_restore(self):
+        spec = BatchSpec(self.tc.batch, self.tc.seq_len,
+                         self.model.cfg.vocab_size, seed=self.tc.seed)
+        abstract = jax.eval_shape(
+            lambda: self.opt.init(self.model.init(jax.random.PRNGKey(self.tc.seed))))
+        try:
+            state, step, extra = self.ckpt.restore(abstract)
+            self._state = jax.tree.map(jax.numpy.asarray, state)
+            self.step_num = step
+            dstate = extra.get("data_state", {"cursor": 0})
+            print(f"[trainer] restored step {step} "
+                  f"(data cursor {dstate.get('cursor', 0)})")
+        except FileNotFoundError:
+            params = self.model.init(jax.random.PRNGKey(self.tc.seed))
+            self._state = self.opt.init(params)
+            dstate = None
+        if self.tc.zero_copy_data:
+            self._pipeline = ZeroCopyPipeline(spec)
+        elif dstate is not None:
+            self._pipeline = InProcessPipeline.restore(spec, dstate)
+        else:
+            self._pipeline = InProcessPipeline(spec)
+
+    # -- loop ------------------------------------------------------------------
+
+    def _next_batch(self):
+        if isinstance(self._pipeline, InProcessPipeline):
+            return next(self._pipeline)
+        return self._pipeline.next_batch()
+
+    def run(self, steps: int | None = None) -> dict:
+        if self._step_fn is None:
+            self._build_step()
+        if self._state is None:
+            self._init_or_restore()
+        steps = steps or self.tc.total_steps
+        t_run = time.monotonic()
+        losses = []
+        while self.step_num < steps:
+            t0 = time.monotonic()
+            raw = self._next_batch()
+            batch = {"tokens": jax.numpy.asarray(raw["tokens"])}
+            self._state, metrics = self._step_fn(self._state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            self.monitor.record(0, dt)
+            self.step_num += 1
+            losses.append(loss)
+            rec = {"step": self.step_num, "loss": loss, "dt": dt,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.metrics_log.append(rec)
+            if self.step_num % self.tc.log_every == 0:
+                print(f"[trainer] step {rec['step']:5d} loss {loss:8.4f} "
+                      f"gnorm {rec['grad_norm']:7.3f} {dt*1e3:7.1f} ms")
+            if self.step_num % self.tc.ckpt_every == 0:
+                self._save()
+        self._save()
+        wall = time.monotonic() - t_run
+        return {"steps": self.step_num, "loss_first": losses[0],
+                "loss_last": losses[-1], "wall_s": wall,
+                "stragglers": self.monitor.stragglers()}
+
+    def _save(self):
+        dstate = (self._pipeline.state()
+                  if isinstance(self._pipeline, InProcessPipeline)
+                  else {"cursor": 0})
+        self.ckpt.save(self.step_num, self._state,
+                       extra={"data_state": dstate})
+
+    def close(self):
+        self.ckpt.wait()
+        if isinstance(self._pipeline, ZeroCopyPipeline):
+            self._pipeline.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

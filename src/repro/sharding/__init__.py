@@ -1,0 +1,19 @@
+from .partition import (
+    MeshContext,
+    active,
+    constrain,
+    current_mesh,
+    logical_to_spec,
+    param_partition_specs,
+    use_mesh,
+)
+
+__all__ = [
+    "MeshContext",
+    "active",
+    "constrain",
+    "current_mesh",
+    "logical_to_spec",
+    "param_partition_specs",
+    "use_mesh",
+]

@@ -1,0 +1,231 @@
+"""Logical-axis sharding: DP / TP / EP / SP rules over the production mesh.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps logical names to physical mesh axes.  The mapping is
+divisibility-aware (e.g. gemma's 8 query heads cannot shard over a 16-way
+``model`` axis, so the rule engine falls back to sharding ``head_dim``),
+and activation-sharding constraints degrade to no-ops when no mesh is
+active so the same model code runs single-device smoke tests unchanged.
+
+Default physical mapping:
+
+    batch    -> ("pod", "data")   data parallelism (hierarchical across pods)
+    embed    -> "data"            FSDP/ZeRO: parameter + optimizer sharding
+    vocab    -> "model"           TP for embedding / lm head
+    heads    -> "model"           TP for attention (fallback: head_dim)
+    kv_heads -> "model"           TP for GQA KV (fallback: replicate)
+    mlp      -> "model"           TP for FFN
+    experts  -> "model"           EP for MoE
+    seq      -> "model" iff cfg.seq_shard_activations (Megatron-style SP of
+                the residual stream between blocks; XLA inserts the
+                gather/scatter at block edges)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshContext", "use_mesh", "current_mesh", "active",
+    "constrain", "logical_to_spec", "param_partition_specs",
+]
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    # NOTE: a head_dim->model fallback (for archs whose heads cannot tile
+    # the model axis) was measured in §Perf B5 and REJECTED: sharding dh
+    # splits the mLSTM C-state on both contraction sides and adds more
+    # collective volume than the activation gathers it removes.
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_ff": (),  # serving: ("data",) = EP x TP-within-expert (§Perf C3)
+    "seq": (),
+    "res_seq": (),   # residual stream between blocks (SP when enabled)
+    "kv_seq": (),
+    "layers": (),     # scan axis: never sharded
+    "state": (),      # SSM state dims
+}
+
+
+@dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]] = field(default_factory=dict)
+
+    def rule(self, name: str) -> tuple[str, ...]:
+        r = self.rules.get(name, DEFAULT_RULES.get(name, ()))
+        # keep only axes that exist in this mesh (pod axis is optional)
+        return tuple(a for a in r if a in self.mesh.axis_names)
+
+    def axes_size(self, axes: tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_ctx: contextvars.ContextVar[MeshContext | None] = contextvars.ContextVar(
+    "agnocast_mesh_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    ctx = MeshContext(mesh, dict(rules or {}))
+    token = _ctx.set(ctx)
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _ctx.reset(token)
+
+
+def active() -> MeshContext | None:
+    return _ctx.get()
+
+
+def current_mesh() -> Mesh | None:
+    ctx = _ctx.get()
+    return ctx.mesh if ctx else None
+
+
+def logical_to_spec(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                    ctx: MeshContext | None = None) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible rules."""
+    ctx = ctx or _ctx.get()
+    if ctx is None:
+        return P()
+    used: set[str] = set()
+    out: list = []
+    for name, dim in zip(axes, shape):
+        phys = ctx.rule(name) if name else ()
+        phys = tuple(a for a in phys if a not in used)
+        if phys and dim % ctx.axes_size(phys) == 0:
+            used.update(phys)
+            out.append(phys if len(phys) > 1 else phys[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, *axes: str | None):
+    """Activation sharding constraint; identity when no mesh is active."""
+    ctx = _ctx.get()
+    if ctx is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: leaf-name -> logical axes (rank-aware)
+# ---------------------------------------------------------------------------
+
+# name -> logical axes for the *trailing* dims; scanned params get a leading
+# "layers" axis automatically when rank exceeds the base rank.
+_PARAM_AXES: dict[str, tuple[str | None, ...]] = {
+    # embeddings / head
+    "tok_embed": ("vocab", "embed"),
+    "pos_embed": (None, "embed"),
+    "lm_head": ("vocab", "embed"),
+    # attention
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+    "q_norm": ("head_dim",),
+    "k_norm": ("head_dim",),
+    # mlp
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    # moe
+    "router": ("embed", "experts"),
+    "e_gate": ("experts", "embed", "expert_ff"),
+    "e_up": ("experts", "embed", "expert_ff"),
+    "e_down": ("experts", "expert_ff", "embed"),
+    "shared_gate": ("embed",),
+    # norms / scalars
+    "scale": ("embed",),
+    "bias": ("embed",),
+    # ssm (mamba2)
+    "in_proj": ("embed", "mlp"),
+    "conv_w": (None, "mlp"),
+    "conv_b": ("mlp",),
+    "A_log": ("heads",),
+    "D_skip": ("heads",),
+    "dt_bias": ("heads",),
+    "out_proj": ("mlp", "embed"),
+    "norm_inner": ("mlp",),
+    # xlstm
+    "w_ih": ("embed", "mlp"),
+    "w_hh": (None, "mlp"),
+    "b_ih": ("mlp",),
+    # generic projections (whisper/mllama frontends, gates)
+    "w_in": ("embed", "mlp"),
+    "w_out": ("mlp", "embed"),
+    "gate_attn": (),
+    "gate_mlp": (),
+}
+
+
+def _axes_for_leaf(name: str, rank: int) -> tuple[str | None, ...]:
+    base = _PARAM_AXES.get(name)
+    if base is None:
+        # unknown leaf: replicate (loud in tests via check_all_params_matched)
+        return (None,) * rank
+    if rank == len(base):
+        return base
+    if rank == len(base) + 1:
+        return ("layers",) + base
+    if rank == len(base) + 2:  # e.g. grouped scans (mllama groups x inner)
+        return ("layers", "layers") + base
+    return (None,) * rank
+
+
+def param_partition_specs(abstract_params, ctx: MeshContext | None = None):
+    """Tree of PartitionSpec for a (possibly abstract) parameter tree."""
+    ctx = ctx or _ctx.get()
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        axes = _axes_for_leaf(name, len(leaf.shape))
+        return logical_to_spec(axes, leaf.shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract_params)
+
+
+def unmatched_param_leaves(abstract_params) -> list[str]:
+    """Test hook: leaves whose name has no sharding rule (would replicate)."""
+    bad: list[str] = []
+
+    def visit(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name not in _PARAM_AXES:
+            bad.append(jax.tree_util.keystr(path))
+
+    jax.tree_util.tree_map_with_path(visit, abstract_params)
+    return bad

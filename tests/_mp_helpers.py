@@ -1,0 +1,81 @@
+"""Child-process entry points for multiprocess tests (spawn-safe)."""
+
+import os
+import signal
+import time
+
+
+def echo_subscriber(reg_name, topic, q, n_expected):
+    from repro.core import POINT_CLOUD2, Domain
+
+    dom = Domain.join(reg_name, publisher=False)
+    sub = dom.create_subscription(POINT_CLOUD2, topic)
+    q.put("ready")
+    n = 0
+    t0 = time.time()
+    while n < n_expected and time.time() - t0 < 30:
+        if sub.wait(0.5):
+            for ptr in sub.take():
+                q.put(int(ptr.data.sum()))
+                ptr.release()
+                n += 1
+    q.put("done")
+
+
+def crash_holding_subscriber(reg_name, topic, q):
+    from repro.core import POINT_CLOUD2, Domain
+
+    dom = Domain.join(reg_name, publisher=False)
+    sub = dom.create_subscription(POINT_CLOUD2, topic)
+    q.put("ready")
+    t0 = time.time()
+    while time.time() - t0 < 30:
+        if sub.wait(0.5):
+            if sub.take():  # take and DIE while holding the reference
+                q.put("holding")
+                time.sleep(0.5)  # let the queue feeder flush
+                os.kill(os.getpid(), signal.SIGKILL)
+
+
+def remote_publisher(reg_name, topic, q, payload_sizes):
+    import numpy as np
+
+    from repro.core import POINT_CLOUD2, Domain
+
+    dom = Domain.join(reg_name, arena_capacity=32 << 20)
+    pub = dom.create_publisher(POINT_CLOUD2, topic, depth=16)
+    q.put("ready")
+    q.get(timeout=30)  # wait for go
+    for i, n in enumerate(payload_sizes):
+        m = pub.borrow_loaded_message()
+        m.data.extend(np.full(n, i % 251, np.uint8))
+        pub.publish(m)
+    # stay alive until the parent confirms receipt (owner holds the arena)
+    q.get(timeout=30)
+
+
+def crash_publisher(reg_name):
+    """Publish once, then die without any cleanup (no atexit, no close)."""
+    import numpy as np
+
+    from repro.core import POINT_CLOUD2, Domain
+
+    d = Domain.join(reg_name, arena_capacity=8 << 20)
+    p = d.create_publisher(POINT_CLOUD2, "t", depth=4)
+    m = p.borrow_loaded_message()
+    m.data.extend(np.ones(1000, np.uint8))
+    p.publish(m)
+    os._exit(1)
+
+
+def bridge_runner(reg_name, bus_path, topic, q, run_s=10.0):
+    from repro.core import POINT_CLOUD2, Bridge, Domain
+
+    dom = Domain.join(reg_name, arena_capacity=16 << 20)
+    br = Bridge(dom, bus_path, POINT_CLOUD2, topic)
+    q.put("ready")
+    t0 = time.time()
+    while time.time() - t0 < run_s:
+        br.spin_once(0.05)
+    q.put(("counts", br.relayed_out, br.relayed_in))
+    time.sleep(0.5)

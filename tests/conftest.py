@@ -1,0 +1,8 @@
+import os
+import sys
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for p in (_SRC, _HERE):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,130 @@
+"""Arena allocator: unit + property tests (the shared-heap substrate)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Arena, ArenaError, OutOfArenaMemory
+
+
+@pytest.fixture()
+def arena():
+    a = Arena.create(1 << 20)
+    yield a
+    a.close()
+    a.unlink()
+
+
+def test_alloc_free_roundtrip(arena):
+    off = arena.alloc(1000)
+    assert off >= 4096 and off % 64 == 0
+    assert arena.live_bytes > 0
+    arena.free(off)
+    assert arena.live_bytes == 0
+
+
+def test_offset_zero_is_never_allocated(arena):
+    # offset 0 is the NULL analogue: the header region is reserved
+    offs = [arena.alloc(64) for _ in range(100)]
+    assert all(o >= 4096 for o in offs)
+
+
+def test_oom_raises(arena):
+    with pytest.raises(OutOfArenaMemory):
+        arena.alloc(2 << 20)
+
+
+def test_only_owner_allocates(arena):
+    other = Arena.attach(arena.name)
+    try:
+        with pytest.raises(ArenaError):
+            other.alloc(64)
+        with pytest.raises(ArenaError):
+            other.free(4096)
+    finally:
+        other.close()
+
+
+def test_views_are_shared_and_readonly_for_attachers(arena):
+    off = arena.alloc(256)
+    w = arena.view(off, 256)
+    w[:] = np.arange(256, dtype=np.uint8)
+    other = Arena.attach(arena.name)
+    try:
+        r = other.view(off, 256)
+        assert np.array_equal(r, np.arange(256, dtype=np.uint8))
+        assert not r.flags.writeable  # MMU read-only analogue
+        with pytest.raises(ValueError):
+            r[0] = 1
+    finally:
+        other.close()
+
+
+def test_realloc_grow_preserves_data(arena):
+    off = arena.alloc(128)
+    arena.view(off, 128)[:] = 7
+    off2 = arena.realloc(off, 4096)
+    assert np.all(arena.view(off2, 128) == 7)
+
+
+def test_realloc_in_place_when_adjacent_free(arena):
+    off = arena.alloc(128)
+    off2 = arena.realloc(off, 1024)
+    assert off2 == off  # nothing after it: grows in place
+
+
+def test_coalescing_allows_big_alloc_after_frees(arena):
+    offs = [arena.alloc(300_000) for _ in range(3)]
+    with pytest.raises(OutOfArenaMemory):
+        arena.alloc(500_000)
+    for o in offs:
+        arena.free(o)
+    arena.alloc(1_000_000)  # coalesced: whole arena usable again
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(1, 4096)),
+            st.tuples(st.just("free"), st.integers(0, 30)),
+            st.tuples(st.just("realloc"), st.integers(1, 8192)),
+        ),
+        max_size=60,
+    )
+)
+def test_property_no_overlap_and_conservation(ops):
+    """System invariant: live blocks never overlap, never exceed capacity,
+    and block contents survive arbitrary alloc/free/realloc interleavings."""
+    a = Arena.create(1 << 20)
+    try:
+        live: list[tuple[int, int, int]] = []  # (off, nbytes, fill)
+        fill = 0
+        for kind, arg in ops:
+            try:
+                if kind == "alloc":
+                    fill += 1
+                    off = a.alloc(arg)
+                    a.view(off, arg, writeable=True)[:] = fill % 251
+                    live.append((off, arg, fill % 251))
+                elif kind == "free" and live:
+                    off, _, _ = live.pop(arg % len(live))
+                    a.free(off)
+                elif kind == "realloc" and live:
+                    i = arg % len(live)
+                    off, n, f = live[i]
+                    new_off = a.realloc(off, arg)
+                    live[i] = (new_off, min(n, arg), f)
+            except OutOfArenaMemory:
+                pass
+            # invariant: pairwise disjoint [off, off+n)
+            spans = sorted((off, off + a._live[off]) for off, _, _ in live)
+            for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+                assert e1 <= s2, "overlapping allocations"
+            # invariant: content preserved
+            for off, n, f in live:
+                assert np.all(a.view(off, n) == f), "clobbered block"
+    finally:
+        a.close()
+        a.unlink()

@@ -1,0 +1,119 @@
+"""Device page pool: the two-counter rule on HBM pages (prefix sharing etc.)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.device_arena import DevicePagePool, PoolExhausted
+
+
+def test_prefill_decode_handoff():
+    pool = DevicePagePool(num_pages=16, page_tokens=128)
+    pages = pool.alloc(pool.pages_for_tokens(1000))  # 8 pages
+    assert pages.shape == (8,)
+    pool.publish("req0/kv", pages, consumers=["decode"])
+    assert pool.free_pages == 8
+    got = pool.take("req0/kv", "decode")
+    assert np.array_equal(got, pages)
+    pool.release("req0/kv", "decode")
+    assert pool.free_pages == 16  # both counters zero -> freed
+
+
+def test_unreceived_consumer_blocks_free():
+    pool = DevicePagePool(8, 128)
+    pages = pool.alloc(4)
+    pool.publish("kv", pages, consumers=["decode", "spec_verify"])
+    pool.take("kv", "decode")
+    pool.release("kv", "decode")
+    assert pool.free_pages == 4  # spec_verify has not received yet
+    pool.take("kv", "spec_verify")
+    pool.release("kv", "spec_verify")
+    assert pool.free_pages == 8
+
+
+def test_prefix_sharing_pins_pages_once_per_publication():
+    pool = DevicePagePool(8, 128)
+    prefix = pool.alloc(2)
+    pool.publish("prefix", prefix, consumers=["seqA", "seqB"])
+    a = pool.take("prefix", "seqA")
+    b = pool.take("prefix", "seqB")
+    assert np.array_equal(a, b)
+    pool.release("prefix", "seqA")
+    assert pool.free_pages == 6
+    pool.release("prefix", "seqB")
+    assert pool.free_pages == 8
+
+
+def test_clone_increments_refcount():
+    pool = DevicePagePool(8, 128)
+    pages = pool.alloc(1)
+    pool.publish("kv", pages, consumers=["c"])
+    pool.take("kv", "c")
+    pool.clone("kv", "c")
+    pool.release("kv", "c")
+    assert pool.free_pages == 7  # one ref remains
+    pool.release("kv", "c")
+    assert pool.free_pages == 8
+
+
+def test_expire_consumer_janitor():
+    pool = DevicePagePool(8, 128)
+    pages = pool.alloc(4)
+    pool.publish("kv", pages, consumers=["dead", "alive"])
+    pool.take("kv", "dead")  # dead takes, then vanishes (request cancelled)
+    pool.take("kv", "alive")
+    pool.release("kv", "alive")
+    assert pool.free_pages == 4
+    freed = pool.expire_consumer("dead")
+    assert freed == 4 and pool.free_pages == 8
+
+
+def test_exhaustion_raises():
+    pool = DevicePagePool(4, 128)
+    pool.alloc(4)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(1, 4), st.integers(0, 2)),
+        max_size=40,
+    )
+)
+def test_property_pool_invariants(ops):
+    """Random publish/take/release/expire interleavings keep the pool's
+    accounting consistent and never double-free."""
+    pool = DevicePagePool(32, 128)
+    consumers = ["c0", "c1", "c2"]
+    keys: list[str] = []
+    ctr = 0
+    for kind, npages, ci in ops:
+        c = consumers[ci]
+        try:
+            if kind == 0:
+                pages = pool.alloc(npages)
+                key = f"k{ctr}"
+                ctr += 1
+                pool.publish(key, pages, consumers=[c, consumers[(ci + 1) % 3]])
+                keys.append(key)
+            elif kind == 1 and keys:
+                key = keys[npages % len(keys)]
+                if key in pool._pubs:
+                    pool.take(key, c)
+            elif kind == 2 and keys:
+                key = keys[npages % len(keys)]
+                if key in pool._pubs and c in pool._pubs[key].held:
+                    pool.release(key, c)
+            elif kind == 3:
+                pool.expire_consumer(c)
+        except PoolExhausted:
+            pass
+        pool.check_invariants()
+    # drain: expire everyone; all pages must come back
+    for c in consumers:
+        pool.expire_consumer(c)
+    pool.check_invariants()
+    assert pool.free_pages == 32

@@ -1,0 +1,173 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (hypothesis + parametrized grids)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
+from repro.kernels.ragged_concat.ops import ragged_concat, ragged_concat_ref
+from repro.kernels.rmsnorm.ops import fused_rmsnorm, rmsnorm_ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,sq,sk,hd,causal",
+    [
+        (2, 4, 2, 64, 64, 32, True),     # GQA causal
+        (1, 8, 1, 96, 96, 64, True),     # MQA causal
+        (2, 4, 4, 33, 47, 16, False),    # MHA non-causal ragged tiles
+        (1, 2, 2, 128, 256, 128, False), # long kv, MXU-aligned head
+        (1, 16, 2, 8, 8, 8, True),       # tiny
+    ],
+)
+def test_flash_attention_matches_oracle(b, h, kv, sq, sk, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sq=st.integers(1, 70), hd=st.sampled_from([8, 16, 32]),
+    g=st.sampled_from([1, 2, 4]), kv=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(sq, hd, g, kv, causal):
+    h = kv * g
+    ks = jax.random.split(jax.random.PRNGKey(sq * hd + g), 3)
+    q = jax.random.normal(ks[0], (1, h, sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (1, kv, sq, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (1, kv, sq, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,hd",
+    [(3, 8, 2, 512, 64), (1, 4, 4, 128, 32), (2, 8, 1, 1024, 128)],
+)
+def test_decode_attention_matches_oracle(b, h, kv, s, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    lens = jnp.linspace(1, s, b).astype(jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_s=128)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(lens=st.lists(st.integers(1, 200), min_size=1, max_size=4))
+def test_decode_attention_ragged_lengths(lens):
+    b = len(lens)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, 4, 16), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, 2, 256, 16), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, 2, 256, 16), jnp.float32)
+    la = jnp.array(lens, jnp.int32)
+    out = decode_attention(q, kc, vc, la, block_s=64)
+    ref = decode_attention_ref(q, kc, vc, la)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged concat
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lens=st.lists(st.integers(0, 16), min_size=1, max_size=6),
+    c=st.sampled_from([1, 4, 8]),
+)
+def test_ragged_concat_matches_oracle(lens, c):
+    n = len(lens)
+    src = jax.random.normal(jax.random.PRNGKey(n * c), (n, 16, c), jnp.float32)
+    la = jnp.array(lens, jnp.int32)
+    cap = int(sum(lens)) + 8
+    out, offs, total = ragged_concat(src, la, capacity=cap)
+    ref_out, ref_offs, ref_total = ragged_concat_ref(src, la, cap)
+    assert int(total) == int(ref_total) == sum(lens)
+    np.testing.assert_array_equal(np.asarray(offs), np.asarray(ref_offs))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out))
+
+
+def test_ragged_concat_dtype_sweep():
+    for dtype in (jnp.float32, jnp.bfloat16, jnp.int32, jnp.uint8):
+        src = (jnp.arange(2 * 8 * 4).reshape(2, 8, 4) % 127).astype(dtype)
+        la = jnp.array([3, 8], jnp.int32)
+        out, _, _ = ragged_concat(src, la, capacity=11)
+        ref, _, _ = ragged_concat_ref(src, la, 11)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 37, 64), (1, 256, 128), (5, 3, 32)])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    r = jax.random.normal(ks[1], shape, dtype)
+    sc = jax.random.normal(ks[2], (shape[-1],), jnp.float32)
+    y, h = fused_rmsnorm(x, r, sc, block_rows=16)
+    yr, hr = rmsnorm_ref(x, r, sc)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+    np.testing.assert_allclose(np.asarray(h, np.float32), np.asarray(hr, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# kernels vs the model layer (the math the system actually uses)
+# ---------------------------------------------------------------------------
+
+
+def test_flash_kernel_matches_model_attention():
+    """The Pallas kernel and models.attention implement the same math."""
+    from repro.models.attention import attention
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, kv, hd = 2, 64, 8, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    model_out = attention(q, k, v, causal=True, chunk=16)          # (B,S,H,hd)
+    kern_out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(kern_out.transpose(0, 2, 1, 3)),
+                               np.asarray(model_out), atol=3e-5, rtol=3e-5)

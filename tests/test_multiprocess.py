@@ -1,0 +1,145 @@
+"""Cross-process integration: true zero-copy IPC, crash cleanup, bridge."""
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+import pytest
+
+import _mp_helpers as H
+from repro.core import (
+    POINT_CLOUD2,
+    Bus,
+    BusClient,
+    Domain,
+    deserialize,
+    serialize,
+)
+
+pytestmark = pytest.mark.timeout if hasattr(pytest.mark, "__timeout__") else []
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return mp.get_context("spawn")
+
+
+def test_cross_process_delivery(ctx):
+    dom = Domain.create(arena_capacity=16 << 20)
+    try:
+        pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=8)
+        q = ctx.Queue()
+        p = ctx.Process(target=H.echo_subscriber, args=(dom.name, "pc", q, 5))
+        p.start()
+        assert q.get(timeout=15) == "ready"
+        for i in range(5):
+            m = pub.borrow_loaded_message()
+            m.data.extend(np.full(100, i, np.uint8))
+            pub.publish(m)
+            time.sleep(0.02)
+        sums = [q.get(timeout=15) for _ in range(5)]
+        assert sums == [0, 100, 200, 300, 400]
+        assert q.get(timeout=15) == "done"
+        p.join(timeout=10)
+        dom.sweep()
+        pub.reclaim()
+        assert dom.arena.live_bytes == 0
+    finally:
+        dom.close()
+
+
+def test_crashed_subscriber_references_released(ctx):
+    """The kernel-module exit-hook analogue: a subscriber SIGKILLed while
+    holding a message must not leak the payload (§IV-B/§IV-C)."""
+    dom = Domain.create(arena_capacity=16 << 20)
+    try:
+        pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=8)
+        q = ctx.Queue()
+        p = ctx.Process(target=H.crash_holding_subscriber, args=(dom.name, "pc", q))
+        p.start()
+        assert q.get(timeout=15) == "ready"
+        m = pub.borrow_loaded_message()
+        m.data.extend(np.zeros(4096, np.uint8))
+        pub.publish(m)
+        assert q.get(timeout=15) == "holding"
+        p.join(timeout=10)
+        time.sleep(0.2)
+        rep = dom.sweep()
+        assert rep["dead_subs"] >= 1
+        assert pub.reclaim() == 1
+        assert dom.arena.live_bytes == 0
+    finally:
+        dom.close()
+
+
+def test_subscribe_to_remote_publisher_zero_copy(ctx):
+    """Subscriber in THIS process reads payload bytes directly out of the
+    remote publisher's arena (no serialization anywhere)."""
+    dom = Domain.create(arena_capacity=8 << 20)
+    try:
+        sub = dom.create_subscription(POINT_CLOUD2, "pc")
+        q = ctx.Queue()
+        sizes = [10, 100_000, 1_000_000]
+        p = ctx.Process(target=H.remote_publisher, args=(dom.name, "pc", q, sizes))
+        p.start()
+        assert q.get(timeout=15) == "ready"
+        q.put("go")
+        got = []
+        t0 = time.time()
+        while len(got) < len(sizes) and time.time() - t0 < 20:
+            if sub.wait(0.5):
+                got.extend(sub.take())
+        assert [g.data.shape[0] for g in got] == sizes
+        for i, g in enumerate(got):
+            assert np.all(g.data == i % 251)
+            g.release()
+        q.put("done")
+        p.join(timeout=10)
+    finally:
+        dom.close()
+
+
+def test_bridge_relays_both_directions(ctx):
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=16 << 20)
+    try:
+        q = ctx.Queue()
+        bp = ctx.Process(target=H.bridge_runner, args=(dom.name, bus.path, "pc", q, 10.0))
+        bp.start()
+        assert q.get(timeout=15) == "ready"
+        time.sleep(0.3)
+
+        # Route 1: agnocast publisher -> bridge -> conventional subscriber
+        pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=8)
+        rosish = BusClient(bus.path)
+        rosish.subscribe("pc")
+        time.sleep(0.2)
+        m = pub.borrow_loaded_message()
+        m.data.extend(np.arange(64, dtype=np.uint8))
+        pub.publish(m)
+        got = rosish.recv(timeout=10)
+        assert got is not None
+        _, origin, payload = got
+        assert origin == 1  # bridge-tagged
+        assert np.array_equal(deserialize(payload)["data"], np.arange(64, dtype=np.uint8))
+
+        # Route 2: conventional publisher -> bridge -> agnocast subscriber
+        sub = dom.create_subscription(POINT_CLOUD2, "pc")
+        pm = POINT_CLOUD2.plain()
+        pm.data = np.full(32, 7, np.uint8)
+        rosish.publish("pc", serialize(pm), origin=0)
+        msgs = []
+        t0 = time.time()
+        while not msgs and time.time() - t0 < 10:
+            sub.wait(0.5)
+            msgs = sub.take()
+        assert msgs and np.array_equal(msgs[0].data, np.full(32, 7, np.uint8))
+        for x in msgs:
+            x.release()
+
+        counts = q.get(timeout=15)
+        assert counts[0] == "counts" and counts[1] >= 1 and counts[2] >= 1
+        bp.join(timeout=10)
+    finally:
+        dom.close()
+        bus.stop()

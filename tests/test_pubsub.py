@@ -1,0 +1,174 @@
+"""Pub/sub semantics in-process: unsized growth, smart pointer, zero-copy."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    POINT_CLOUD2,
+    TOKEN_BATCH,
+    Domain,
+    deserialize,
+    serialize,
+)
+
+
+@pytest.fixture()
+def dom():
+    d = Domain.create(arena_capacity=16 << 20)
+    yield d
+    d.close()
+
+
+def test_unsized_growth_then_publish(dom):
+    """The paper's requirement #1: reallocation at arbitrary times
+    (push_back) must be legal right up to publish."""
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    for i in range(1000):  # forces multiple reallocations
+        m.data.push_back(i % 256)
+    m.data.extend(np.arange(500) % 256)
+    m.set("width", 1500)
+    pub.publish(m)
+    (ptr,) = sub.take()
+    assert ptr.data.shape == (1500,)
+    assert ptr.data[999] == 999 % 256 and ptr.data[1000] == 0
+    ptr.release()
+
+
+def test_zero_copy_views_alias_publisher_memory(dom):
+    """True zero-copy: the subscriber's array IS the publisher's bytes."""
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.zeros(16, np.uint8))
+    data_off = m.data.offset
+    pub.publish(m)
+    (ptr,) = sub.take()
+    base_pub = dom.arena._buf[data_off : data_off + 16]
+    assert np.shares_memory(ptr.data, base_pub)
+    ptr.release()
+
+
+def test_publish_is_move(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.zeros(8, np.uint8))
+    pub.publish(m)
+    with pytest.raises(AttributeError):
+        _ = m.data  # loan invalidated: rvalue semantics (§VII-A)
+
+
+def test_smart_pointer_two_counter_rule(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.zeros(64, np.uint8))
+    pub.publish(m)
+    assert pub.reclaim() == 0  # unreceived != 0
+    (ptr,) = sub.take()
+    assert pub.reclaim() == 0  # held != 0
+    c1 = ptr.clone()
+    c2 = c1.clone()
+    ptr.release()
+    c1.release()
+    assert pub.reclaim() == 0  # c2 still holds
+    c2.release()
+    assert pub.reclaim() == 1  # both counters zero -> freed by owner
+    assert dom.arena.live_bytes == 0
+
+
+def test_gc_releases_reference(dom):
+    import gc
+
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.zeros(8, np.uint8))
+    pub.publish(m)
+    ptrs = sub.take()
+    del ptrs  # dropped without explicit release
+    gc.collect()
+    assert pub.reclaim() == 1
+
+
+def test_use_after_release_raises(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.zeros(8, np.uint8))
+    pub.publish(m)
+    (ptr,) = sub.take()
+    ptr.release()
+    with pytest.raises(ValueError):
+        ptr.clone()
+
+
+def test_two_subscribers_both_receive(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=4)
+    s1 = dom.create_subscription(POINT_CLOUD2, "pc")
+    s2 = dom.create_subscription(POINT_CLOUD2, "pc")
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.arange(10, dtype=np.uint8))
+    pub.publish(m)
+    (p1,) = s1.take()
+    assert pub.reclaim() == 0  # s2 has not received yet (unreceived count!)
+    (p2,) = s2.take()
+    assert np.array_equal(p1.data, p2.data)
+    p1.release()
+    p2.release()
+    assert pub.reclaim() == 1
+
+
+def test_token_batch_message(dom):
+    pub = dom.create_publisher(TOKEN_BATCH, "batch", depth=4)
+    sub = dom.create_subscription(TOKEN_BATCH, "batch")
+    m = pub.borrow_loaded_message()
+    m.tokens.extend(np.arange(4096, dtype=np.int32))
+    m.row_lengths.extend(np.array([1024, 1024, 2048], np.int32))
+    m.set("step", 17)
+    pub.publish(m)
+    (ptr,) = sub.take()
+    assert ptr.tokens.dtype == np.int32 and ptr.tokens.shape == (4096,)
+    assert int(ptr.get("step")) == 17
+    assert ptr.row_lengths.sum() == 4096
+    ptr.release()
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(0, 4000), min_size=1, max_size=8))
+def test_property_publish_take_roundtrip(sizes):
+    """Any sequence of unsized payloads round-trips bit-exactly, and the
+    arena returns to empty after release+reclaim (no leaks)."""
+    with Domain.create(arena_capacity=32 << 20) as dom:
+        pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=16)
+        sub = dom.create_subscription(POINT_CLOUD2, "pc")
+        payloads = []
+        for i, n in enumerate(sizes):
+            m = pub.borrow_loaded_message()
+            data = (np.arange(n) * (i + 1) % 256).astype(np.uint8)
+            m.data.extend(data)
+            m.set("width", n)
+            payloads.append(data)
+            pub.publish(m)
+        ptrs = sub.take()
+        assert len(ptrs) == len(sizes)
+        for ptr, want in zip(ptrs, payloads):
+            assert np.array_equal(ptr.data, want)
+            ptr.release()
+        pub.reclaim()
+        assert dom.arena.live_bytes == 0
+
+
+def test_serialization_roundtrip_all_dtypes():
+    m = TOKEN_BATCH.plain()
+    m.tokens = np.arange(100, dtype=np.int32)
+    m.row_lengths = np.array([50, 50], np.int32)
+    m.stamp = 3.25
+    m.epoch = 2
+    m.step = 9
+    out = deserialize(serialize(m))
+    assert np.array_equal(out["tokens"], m.tokens)
+    assert out["stamp"][0] == 3.25 and out["step"][0] == 9

@@ -1,0 +1,141 @@
+"""Registry transactionality: the kernel-module-analogue guarantees."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import AgnocastQueueFull, Registry
+from repro.core.registry import ST_FREE, ST_USED, _J_PENDING
+
+
+@pytest.fixture()
+def reg():
+    r = Registry.create()
+    yield r
+    r.close()
+    r.unlink()
+
+
+def test_topic_index_idempotent(reg):
+    t1 = reg.topic_index("a")
+    t2 = reg.topic_index("b")
+    assert t1 != t2
+    assert reg.topic_index("a") == t1
+
+
+def test_publish_take_release_lifecycle(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "arena0", depth=4)
+    s = reg.add_subscriber(t, os.getpid())
+    seq, freeable = reg.publish(t, p, 100, 10)
+    assert seq == 1 and freeable == []
+    got = reg.take(t, s)
+    assert len(got) == 1 and got[0].seq == 1 and got[0].desc_off == 100
+    assert reg.take(t, s) == []  # delivered exactly once
+    assert reg.reclaimable(t, p) == []  # still held
+    reg.release(t, p, s, seq)
+    assert reg.reclaimable(t, p) == [1]  # both counters zero -> owner may free
+
+
+def test_late_subscriber_does_not_receive_old(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "arena0", depth=4)
+    reg.publish(t, p, 1, 1)
+    s = reg.add_subscriber(t, os.getpid())
+    assert reg.take(t, s) == []  # unreceived mask snapshot at publish
+
+
+def test_qos_keep_last_drops_unreceived(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=2)
+    s = reg.add_subscriber(t, os.getpid())
+    reg.publish(t, p, 1, 1)   # seq 1
+    reg.publish(t, p, 2, 1)   # seq 2
+    _, freeable = reg.publish(t, p, 3, 1)  # seq 3 evicts unreceived seq 1
+    assert 1 in freeable
+    got = reg.take(t, s)
+    assert [e.seq for e in got] == [2, 3]
+    assert reg.stats(t)["drops"][p] == 1
+
+
+def test_queue_full_when_all_held(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=2)
+    s = reg.add_subscriber(t, os.getpid())
+    reg.publish(t, p, 1, 1)
+    reg.publish(t, p, 2, 1)
+    reg.take(t, s)  # subscriber now holds every ring slot
+    with pytest.raises(AgnocastQueueFull):
+        reg.publish(t, p, 3, 1)
+
+
+def test_exclude_sub_skips_origin(reg):
+    # the bridge publishes with exclude_sub=its own slot (loop prevention)
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=4)
+    s_bridge = reg.add_subscriber(t, os.getpid())
+    s_app = reg.add_subscriber(t, os.getpid())
+    reg.publish(t, p, 1, 1, exclude_sub=s_bridge)
+    assert reg.take(t, s_bridge) == []
+    assert len(reg.take(t, s_app)) == 1
+
+
+def test_journal_rollback_restores_before_image(reg):
+    """Simulate a participant dying mid-mutation: PENDING journal from a
+    dead pid must be rolled back by the next lock acquirer (§IV-B)."""
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=4)
+    reg.publish(t, p, 123, 9)
+    entry_before = reg.entries[t, p, 1 % 4].copy()
+    # forge a dead writer's in-flight mutation
+    j = reg._journal[0]
+    j["pid"] = 2**22 + 12345  # certainly-dead pid
+    j["tidx"], j["pidx"], j["slot"] = t, p, 1 % 4
+    j["has_topic"], j["has_entry"] = 0, 1
+    j["entry_img"] = entry_before.tobytes()
+    j["state"] = _J_PENDING
+    reg.entries[t, p, 1 % 4]["desc_off"] = 999  # the torn write
+    reg.topic_index("x")  # any op triggers recovery
+    assert int(reg.entries[t, p, 1 % 4]["desc_off"]) == 123  # rolled back
+
+
+def test_sweep_releases_dead_subscriber_refs(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=4)
+    dead_pid = 2**22 + 54321
+    with reg._lock:
+        with reg._Txn(reg, t, topic=True):
+            reg.topics[t]["sub_pids"][0] = dead_pid
+            reg.topics[t]["sub_alive"] = np.uint64(1)
+    reg.publish(t, p, 1, 1)
+    assert reg.reclaimable(t, p) == []  # unreceived by "dead" sub
+    rep = reg.sweep()
+    assert rep["dead_subs"] == 1
+    assert reg.reclaimable(t, p) == [1]
+
+
+def test_sweep_marks_dead_publisher(reg):
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, 2**22 + 999, "ghost-arena", depth=4)
+    rep = reg.sweep()
+    assert rep["dead_pubs"] == 1
+    assert "ghost-arena" in rep["orphan_arenas"]
+    assert not reg.topics[t]["pub_alive"][p]
+
+
+def test_attach_rejects_non_registry():
+    r = Registry.create()
+    try:
+        import multiprocessing.shared_memory as sm
+
+        seg = sm.SharedMemory(create=True, size=1 << 20)
+        try:
+            with pytest.raises(Exception):
+                Registry.attach(seg.name)
+        finally:
+            seg.close()
+            seg.unlink()
+    finally:
+        r.close()
+        r.unlink()
