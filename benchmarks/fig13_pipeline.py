@@ -1,6 +1,9 @@
 """Fig. 13: Autoware LiDAR-preprocessing response time, before/after.
 
-Runs the 3-LiDAR × 4-stage chain (repro.apps.pointcloud) twice:
+Runs the 3-LiDAR × 4-stage chain (repro.apps.pointcloud) twice; the
+concatenate node runs on the event-driven ``EventExecutor`` (one epoll loop
+over all LiDAR edges — agnocast wakeup FIFOs and the bus socket — no
+busy-polling):
 
 * baseline — every LiDAR→concatenate edge on the serialized bus;
 * agnocast — ONLY the Top-LiDAR edge converted (the paper converts the one

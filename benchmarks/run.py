@@ -17,7 +17,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="minimal sizes (CI)")
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
-    ap.add_argument("--only", default="", help="comma list: fig9,fig10,fig11,fig13,roofline")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig9,fig10,fig11,fig12,fig13,roofline")
     args = ap.parse_args(argv)
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
@@ -44,6 +45,12 @@ def main(argv=None) -> int:
         from benchmarks import fig11_bridge
         sizes = ({"100KB": 100 << 10, "1MB": 1 << 20} if args.quick else None)
         fig11_bridge.main(n_msgs=n11, sizes=sizes)
+    if want("fig12"):
+        from benchmarks import fig12_executor
+        n12 = 60 if args.full else (8 if args.quick else 30)
+        sizes = ({"1KB": 1 << 10, "1MB": 1 << 20} if args.quick else None)
+        ks = (1, 4) if args.quick else fig12_executor.FANIN_KS
+        fig12_executor.main(n_msgs=n12, sizes=sizes, ks=ks)
     if want("fig13"):
         from benchmarks import fig13_pipeline
         fig13_pipeline.main(frames=nf)

@@ -1,7 +1,10 @@
-"""Serving driver: continuous batching + device-arena KV hand-off.
+"""Serving driver: event-driven ingest + device-arena KV hand-off.
 
-Batched requests with unsized prompts flow through the continuous-batching
-server; prefill publishes each request's KV pages into the device page
+Requests with unsized prompts are published as ``TOKEN_BATCH`` messages on
+an agnocast topic; the server runs on an :class:`EventExecutor` — the
+subscription callback admits requests (zero-copy read of the token field
+out of the publisher's arena) and a timer drives continuous-batching
+rounds. Prefill publishes each request's KV pages into the device page
 pool, decode subscribes, and the two-counter rule frees pages exactly when
 the last consumer lets go. A mid-flight cancellation exercises the janitor.
 
@@ -9,13 +12,15 @@ the last consumer lets go. A mid-flight cancellation exercises the janitor.
 """
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
+from repro.core import TOKEN_BATCH, Domain, EventExecutor
 from repro.launch.train import model_100m
 from repro.models import Model
-from repro.runtime import InferenceServer, Request
+from repro.runtime import InferenceServer
 
 
 def main() -> None:
@@ -31,28 +36,53 @@ def main() -> None:
     server = InferenceServer(model, slots=4, max_seq=256)
     server.load(model.init(jax.random.PRNGKey(0)))
 
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        server.submit(Request(rid=f"req-{i}",
-                              tokens=rng.integers(0, cfg.vocab_size,
-                                                  int(rng.integers(4, 48))),
-                              max_new=args.max_new))
+    with Domain.create(arena_capacity=8 << 20) as dom:
+        pub = dom.create_publisher(TOKEN_BATCH, "serve/requests", depth=8)
+        sub = dom.create_subscription(TOKEN_BATCH, "serve/requests")
+        ex = EventExecutor(name="serve")
+        server.attach_executor(ex, sub, max_new=args.max_new)
 
-    # admit the first wave, then cancel one mid-decode (janitor demo)
-    server._admit()
-    server._decode_round()
-    victim = next(iter(server._active.values()))["req"].rid
-    print(f"[serve] cancelling {victim} mid-decode "
-          f"(pages before: {server.pool.free_pages} free)")
-    server.cancel(victim)
-    print(f"[serve] janitor reclaimed its pages "
-          f"(pages after: {server.pool.free_pages} free)")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)),
+                                dtype=np.int32)
+                   for _ in range(args.requests)]
+        # publish in a few unsized batches (ragged rows, one publish each)
+        for chunk in np.array_split(np.arange(args.requests), 3):
+            m = pub.borrow_loaded_message()
+            for i in chunk:
+                m.tokens.extend(prompts[i])
+                m.row_lengths.extend(np.array([len(prompts[i])], np.int32))
+            m.set("stamp", time.monotonic())
+            pub.publish(m)
 
-    results = server.serve()
-    done = [r for r in results.values()]
-    print(f"[serve] completed {len(done)} requests, "
-          f"mean latency {1e3*np.mean([r.latency for r in done]):.1f} ms, "
-          f"mean ttft {1e3*np.mean([r.ttft for r in done]):.1f} ms")
+        # spin until the first wave is mid-decode, then cancel one (janitor demo)
+        ex.spin(until=lambda: len(server._active) > 0, timeout=60)
+        if not server._active:
+            raise RuntimeError("demo timed out before any request was admitted")
+        victim = next(iter(server._active.values()))["req"].rid
+        print(f"[serve] cancelling {victim} mid-decode "
+              f"(pages before: {server.pool.free_pages} free)")
+        server.cancel(victim)
+        print(f"[serve] janitor reclaimed its pages "
+              f"(pages after: {server.pool.free_pages} free)")
+
+        done = args.requests - 1  # one cancelled
+        ex.spin(until=lambda: len(server.results) >= done and server.idle,
+                timeout=120)
+        ex.shutdown()
+        if len(server.results) < done or not server.idle:
+            raise RuntimeError(
+                f"demo timed out mid-decode: {len(server.results)}/{done} "
+                f"done, {len(server._active)} active")
+        pub.reclaim()
+
+    results = list(server.results.values())
+    if results:
+        print(f"[serve] completed {len(results)} requests, "
+              f"mean latency {1e3*np.mean([r.latency for r in results]):.1f} ms, "
+              f"mean ttft {1e3*np.mean([r.ttft for r in results]):.1f} ms")
+    else:
+        print("[serve] completed 0 requests (all cancelled)")
     st = server.stats()
     assert st["live_publications"] == 0 and st["free_pages"] == server.pool.num_pages
     print("[serve] pool clean after serving — no leaked pages/publications")

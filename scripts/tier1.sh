@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the gate every PR must keep green (see ROADMAP.md).
+# Usage: scripts/tier1.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TIMEOUT="${TIER1_TIMEOUT:-3600}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec timeout "$TIMEOUT" python -m pytest -x -q "$@"

@@ -34,6 +34,7 @@ from repro.core import (
     Bus,
     BusClient,
     Domain,
+    EventExecutor,
     deserialize,
     serialize,
 )
@@ -189,45 +190,22 @@ def _lidar_proc(spec: LidarSpec, frames: int, transport: str, dom_name: str,
 def _concat_proc(lidars: tuple[LidarSpec, ...], frames: int,
                  edge_transport: dict[str, str], dom_name: str, bus_path: str,
                  out_q) -> None:
-    """The concatenate node: sync one frame from each LiDAR, merge, stamp."""
+    """The concatenate node: sync one frame from each LiDAR, merge, stamp.
+
+    Event-driven (no busy-polling): one :class:`EventExecutor` multiplexes
+    every agnocast wakeup FIFO and the bus socket; each arrival callback
+    appends to the frame-sync buffer and merges as soon as all LiDARs have a
+    pending frame — the ROS 2 single-threaded-executor shape of the paper's
+    Autoware pipeline.
+    """
     agno_names = [l.name for l in lidars if edge_transport[l.name] == "agnocast"]
     bus_names = [l.name for l in lidars if edge_transport[l.name] == "bus"]
-    dom = subs = None
-    if agno_names:
-        dom = Domain.join(dom_name, publisher=False)
-        subs = {n: dom.create_subscription(POINT_CLOUD2,
-                                           f"sensing/{n}/filtered")
-                for n in agno_names}
-    cli = None
-    if bus_names:
-        cli = BusClient(bus_path)
-        for n in bus_names:
-            cli.subscribe(f"sensing/{n}/filtered")
 
     pending: dict[str, list] = {l.name: [] for l in lidars}
-    response_times = []
-    merged_points = []
-    deadline = time.monotonic() + max(60.0, frames * 2.0)
-    while len(response_times) < frames and time.monotonic() < deadline:
-        progress = False
-        if subs:
-            for n, sub in subs.items():
-                for ptr in sub.take():
-                    cloud = np.asarray(ptr.msg.data).view(np.float32)
-                    cloud = cloud.reshape(-1, _FIELDS).copy()
-                    pending[n].append((float(ptr.msg.get("stamp")), cloud))
-                    ptr.release()
-                    progress = True
-        if cli:
-            got = cli.recv(timeout=0.0 if progress else 0.002)
-            while got is not None:
-                topic, _origin, payload = got
-                n = topic.split("/")[1]
-                f = deserialize(payload)       # deserialization: O(bytes)
-                cloud = f["data"].view(np.float32).reshape(-1, _FIELDS)
-                pending[n].append((float(f["stamp"][0]), cloud))
-                progress = True
-                got = cli.recv(timeout=0.0)
+    response_times: list[float] = []
+    merged_points: list[int] = []
+
+    def merge_ready() -> None:
         # frame sync: merge when every lidar has one pending
         while all(pending[l.name] for l in lidars):
             stamps, clouds = zip(*(pending[l.name].pop(0) for l in lidars))
@@ -235,8 +213,40 @@ def _concat_proc(lidars: tuple[LidarSpec, ...], frames: int,
             merged_points.append(len(merged))
             top_stamp = stamps[0]                       # lidars[0] is Top
             response_times.append(time.monotonic() - top_stamp)
-        if not progress:
-            time.sleep(0.0005)
+
+    ex = EventExecutor(name="concatenate")
+    dom = None
+    if agno_names:
+        dom = Domain.join(dom_name, publisher=False)
+        for n in agno_names:
+            sub = dom.create_subscription(POINT_CLOUD2,
+                                          f"sensing/{n}/filtered")
+
+            def on_cloud(ptr, n=n):
+                cloud = np.asarray(ptr.msg.data).view(np.float32)
+                cloud = cloud.reshape(-1, _FIELDS).copy()
+                pending[n].append((float(ptr.msg.get("stamp")), cloud))
+                merge_ready()
+
+            ex.add_subscription(sub, on_cloud)
+    cli = None
+    if bus_names:
+        cli = BusClient(bus_path)
+        for n in bus_names:
+            cli.subscribe(f"sensing/{n}/filtered")
+
+        def on_frame(topic, _origin, payload):
+            n = topic.split("/")[1]
+            f = deserialize(payload)           # deserialization: O(bytes)
+            cloud = f["data"].view(np.float32).reshape(-1, _FIELDS)
+            pending[n].append((float(f["stamp"][0]), cloud))
+            merge_ready()
+
+        ex.add_bus_client(cli, on_frame)
+
+    ex.spin(until=lambda: len(response_times) >= frames,
+            timeout=max(60.0, frames * 2.0))
+    ex.shutdown()
     out_q.put((response_times, merged_points))
     if dom is not None:
         dom.close()

@@ -10,6 +10,11 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
 * :mod:`repro.core.smart_ptr` — the two-counter smart pointer (§IV-C);
 * :mod:`repro.core.topic` — ``create_publisher`` / ``create_subscription``
   / ``borrow_loaded_message`` / move-``publish`` (Fig. 2 API);
+* :mod:`repro.core.executor` — the ROS 2 executor-layer analogue: an
+  epoll-based event loop multiplexing subscription wakeup FIFOs, bus
+  sockets, bridges, and timers into callback groups (mutually-exclusive /
+  reentrant), with batched zero-copy takes and deterministic
+  ``MessagePtr`` release on unregister/shutdown;
 * :mod:`repro.core.bridge` — selective-adoption bridge to conventional
   middleware (§IV-D);
 * :mod:`repro.core.transport` — conventional baselines (serialized bus =
@@ -20,6 +25,12 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
 
 from .arena import AllocRef, Arena, ArenaError, OutOfArenaMemory
 from .bridge import Bridge
+from .executor import (
+    CallbackGroup,
+    EventExecutor,
+    MutuallyExclusiveCallbackGroup,
+    ReentrantCallbackGroup,
+)
 from .messages import (
     BYTES_BLOB,
     POINT_CLOUD2,
@@ -59,4 +70,6 @@ __all__ = [
     "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
     "MessagePtr", "Domain", "Publisher", "Subscription",
     "Bus", "BusClient", "ShmRing", "Bridge",
+    "EventExecutor", "CallbackGroup",
+    "MutuallyExclusiveCallbackGroup", "ReentrantCallbackGroup",
 ]

@@ -97,17 +97,17 @@ class Bridge:
             # latency to the other direction).
             import select as _select
 
-            r, _, _ = _select.select([self.sub._fifo, self.bus._sock], [], [],
-                                     timeout)
-            if self.sub._fifo in r:
-                import os as _os
-
-                try:
-                    _os.read(self.sub._fifo, 4096)  # drain wake tokens
-                except OSError:
-                    pass
+            r, _, _ = _select.select([self.sub, self.bus], [], [], timeout)
+            if self.sub in r:
+                self.sub.drain_wakeups()
             moved = self.pump_agnocast() + self.pump_bus(0.0)
         return moved
+
+    def register(self, executor, *, group=None):
+        """Run this bridge on an :class:`repro.core.executor.EventExecutor`:
+        both planes' fds are multiplexed into the loop and each readable
+        event triggers the matching pump.  Returns the executor handle."""
+        return executor.add_bridge(self, group=group)
 
     def close(self) -> None:
         self.bus.close()

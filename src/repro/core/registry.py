@@ -400,28 +400,36 @@ class Registry:
                 t["pub_next_seq"][pidx] = seq + 1
         return seq, freeable
 
-    def take(self, tidx: int, sidx: int) -> list[Entry]:
-        """Claim all unreceived entries for subscriber ``sidx`` (clears the
-        unreceived bit, sets the held bit — refcount acquisition)."""
+    def take(self, tidx: int, sidx: int, limit: int | None = None) -> list[Entry]:
+        """Claim unreceived entries for subscriber ``sidx`` (clears the
+        unreceived bit, sets the held bit — refcount acquisition).
+
+        ``limit`` bounds the batch (executor ``take_all`` drains up to the
+        queue depth per wakeup); entries beyond it stay unreceived and are
+        claimed by a later call.  Lowest sequence numbers are claimed first.
+        """
         got: list[Entry] = []
         bit = np.uint64(1 << sidx)
         with self._lock:
             self._recover()
+            cands: list[tuple[int, int, int]] = []
             for pidx in range(MAX_PUBS):
                 ring = self.entries[tidx, pidx]
                 mask = (ring["state"] == ST_USED) & ((ring["unreceived"] & bit) != 0)
-                slots = np.nonzero(mask)[0]
-                order = np.argsort(ring["seq"][slots]) if len(slots) else []
-                for s in (slots[i] for i in order):
-                    with self._Txn(self, tidx, pidx, int(s), entry=True):
-                        e = ring[int(s)]
-                        e["unreceived"] = np.uint64(int(e["unreceived"]) & ~int(bit))
-                        e["held"] = np.uint64(int(e["held"]) | int(bit))
-                        got.append(
-                            Entry(int(e["seq"]), int(e["desc_off"]), int(e["desc_len"]),
-                                  int(e["origin"]), pidx)
-                        )
-        got.sort(key=lambda en: en.seq)
+                for s in np.nonzero(mask)[0]:
+                    cands.append((int(ring[int(s)]["seq"]), pidx, int(s)))
+            cands.sort()
+            if limit is not None:
+                cands = cands[:max(limit, 0)]
+            for seq, pidx, s in cands:
+                with self._Txn(self, tidx, pidx, s, entry=True):
+                    e = self.entries[tidx, pidx, s]
+                    e["unreceived"] = np.uint64(int(e["unreceived"]) & ~int(bit))
+                    e["held"] = np.uint64(int(e["held"]) | int(bit))
+                    got.append(
+                        Entry(seq, int(e["desc_off"]), int(e["desc_len"]),
+                              int(e["origin"]), pidx)
+                    )
         return got
 
     def release(self, tidx: int, pidx: int, sidx: int, seq: int) -> None:

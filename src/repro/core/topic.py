@@ -234,12 +234,13 @@ class Subscription:
             pass
         self._fifo = os.open(path, os.O_RDONLY | os.O_NONBLOCK)
         self._arenas: dict[int, str] = {}
+        self.hung_up = False  # EOF seen: no publisher holds the write end
 
     # -- zero-copy take -------------------------------------------------------------
 
-    def take(self) -> list[MessagePtr]:
+    def take(self, limit: int | None = None) -> list[MessagePtr]:
         out: list[MessagePtr] = []
-        entries = self.dom.registry.take(self.tidx, self.sidx)
+        entries = self.dom.registry.take(self.tidx, self.sidx, limit)
         if not entries:
             return out
         pubs = dict(self.dom.registry.publishers(self.tidx))
@@ -254,13 +255,46 @@ class Subscription:
             out.append(MessagePtr.first(msg, self.dom.registry, self.tidx, self.sidx, e))
         return out
 
+    # -- event-loop surface (consumed by repro.core.executor) -----------------------
+
+    def fileno(self) -> int:
+        """The wakeup FIFO's read end — selectable by an event loop."""
+        return self._fifo
+
+    def drain_wakeups(self) -> int:
+        """Consume pending one-byte wake tokens without blocking.
+
+        Sets :attr:`hung_up` when the pipe is at EOF — every publisher that
+        ever opened the write end has closed it, which leaves the fd
+        *permanently* select-readable (POLLHUP); event loops must stop
+        level-polling it until a writer may have returned.
+        """
+        n = 0
+        self.hung_up = False
+        try:
+            while True:
+                chunk = os.read(self._fifo, 4096)
+                if not chunk:
+                    self.hung_up = True
+                    break
+                n += len(chunk)
+        except BlockingIOError:
+            pass
+        except OSError:
+            pass
+        return n
+
+    def take_all(self, limit: int | None = None) -> list[MessagePtr]:
+        """Batched zero-copy take for one wakeup: drain the FIFO, then claim
+        up to ``limit`` descriptors (``None`` = everything pending, which the
+        keep-last QoS bounds at ``depth`` per publisher)."""
+        self.drain_wakeups()
+        return self.take(limit)
+
     def wait(self, timeout: float | None = None) -> bool:
         r, _, _ = select.select([self._fifo], [], [], timeout)
         if r:
-            try:
-                os.read(self._fifo, 4096)  # drain wake tokens
-            except OSError:
-                pass
+            self.drain_wakeups()
             return True
         return False
 

@@ -120,6 +120,10 @@ class BusClient:
         self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self._sock.connect(path)
 
+    def fileno(self) -> int:
+        """The bus socket fd — selectable by an event loop (executor bridge)."""
+        return self._sock.fileno()
+
     def subscribe(self, topic: str) -> None:
         body = b"\x01" + topic.encode()
         self._sock.sendall(_FRAME.pack(len(body)) + body)

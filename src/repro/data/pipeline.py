@@ -195,6 +195,10 @@ class ZeroCopyPipeline:
         return True
 
     def next_batch(self, timeout: float = 30.0):
+        # heartbeat first: a dead stage is respawned before we wait on it
+        # (buffered messages from the dead publisher are swept, not served —
+        # their arena has no owner left to reclaim them)
+        self.ensure_alive()
         try:
             b = self.feeder.next_batch(timeout=min(timeout, 5.0))
         except TimeoutError:

@@ -24,8 +24,11 @@ class HW:
 
 def _mk(shape, axes):
     try:
-        return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:  # jax < 0.5: no AxisType, axes are auto by default
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
     except TypeError:  # older jax: no axis_types kwarg
         return jax.make_mesh(shape, axes)
 

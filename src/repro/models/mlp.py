@@ -18,9 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
-
-from repro.sharding import active
+from repro.sharding import active, shard_map
 
 __all__ = ["gated_mlp", "moe_ffn", "init_mlp", "init_moe"]
 
@@ -242,7 +240,7 @@ def _moe_serving(params, x, *, cfg, ctx):
                   P("model", None, ef_spec), P("model", None, ef_spec),
                   P("model", ef_spec, None)),
         out_specs=(P(bax, None, None), P(bax)),
-        check_vma=False,
+        check_rep=False,
     )(x, router, e_gate, e_up, e_down)
     return out, jnp.mean(aux)
 
@@ -298,7 +296,7 @@ def moe_ffn(params, x, *, cfg):
                       P("model", None, None), P("model", None, None),
                       P("model", None, None)),
             out_specs=(P(batch_axes, None, None), P(batch_axes)),
-            check_vma=False,
+            check_rep=False,
         )(x, router, e_gate, e_up, e_down)
         aux = jnp.mean(aux)
     else:

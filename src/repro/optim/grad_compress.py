@@ -7,7 +7,7 @@ inter-pod links, so we compress it 4× (bf16 grads → int8 + one f32 scale
 per tensor) with error feedback so the quantization bias does not
 accumulate (Karimireddy et al.-style EF-SGD memory).
 
-Mechanics: the train step is wrapped in ``jax.shard_map(...,
+Mechanics: the train step is wrapped in ``shard_map(...,
 axis_names={"pod"})`` — the ``pod`` axis becomes *manual* (we own its
 collectives) while ``data``/``model`` stay auto (XLA keeps sharding the
 per-pod computation). Inside, the cross-pod sum of a tensor ``g`` is::
@@ -32,6 +32,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.sharding import shard_map
 
 __all__ = ["ef_int8_psum", "tree_ef_int8_psum", "init_error_state",
            "make_hierarchical_train_step"]
@@ -114,10 +116,10 @@ def make_hierarchical_train_step(model, opt, mesh, *, compress: bool = True):
         err_specs = jax.tree.map(lambda _: P("pod"), ef_error)
         batch_specs_ = jax.tree.map(lambda _: P("pod"), batch)
         metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
-        f = jax.shard_map(per_pod, mesh=mesh,
-                          in_specs=(state_specs, err_specs, batch_specs_),
-                          out_specs=(state_specs, err_specs, metric_specs),
-                          axis_names={"pod"}, check_vma=False)
+        f = shard_map(per_pod, mesh=mesh,
+                      in_specs=(state_specs, err_specs, batch_specs_),
+                      out_specs=(state_specs, err_specs, metric_specs),
+                      axis_names={"pod"}, check_rep=False)
         return f(state, ef_error, batch)
 
     return step

@@ -15,6 +15,12 @@ The decode cache is slot-contiguous ``(L, B_slots, S_max, KV, hd)``; pool
 pages map 1:1 onto fixed-size token ranges of a slot. On TPU the same
 metadata drives a paged Pallas decode kernel (the gather never
 materializes); on CPU the contiguous layout is the fast path.
+
+Request ingest is event-driven when wired to a topic: ``attach_executor``
+registers a ``TOKEN_BATCH`` subscription's wakeup FIFO plus a decode-round
+timer on an :class:`repro.core.executor.EventExecutor` (one mutually-
+exclusive group, so ingest callbacks and decode rounds never interleave on
+the server's mutable state), replacing any need to busy-poll the queue.
 """
 
 from __future__ import annotations
@@ -67,6 +73,7 @@ class InferenceServer:
         self._prefill = None
         self._decode = None
         self.steps = 0
+        self._ingest_seq = 0  # server-wide: message seqs are per-publisher
 
     # -- setup ---------------------------------------------------------------
 
@@ -165,6 +172,71 @@ class InferenceServer:
             self._decode_round()
             rounds += 1
         return self.results
+
+    # -- event-driven ingest (the executor-layer wiring) -------------------------
+
+    def ingest_message(self, ptr, *, max_new: int = 16) -> int:
+        """Decode-side ingest of one ``TOKEN_BATCH`` message: each ragged row
+        becomes one :class:`Request`.  The flat token field is read zero-copy
+        out of the publisher's arena; only the per-request prompt slice is
+        copied (it must outlive the released ``MessagePtr``)."""
+        lens = np.asarray(ptr.row_lengths, np.int64)
+        flat = np.asarray(ptr.tokens, np.int32)
+        stamp = float(ptr.get("stamp"))
+        off = 0
+        for n in lens:
+            n = int(n)
+            # rid from a server-wide counter: registry seqs restart at 1 for
+            # every publisher, so seq-derived rids collide across clients
+            self._ingest_seq += 1
+            req = Request(rid=f"ingest-{self._ingest_seq}",
+                          tokens=flat[off:off + n].copy(), max_new=max_new)
+            if stamp > 0:
+                req.stamp = stamp
+            self.submit(req)
+            off += n
+        return len(lens)
+
+    def step_rounds(self) -> None:
+        """One admission + decode round (the executor timer's callback)."""
+        self._admit()
+        self._decode_round()
+
+    def attach_executor(self, executor, sub, *, group=None, max_new: int = 16,
+                        round_period_s: float = 0.0005):
+        """Run this server on an :class:`~repro.core.executor.EventExecutor`:
+        request messages arriving on ``sub`` are admitted by the subscription
+        callback; a oneshot round timer is armed only while work is pending
+        (an idle server sleeps on epoll instead of ticking at 1/period).
+        Everything shares one mutually-exclusive callback group so server
+        state is never mutated concurrently.  Returns the subscription
+        handle."""
+        from repro.core.executor import CallbackGroup
+
+        g = group or CallbackGroup(name=f"server-{id(self):x}")
+        armed = [False]
+
+        def _arm_if_busy():
+            if not armed[0] and (self.queue or self._active):
+                armed[0] = True
+                executor.add_timer(round_period_s, _round, group=g,
+                                   oneshot=True)
+
+        def _round():
+            armed[0] = False
+            self.step_rounds()
+            _arm_if_busy()
+
+        def _on_request(ptr):
+            self.ingest_message(ptr, max_new=max_new)
+            _arm_if_busy()
+
+        return executor.add_subscription(sub, _on_request, group=g)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is queued or mid-decode."""
+        return not self.queue and not self._active
 
     # -- introspection ------------------------------------------------------------
 

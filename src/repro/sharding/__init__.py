@@ -5,6 +5,7 @@ from .partition import (
     current_mesh,
     logical_to_spec,
     param_partition_specs,
+    shard_map,
     use_mesh,
 )
 
@@ -15,5 +16,6 @@ __all__ = [
     "current_mesh",
     "logical_to_spec",
     "param_partition_specs",
+    "shard_map",
     "use_mesh",
 ]

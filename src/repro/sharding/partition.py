@@ -33,7 +33,30 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "MeshContext", "use_mesh", "current_mesh", "active",
     "constrain", "logical_to_spec", "param_partition_specs",
+    "shard_map",
 ]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True,
+              axis_names=None):
+    """Version-portable ``shard_map``.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (``check_vma``, manual axes named
+    positively via ``axis_names``); 0.4.x only has
+    ``jax.experimental.shard_map.shard_map`` (``check_rep``, manual axes named
+    negatively via ``auto``).  All call sites in this repo go through here so
+    a jax upgrade is a one-line change.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = (frozenset() if axis_names is None
+            else frozenset(mesh.axis_names) - frozenset(axis_names))
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep, auto=auto)
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),

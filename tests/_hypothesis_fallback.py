@@ -1,0 +1,239 @@
+"""Deterministic mini-``hypothesis`` used when the real package is absent.
+
+The test suite property-tests the metadata plane (arena, registry, pubsub,
+packing, kernels) with ``hypothesis``.  That package is a *test* dependency
+(see ``requirements-test.txt``) and may be missing in hermetic containers;
+without a shim, six test modules fail at **collection** and take the whole
+tier-1 run down with them.
+
+Rather than degrading those modules to skips, this module implements the
+small strategy subset the suite actually uses (``integers``, ``floats``,
+``booleans``, ``just``, ``sampled_from``, ``one_of``, ``lists``,
+``tuples``) with a deterministic example generator:
+
+* example 0 draws every strategy at its minimum, example 1 at its maximum
+  (the boundary probes real hypothesis is valued for);
+* the remaining examples are pseudo-random, seeded from the test's
+  qualified name — stable across runs and processes (no shrinking, but a
+  printed falsifying example on failure).
+
+``conftest.py`` installs this as ``sys.modules["hypothesis"]`` only when
+the real package cannot be imported; with hypothesis installed this file
+is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__all__ = ["install", "given", "settings", "assume"]
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Unsatisfied(Exception):
+    """Raised by ``assume(False)`` / failed ``.filter``: discard the example."""
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: random.Random, mode: str | None):
+        return self._draw_fn(rng, mode)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng, mode: f(self._draw_fn(rng, mode)))
+
+    def filter(self, pred):
+        def draw(rng, mode):
+            for _ in range(100):
+                v = self._draw_fn(rng, mode)
+                if pred(v):
+                    return v
+            raise Unsatisfied("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value=-(2**31), max_value=2**31 - 1) -> SearchStrategy:
+    def draw(rng, mode):
+        if mode == "min":
+            return int(min_value)
+        if mode == "max":
+            return int(max_value)
+        return rng.randint(int(min_value), int(max_value))
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value=-1e9, max_value=1e9, **_kw) -> SearchStrategy:
+    def draw(rng, mode):
+        if mode == "min":
+            return float(min_value)
+        if mode == "max":
+            return float(max_value)
+        return rng.uniform(float(min_value), float(max_value))
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, mode: {"min": False, "max": True}.get(mode, rng.random() < 0.5))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng, mode: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    if not seq:
+        raise ValueError("sampled_from of empty sequence")
+
+    def draw(rng, mode):
+        if mode == "min":
+            return seq[0]
+        if mode == "max":
+            return seq[-1]
+        return seq[rng.randrange(len(seq))]
+
+    return SearchStrategy(draw)
+
+
+def one_of(*strategies_) -> SearchStrategy:
+    if len(strategies_) == 1 and isinstance(strategies_[0], (list, tuple)):
+        strategies_ = tuple(strategies_[0])
+
+    def draw(rng, mode):
+        if mode == "min":
+            return strategies_[0].draw(rng, mode)
+        if mode == "max":
+            return strategies_[-1].draw(rng, mode)
+        return strategies_[rng.randrange(len(strategies_))].draw(rng, mode)
+
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng, mode):
+        if mode == "min":
+            n = min_size
+        elif mode == "max":
+            n = hi
+        else:
+            n = rng.randint(min_size, hi)
+        return [elements.draw(rng, mode) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies_) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, mode: tuple(s.draw(rng, mode) for s in strategies_))
+
+
+def builds(target, *args, **kwargs) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, mode: target(*(a.draw(rng, mode) for a in args),
+                                 **{k: v.draw(rng, mode)
+                                    for k, v in kwargs.items()}))
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise Unsatisfied("assume(False)")
+    return True
+
+
+def settings(**kw):
+    """Decorator form only (the suite uses ``@settings(max_examples=, deadline=)``)."""
+
+    def deco(fn):
+        fn._fallback_settings = kw
+        return fn
+
+    return deco
+
+
+def given(*given_args, **given_kwargs):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = [p.name for p in sig.parameters.values()]
+        pos_names = [n for n in params if n not in given_kwargs][: len(given_args)]
+        pairs = list(zip(pos_names, given_args)) + list(given_kwargs.items())
+        bound = {n for n, _ in pairs}
+        seed_base = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            cfg = (getattr(wrapper, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", None) or {})
+            n_examples = int(cfg.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            ran = 0
+            for i in range(n_examples):
+                mode = "min" if i == 0 else ("max" if i == 1 else None)
+                rng = random.Random(seed_base + i)
+                try:
+                    drawn = {name: strat.draw(rng, mode) for name, strat in pairs}
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*a, **kw, **drawn)
+                    ran += 1
+                except Unsatisfied:
+                    continue
+                except Exception:
+                    print(f"\nFalsifying example ({fn.__qualname__}, "
+                          f"example {i}): {drawn!r}", file=sys.stderr)
+                    raise
+            if ran == 0:
+                raise Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assumptions")
+
+        remaining = [p for p in sig.parameters.values() if p.name not in bound]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    """Placeholder for ``suppress_health_check=`` compatibility."""
+
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def install() -> types.ModuleType:
+    """Register this module as ``hypothesis`` (+``.strategies``) in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = "0.0-fallback"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "none",
+                 "sampled_from", "one_of", "lists", "tuples", "builds"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = SearchStrategy
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+    return mod

@@ -68,6 +68,33 @@ def crash_publisher(reg_name):
     os._exit(1)
 
 
+def executor_subscriber(reg_name, topics, q, n_expected):
+    """Event-driven fan-in consumer: ONE EventExecutor multiplexing every
+    topic's wakeup FIFO in a child process (cross-process wakeup path)."""
+    from repro.core import POINT_CLOUD2, Domain, EventExecutor
+
+    dom = Domain.join(reg_name, publisher=False)
+    ex = EventExecutor(name="mp-executor")
+    got = []
+
+    def callback_for(topic):
+        def cb(ptr):
+            rec = (topic, int(ptr.seq), int(ptr.data.sum()))
+            got.append(rec)
+            q.put(rec)
+
+        return cb
+
+    for t in topics:
+        ex.add_subscription(dom.create_subscription(POINT_CLOUD2, t),
+                            callback_for(t))
+    q.put("ready")
+    ex.spin(until=lambda: len(got) >= n_expected, timeout=30)
+    ex.shutdown()
+    q.put("done")
+    dom.close()
+
+
 def bridge_runner(reg_name, bus_path, topic, q, run_s=10.0):
     from repro.core import POINT_CLOUD2, Bridge, Domain
 

@@ -6,3 +6,15 @@ _SRC = os.path.join(os.path.dirname(_HERE), "src")
 for p in (_SRC, _HERE):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+# ``hypothesis`` is a test dependency (requirements-test.txt) but hermetic
+# containers may lack it; without this shim six modules error at collection.
+# Prefer the real package; otherwise install the deterministic fallback so
+# the property tests still *run* (boundary probes + seeded random examples)
+# instead of degrading the whole module to a collection error.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()

@@ -1,0 +1,387 @@
+"""EventExecutor: multi-topic fan-in, callback groups, deterministic ptr
+release, cross-process wakeup — plus the Registry WAL-replay property test
+(the metadata plane the executor rides on)."""
+
+import multiprocessing as mp
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import _mp_helpers as H
+from repro.core import (
+    POINT_CLOUD2,
+    AgnocastQueueFull,
+    Domain,
+    EventExecutor,
+    MutuallyExclusiveCallbackGroup,
+    ReentrantCallbackGroup,
+    Registry,
+)
+from repro.core.registry import ST_USED, _J_CLEAN, _J_PENDING
+
+
+@pytest.fixture()
+def dom():
+    d = Domain.create(arena_capacity=32 << 20)
+    yield d
+    d.close()
+
+
+def _publish(pub, payload):
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.asarray(payload, np.uint8))
+    return pub.publish(m)
+
+
+# ---------------------------------------------------------------------------
+# in-process mode
+# ---------------------------------------------------------------------------
+
+
+def test_multi_topic_fanin_delivery_order(dom):
+    """One executor over K topics: every message arrives exactly once and
+    per-topic seq order is preserved (batched takes claim lowest seq first)."""
+    k, per = 3, 5
+    pubs = [dom.create_publisher(POINT_CLOUD2, f"t{i}", depth=16)
+            for i in range(k)]
+    subs = [dom.create_subscription(POINT_CLOUD2, f"t{i}") for i in range(k)]
+    got: list[tuple[int, int]] = []
+    with EventExecutor() as ex:
+        for i, s in enumerate(subs):
+            ex.add_subscription(s, lambda ptr, i=i: got.append((i, ptr.seq)))
+        for n in range(per):
+            for i, p in enumerate(pubs):
+                _publish(p, np.full(8, i + n, np.uint8))
+        ex.spin(until=lambda: len(got) >= k * per, timeout=10)
+    assert len(got) == k * per
+    for i in range(k):
+        seqs = [seq for (t, seq) in got if t == i]
+        assert seqs == sorted(seqs) and len(seqs) == per
+    for p in pubs:
+        p.reclaim()
+    assert dom.arena.live_bytes == 0  # executor released every ptr
+
+
+def test_executor_releases_after_callback(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    kept = []
+    with EventExecutor() as ex:
+        ex.add_subscription(sub, lambda ptr: kept.append(ptr.clone()))
+        _publish(pub, np.arange(16, dtype=np.uint8))
+        ex.spin(until=lambda: kept, timeout=10)
+        assert pub.reclaim() == 0      # clone still holds the reference
+        kept.pop().release()
+        assert pub.reclaim() == 1      # now both counters are zero
+    assert dom.arena.live_bytes == 0
+
+
+def test_batched_take_limit_repolls(dom):
+    """A batch cap smaller than the burst must not strand messages (the
+    wake tokens are drained on the first take)."""
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=16)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    got = []
+    with EventExecutor() as ex:
+        ex.add_subscription(sub, lambda ptr: got.append(ptr.seq), batch=2)
+        for n in range(7):
+            _publish(pub, np.full(4, n, np.uint8))
+        ex.spin(until=lambda: len(got) >= 7, timeout=10)
+    assert got == sorted(got) and len(got) == 7
+
+
+def test_unregister_releases_pending_ptrs(dom):
+    """Undispatched work discarded at unregister must release its
+    MessagePtrs immediately (held bits dropped, ring slots freeable)."""
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    ex = EventExecutor()
+    h = ex.add_subscription(sub, lambda ptr: None)
+    _publish(pub, np.ones(8, np.uint8))
+    _publish(pub, np.ones(8, np.uint8))
+    # claim + enqueue without dispatching (what a loop iteration does first)
+    works = h._on_ready(sub.fileno())
+    assert len(works) == 2
+    ex._enqueue(works)
+    dropped = ex.unregister(h)
+    assert dropped == 2
+    assert pub.reclaim() == 2          # released deterministically
+    ex.shutdown()
+    assert dom.arena.live_bytes == 0
+
+
+def test_shutdown_discards_pending_deterministically(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    ex = EventExecutor()
+    h = ex.add_subscription(sub, lambda ptr: None)
+    _publish(pub, np.ones(8, np.uint8))
+    ex._enqueue(h._on_ready(sub.fileno()))
+    assert ex.shutdown() == 1          # the queued ptr was discarded...
+    assert pub.reclaim() == 1          # ...and its reference released
+    assert dom.arena.live_bytes == 0
+
+
+def test_dead_publisher_fifo_parked_not_spun(dom):
+    """When every publisher closes the wakeup FIFO's write end the fd goes
+    permanently POLLHUP-readable; the executor must park it on the slow
+    re-poll timer instead of hot-looping epoll — and still deliver from a
+    publisher that joins later."""
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=4)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    got = []
+    with EventExecutor() as ex:
+        ex.add_subscription(sub, lambda ptr: got.append(ptr.seq))
+        _publish(pub, np.ones(4, np.uint8))
+        ex.spin(until=lambda: got, timeout=10)
+        pub.close()                      # last writer gone -> EOF
+        ex.spin_once(0.2)                # observes hangup
+        assert sub.fileno() not in ex._sel.get_map()  # parked, not polled
+        assert ex._timers                # slow re-poll armed
+        pub2 = dom.create_publisher(POINT_CLOUD2, "t", depth=4)
+        _publish(pub2, np.full(4, 2, np.uint8))
+        ex.spin(until=lambda: len(got) >= 2, timeout=10)
+    assert got == [1, 1]  # independent per-publisher sequences
+
+
+def test_timer_fires_periodically(dom):
+    ticks = []
+    with EventExecutor() as ex:
+        ex.add_timer(0.01, lambda: ticks.append(time.monotonic()))
+        ex.spin(until=lambda: len(ticks) >= 3, timeout=5)
+    assert len(ticks) >= 3
+
+
+# ---------------------------------------------------------------------------
+# threaded mode + callback groups
+# ---------------------------------------------------------------------------
+
+
+def test_mutually_exclusive_group_threaded(dom):
+    """Callbacks of one ME group never overlap even with a worker pool."""
+    pubs = [dom.create_publisher(POINT_CLOUD2, f"m{i}", depth=16)
+            for i in range(2)]
+    subs = [dom.create_subscription(POINT_CLOUD2, f"m{i}") for i in range(2)]
+    lock = threading.Lock()
+    conc = {"cur": 0, "max": 0}
+    done = []
+
+    def cb(ptr):
+        with lock:
+            conc["cur"] += 1
+            conc["max"] = max(conc["max"], conc["cur"])
+        time.sleep(0.01)
+        with lock:
+            conc["cur"] -= 1
+        done.append(ptr.seq)
+
+    ex = EventExecutor(threads=4).start()
+    group = MutuallyExclusiveCallbackGroup("me")
+    for s in subs:
+        ex.add_subscription(s, cb, group=group)
+    for n in range(3):
+        for p in pubs:
+            _publish(p, np.full(4, n, np.uint8))
+    deadline = time.monotonic() + 10
+    while len(done) < 6 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    ex.shutdown()
+    assert len(done) == 6
+    assert conc["max"] == 1
+
+
+def test_reentrant_group_runs_concurrently(dom):
+    """Reentrant group on a worker pool: two callbacks must overlap (each
+    waits on a barrier only the other can complete)."""
+    pubs = [dom.create_publisher(POINT_CLOUD2, f"r{i}", depth=8)
+            for i in range(2)]
+    subs = [dom.create_subscription(POINT_CLOUD2, f"r{i}") for i in range(2)]
+    barrier = threading.Barrier(2, timeout=5)
+    met = []
+
+    def cb(ptr):
+        barrier.wait()                 # deadlocks unless both run at once
+        met.append(ptr.seq)
+
+    ex = EventExecutor(threads=4).start()
+    group = ReentrantCallbackGroup("re")
+    for s in subs:
+        ex.add_subscription(s, cb, group=group)
+    for p in pubs:
+        _publish(p, np.ones(4, np.uint8))
+    deadline = time.monotonic() + 10
+    while len(met) < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    ex.shutdown()
+    assert len(met) == 2
+
+
+def test_bridge_on_executor(dom):
+    """A Bridge registered on the executor relays both directions from one
+    epoll loop (agnocast FIFO + bus socket multiplexed together)."""
+    from repro.core import Bridge, Bus, BusClient, deserialize, serialize
+
+    bus = Bus().start()
+    try:
+        bridge = Bridge(dom, bus.path, POINT_CLOUD2, "pc")
+        rosish = BusClient(bus.path)
+        rosish.subscribe("pc")
+        app_sub = dom.create_subscription(POINT_CLOUD2, "pc")
+        pub = dom.create_publisher(POINT_CLOUD2, "pc", depth=8)
+        time.sleep(0.2)
+        agno_in = []
+        with EventExecutor() as ex:
+            bridge.register(ex)
+            ex.add_subscription(app_sub, lambda ptr: agno_in.append(
+                np.asarray(ptr.data).copy()))
+            # agnocast -> bus
+            _publish(pub, np.arange(48, dtype=np.uint8))
+            ex.spin(until=lambda: bridge.relayed_out >= 1, timeout=10)
+            got = rosish.recv(timeout=10)
+            assert got is not None and got[1] == 1  # bridge-tagged origin
+            assert np.array_equal(deserialize(got[2])["data"],
+                                  np.arange(48, dtype=np.uint8))
+            # bus -> agnocast
+            pm = POINT_CLOUD2.plain()
+            pm.data = np.full(16, 9, np.uint8)
+            rosish.publish("pc", serialize(pm), origin=0)
+            # app_sub also saw the agnocast-origin message from direction 1
+            ex.spin(until=lambda: any(a.shape[0] == 16 for a in agno_in),
+                    timeout=10)
+        assert any(np.array_equal(a, np.full(16, 9, np.uint8))
+                   for a in agno_in)
+        rosish.close()
+        bridge.close()
+    finally:
+        bus.stop()
+
+
+# ---------------------------------------------------------------------------
+# cross-process mode
+# ---------------------------------------------------------------------------
+
+
+def test_cross_process_executor_wakeup():
+    """K publishers in this process, one executor in a child: FIFO wakeups
+    cross the process boundary and fan into one epoll loop."""
+    ctx = mp.get_context("spawn")
+    dom = Domain.create(arena_capacity=16 << 20)
+    try:
+        topics = ["xa", "xb", "xc"]
+        pubs = {t: dom.create_publisher(POINT_CLOUD2, t, depth=8)
+                for t in topics}
+        q = ctx.Queue()
+        child = ctx.Process(target=H.executor_subscriber,
+                            args=(dom.name, topics, q, 6), daemon=True)
+        child.start()
+        assert q.get(timeout=15) == "ready"
+        for n in range(2):
+            for i, t in enumerate(topics):
+                _publish(pubs[t], np.full(10, 10 * i + n, np.uint8))
+                time.sleep(0.01)
+        recs = [q.get(timeout=15) for _ in range(6)]
+        assert q.get(timeout=15) == "done"
+        child.join(timeout=10)
+        by_topic = {t: [seq for (tt, seq, _) in recs if tt == t]
+                    for t in topics}
+        for t, i in zip(topics, range(3)):
+            assert by_topic[t] == [1, 2]
+        sums = sorted(s for (_, _, s) in recs)
+        assert sums == sorted(10 * (10 * i + n)
+                              for i in range(3) for n in range(2))
+        dom.sweep()
+        for p in pubs.values():
+            p.reclaim()
+        assert dom.arena.live_bytes == 0
+    finally:
+        dom.close()
+
+
+# ---------------------------------------------------------------------------
+# metadata plane: WAL replay always converges to the janitor-cleaned state
+# ---------------------------------------------------------------------------
+
+_DEAD_PID = 2**22 + 4242  # beyond pid_max defaults: certainly not alive
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("pub"), st.integers(1, 512)),
+            st.tuples(st.just("take"), st.integers(0, 4)),
+            st.tuples(st.just("release"), st.integers(0, 3)),
+        ),
+        max_size=30,
+    ),
+    crash_slot=st.integers(0, 3),
+)
+def test_wal_replay_converges_to_janitor_state(ops, crash_slot):
+    """Any op sequence, then a simulated crash (dead subscriber holding refs
+    + a torn in-flight mutation left PENDING in the WAL): recovery + one
+    janitor sweep must yield a clean, self-consistent, *stable* state."""
+    reg = Registry.create()
+    j = ring = None
+    try:
+        t = reg.topic_index("x")
+        p = reg.add_publisher(t, os.getpid(), "a", depth=4)
+        s = reg.add_subscriber(t, os.getpid())
+        taken = []
+        seen = set()
+        for kind, arg in ops:
+            if kind == "pub":
+                try:
+                    reg.publish(t, p, arg, 1)
+                except AgnocastQueueFull:
+                    pass
+            elif kind == "take":
+                got = reg.take(t, s, limit=arg or None)
+                assert [e.seq for e in got] == sorted(e.seq for e in got)
+                assert not seen.intersection(e.seq for e in got)  # exactly once
+                seen.update(e.seq for e in got)
+                taken.extend(got)
+            elif kind == "release" and taken:
+                e = taken.pop(arg % len(taken))
+                reg.release(t, p, s, e.seq)
+
+        # the crash: subscriber dies holding refs; a writer dies mid-mutation
+        before = reg.entries[t, p, crash_slot].copy()
+        j = reg._journal[0]
+        j["pid"] = _DEAD_PID
+        j["tidx"], j["pidx"], j["slot"] = t, p, crash_slot
+        j["has_topic"], j["has_entry"] = 0, 1
+        j["entry_img"] = before.tobytes()
+        j["state"] = _J_PENDING
+        reg.entries[t, p, crash_slot]["desc_off"] = 31337       # torn write
+        reg.topics[t]["sub_pids"][s] = _DEAD_PID                # dead holder
+
+        reg.sweep()  # lock acquisition replays the WAL, janitor cleans
+
+        # 1. WAL is clean and the torn write was rolled back
+        assert int(reg._journal[0]["state"]) == _J_CLEAN
+        assert (int(reg.entries[t, p, crash_slot]["desc_off"])
+                == int(before["desc_off"]))
+        # 2. no reference or unreceived bit of any dead subscriber survives
+        alive = int(reg.topics[t]["sub_alive"])
+        ring = reg.entries[t, p]
+        for sl in range(4):
+            assert int(ring[sl]["held"]) & ~alive == 0
+            assert int(ring[sl]["unreceived"]) & ~alive == 0
+        # 3. with the only subscriber dead, every used entry is reclaimable
+        freed = reg.reclaimable(t, p)
+        assert not np.any(ring["state"] == ST_USED)
+        assert sorted(freed) == sorted(set(freed))
+        # 4. convergence: a second sweep is a no-op (fixed point)
+        img = reg.topics[t].tobytes() + reg.entries[t].tobytes()
+        rep = reg.sweep()
+        assert rep["dead_subs"] == 0 and rep["dead_pubs"] == 0
+        assert img == reg.topics[t].tobytes() + reg.entries[t].tobytes()
+    finally:
+        j = ring = None  # drop shm views so close() can release the mapping
+        reg.close()
+        reg.unlink()

@@ -9,6 +9,7 @@ from hypothesis import strategies as st
 
 from repro.optim import ef_int8_psum, init_error_state, tree_ef_int8_psum
 from repro.optim.grad_compress import make_hierarchical_train_step
+from repro.sharding import shard_map
 
 
 def _run_in_shard_map(fn, *args):
@@ -16,9 +17,9 @@ def _run_in_shard_map(fn, *args):
     from jax.sharding import PartitionSpec as P
 
     # prefix specs: P() applies to every leaf (pod has size 1 in tests)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         fn, mesh=mesh, in_specs=P(), out_specs=P(),
-        check_vma=False))(*args)
+        check_rep=False))(*args)
 
 
 def test_quantization_identity():
