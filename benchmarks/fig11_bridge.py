@@ -30,7 +30,6 @@ from benchmarks.fig9_latency import (
 )
 from repro.core import (
     POINT_CLOUD2,
-    AgnocastQueueFull,
     Bridge,
     Bus,
     BusClient,
@@ -41,6 +40,8 @@ from repro.core import (
 
 N_MSGS = 200
 INTERVAL = 0.004
+SMOKE_SIZES = {"10KB": 10 << 10, "256KB": 256 << 10}
+SMOKE_N = 20
 
 
 @_guard
@@ -67,13 +68,8 @@ def _agno_pub(dom_name, nbytes, n, evt):
         msg = pub.borrow_loaded_message()
         msg.data.extend(payload)
         msg.set("stamp", time.monotonic())
-        while True:
-            try:
-                pub.reclaim()
-                pub.publish(msg)
-                break
-            except AgnocastQueueFull:
-                time.sleep(0.0005)
+        pub.reclaim()
+        pub.publish_blocking(msg)  # event-driven backpressure (no poll)
         time.sleep(INTERVAL)
     deadline = time.monotonic() + 10
     while pub._inflight and time.monotonic() < deadline:
@@ -192,14 +188,19 @@ ROUTES = {
 }
 
 
-def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None) -> list[Stats]:
+def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None,
+         smoke: bool = False) -> list[Stats]:
+    if smoke:
+        n_msgs, sizes = SMOKE_N, dict(SMOKE_SIZES)
     sizes = sizes or SIZES
-    print(f"# fig11: bridge overhead ({n_msgs} msgs/point)")
+    warm = WARMUP if n_msgs > 2 * WARMUP else max(1, n_msgs // 4)
+    print(f"# fig11: bridge overhead ({n_msgs} msgs/point"
+          f"{', smoke' if smoke else ''})")
     print(HEADER)
     out, results = [], {}
     for route, fn in ROUTES.items():
         for label, nbytes in sizes.items():
-            lat = fn(nbytes, n_msgs)[WARMUP:]
+            lat = fn(nbytes, n_msgs)[warm:]
             st = Stats.of(f"fig11/{route}/{label}", lat)
             results.setdefault(route, {})[label] = st.__dict__
             print(st.row(), flush=True)
@@ -209,4 +210,10 @@ def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None) -> list[Stat
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run (CI): few messages, two sizes")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -38,7 +38,6 @@ import numpy as np
 from benchmarks.common import HEADER, Stats, save_json
 from repro.core import (
     POINT_CLOUD2,
-    AgnocastQueueFull,
     Bus,
     BusClient,
     Domain,
@@ -80,13 +79,8 @@ def _pub_proc(dom_name: str, topic: str, nbytes: int, n: int, period: float,
         msg = pub.borrow_loaded_message()
         msg.data.extend(payload)
         msg.set("stamp", time.monotonic())  # after fill: wakeup cost only
-        while True:
-            try:
-                pub.reclaim()
-                pub.publish(msg)
-                break
-            except AgnocastQueueFull:
-                time.sleep(0.0005)
+        pub.reclaim()
+        pub.publish_blocking(msg)  # event-driven backpressure (no poll)
         time.sleep(period)
     deadline = time.monotonic() + 15
     while pub._inflight and time.monotonic() < deadline:

@@ -1,0 +1,244 @@
+"""Fig. 14 (extension): federated routing latency + event-driven wakeups.
+
+Two measurements for the :mod:`repro.core.routing` plane:
+
+* **3-domain chain relay** (A ──ab── B ──bc── C): a message published in
+  domain A is relayed by B's router into C through two conventional-bus
+  hops.  We record, per payload size (1 KiB … 16 MiB):
+
+  - ``agno_hop``  — delivery on a topic the routing table keeps local
+    (longest-prefix blackhole rule ``bench/local → None``), i.e. the pure
+    zero-copy plane with the routers live but not relaying.  The paper's
+    claim applied to the routed topology: this hop must be *flat* in
+    payload size (< 2x spread) because only a constant-size descriptor
+    moves.  (Measured on its own topic: on one core, a same-loop bridge
+    serializing 16 MiB would otherwise head-of-line-block the local
+    callback and smear O(size) work into a hop that does none.)
+  - ``relay_B``   — one bus hop (serialize + socket + copy-in).
+  - ``relay_C``   — two bus hops through B's agnocast plane.
+
+  Both relay curves are expected O(bytes) — that is the §IV-D bridge cost
+  the routing plane deliberately confines to inter-domain edges.
+
+* **Blocked-publisher wakeup latency**: a publisher blocked on
+  ``AgnocastQueueFull`` is woken by the owner-side slot-freed FIFO
+  (``wait_for_slot``) the moment a subscriber releases the last
+  reference.  Compared against the pre-refactor baseline: a 0.5 ms
+  sleep-poll retry loop.
+
+Everything runs in one process on one executor: this container has a
+single CPU core, so in-process hosting of all three domains measures the
+same copies/serialization without adding scheduler noise (see
+benchmarks/common.py's hardware note — we validate curve *shapes*).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import HEADER, Stats, save_json
+from repro.core import (
+    POINT_CLOUD2,
+    Bus,
+    Domain,
+    EventExecutor,
+    Router,
+)
+
+SIZES = {"1KB": 1 << 10, "64KB": 64 << 10, "1MB": 1 << 20, "16MB": 16 << 20}
+N_MSGS = 30
+SMOKE_N = 8
+WARM_S = 0.02  # pre-stamp busy-burn: equalizes scheduler state across sizes
+WAKEUP_ITERS = 60
+SMOKE_WAKEUP_ITERS = 15
+POLL_S = 0.0005  # the pre-refactor sleep-retry cadence being replaced
+TOPIC = "bench/relay"
+LOCAL_TOPIC = "bench/local"  # blackholed by the longest-prefix rule
+
+
+# ---------------------------------------------------------------------------
+# 3-domain chain relay
+# ---------------------------------------------------------------------------
+
+
+def bench_relay(n_msgs: int, sizes: dict[str, int]) -> dict:
+    cap = (max(sizes.values()) + (1 << 20)) * 4
+    bus_ab, bus_bc = Bus().start(), Bus().start()
+    doms = {k: Domain.create(arena_capacity=cap) for k in "ABC"}
+    routers: dict[str, Router] = {}
+    links = {"A": [("ab", bus_ab)], "B": [("ab", bus_ab), ("bc", bus_bc)],
+             "C": [("bc", bus_bc)]}
+    for k, dom in doms.items():
+        r = Router(dom)
+        for name, bus in links[k]:
+            r.add_remote(name, bus.path, depth=4)
+            r.add_route("bench/", name)
+        r.add_route(LOCAL_TOPIC, None)  # longest prefix wins: stays local
+        r.activate(POINT_CLOUD2, TOPIC)
+        routers[k] = r
+
+    pub = doms["A"].create_publisher(POINT_CLOUD2, TOPIC, depth=4)
+    pub_local = doms["A"].create_publisher(POINT_CLOUD2, LOCAL_TOPIC, depth=4)
+    lat: dict[str, list[float]] = {"agno_hop": [], "relay_B": [], "relay_C": []}
+
+    def on_msg(key):
+        def cb(ptr):
+            t = time.monotonic()
+            lat[key].append(t - float(ptr.msg.get("stamp")))
+        return cb
+
+    ex = EventExecutor(name="fig14")
+    for k, topic, key in (("A", LOCAL_TOPIC, "agno_hop"),
+                          ("B", TOPIC, "relay_B"), ("C", TOPIC, "relay_C")):
+        sub = doms[k].create_subscription(POINT_CLOUD2, topic)
+        ex.add_subscription(sub, on_msg(key))
+    for r in routers.values():
+        r.register(ex)
+    ex.spin_once(0.1)  # let subscriptions settle
+
+    def paced(p, keys, nbytes, label):
+        payload = (np.arange(nbytes, dtype=np.uint8) % 251)
+        for key in keys:
+            lat[key].clear()
+        for i in range(n_msgs):
+            msg = p.borrow_loaded_message()
+            msg.data.extend(payload)
+            # constant busy-burn before stamping: on this throttled 1-core
+            # container an idle->wake select pays multi-ms scheduler noise,
+            # while a 16 MiB fill keeps the core hot — without equalizing,
+            # *small* payloads read slower than big ones (inverted O(size)).
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < WARM_S:
+                pass
+            msg.set("stamp", time.monotonic())
+            p.reclaim()
+            p.publish_blocking(msg, timeout=30.0)
+            # sequential pacing: every consumer sees message i before the
+            # next publish, so each sample is an unqueued end-to-end latency
+            ex.spin(until=lambda want=i + 1: min(
+                len(lat[k]) for k in keys) >= want, timeout=30.0)
+        if min(len(lat[k]) for k in keys) < n_msgs:
+            raise RuntimeError(f"relay stalled at {label}: "
+                               f"{ {k: len(lat[k]) for k in keys} }")
+
+    results: dict[str, dict] = {}
+    try:
+        for label, nbytes in sizes.items():
+            paced(pub_local, ["agno_hop"], nbytes, label)     # zero-copy plane
+            paced(pub, ["relay_B", "relay_C"], nbytes, label)  # routed plane
+            for key, xs in lat.items():
+                st = Stats.of(f"fig14/{key}/{label}", xs)
+                results.setdefault(key, {})[label] = st.__dict__
+                print(st.row(), flush=True)
+    finally:  # a stall must not strand bus threads / shm arenas / FIFOs
+        ex.shutdown()
+        for r in routers.values():
+            r.close()
+        for d in doms.values():
+            d.close()
+        bus_ab.stop()
+        bus_bc.stop()
+
+    hops = [results["agno_hop"][label]["p50"] for label in sizes]
+    results["agno_hop_spread"] = float(max(hops) / max(min(hops), 1e-12))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# blocked-publisher wakeup: slot-freed FIFO vs 0.5 ms sleep-poll
+# ---------------------------------------------------------------------------
+
+
+def _one_wakeup(dom, pub, sub, mode: str) -> float:
+    """Fill the ring, block, release the target slot from a thread; return
+    release -> slot-available detection latency (the wakeup itself — the
+    publish that follows costs the same either way)."""
+    for i in range(2):
+        m = pub.borrow_loaded_message()
+        m.data.extend(np.full(64, i, np.uint8))
+        pub.reclaim()
+        pub.publish(m)
+    held = sub.take()
+    assert len(held) == 2 and not dom.registry.can_publish(pub.tidx, pub.pidx)
+    t_rel = [0.0]
+
+    def releaser():
+        time.sleep(0.002)  # let the publisher reach its wait
+        t_rel[0] = time.monotonic()
+        held[0].release()  # held[0] = lowest seq = the next target slot
+
+    th = threading.Thread(target=releaser)
+    th.start()
+    if mode == "event":
+        assert pub.wait_for_slot(5.0)
+    else:  # the pre-refactor baseline: sleep-poll retry
+        while True:
+            pub.reclaim()
+            if dom.registry.can_publish(pub.tidx, pub.pidx):
+                break
+            time.sleep(POLL_S)
+    t_wake = time.monotonic()
+    th.join()
+    blocked = pub.borrow_loaded_message()
+    blocked.data.extend(np.full(64, 7, np.uint8))
+    pub.publish(blocked)
+    held[1].release()
+    for p in sub.take():
+        p.release()
+    pub.reclaim()
+    return t_wake - t_rel[0]
+
+
+def bench_wakeup(iters: int) -> dict:
+    dom = Domain.create(arena_capacity=8 << 20)
+    pub = dom.create_publisher(POINT_CLOUD2, "wake", depth=2)
+    sub = dom.create_subscription(POINT_CLOUD2, "wake")
+    out = {}
+    for mode in ("event", "poll"):
+        xs = [_one_wakeup(dom, pub, sub, mode) for _ in range(iters)]
+        st = Stats.of(f"fig14/wakeup_{mode}", xs)
+        out[mode] = st.__dict__
+        print(st.row(), flush=True)
+    dom.close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(n_msgs: int = N_MSGS, sizes: dict[str, int] | None = None,
+         smoke: bool = False) -> dict:
+    sizes = sizes or SIZES  # keep the full 1KiB-16MiB span even in smoke
+    if smoke:
+        n_msgs = SMOKE_N
+    iters = SMOKE_WAKEUP_ITERS if smoke else WAKEUP_ITERS
+    print(f"# fig14: routed federation ({n_msgs} msgs/point"
+          f"{', smoke' if smoke else ''})")
+    print(HEADER)
+    results = bench_relay(n_msgs, sizes)
+    results["wakeup"] = bench_wakeup(iters)
+    spread = results["agno_hop_spread"]
+    ev, po = results["wakeup"]["event"], results["wakeup"]["poll"]
+    print(f"# agnocast-side hop p50 spread across sizes: {spread:.2f}x "
+          f"(flat requires < 2x)")
+    print(f"# blocked-publisher wakeup p50/p99: "
+          f"event {ev['p50']*1e6:.0f}/{ev['p99']*1e6:.0f}us vs "
+          f"{POLL_S*1e6:.0f}us-poll {po['p50']*1e6:.0f}/{po['p99']*1e6:.0f}us")
+    save_json("fig14_routing", results)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run (CI); keeps the 1KiB-16MiB span")
+    args = ap.parse_args()
+    res = main(smoke=args.smoke)
+    if res["agno_hop_spread"] >= 2.0:
+        raise SystemExit(
+            f"agnocast hop latency not flat: {res['agno_hop_spread']:.2f}x")

@@ -25,7 +25,6 @@ import numpy as np
 from benchmarks.common import HEADER, Stats, save_json
 from repro.core import (
     POINT_CLOUD2,
-    AgnocastQueueFull,
     Bus,
     BusClient,
     Domain,
@@ -104,13 +103,8 @@ def _agno_pub(dom_name, nbytes, n, evt):
         msg = pub.borrow_loaded_message()
         msg.data.extend(payload)
         msg.set("stamp", time.monotonic())  # stamp AFTER fill: IPC cost only
-        while True:
-            try:
-                pub.reclaim()
-                pub.publish(msg)
-                break
-            except AgnocastQueueFull:
-                time.sleep(0.0005)
+        pub.reclaim()
+        pub.publish_blocking(msg)  # event-driven backpressure (no poll)
         time.sleep(INTERVAL)
     deadline = time.monotonic() + 10
     while pub._inflight and time.monotonic() < deadline:

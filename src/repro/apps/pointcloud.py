@@ -30,7 +30,6 @@ import numpy as np
 
 from repro.core import (
     POINT_CLOUD2,
-    AgnocastQueueFull,
     Bus,
     BusClient,
     Domain,
@@ -157,13 +156,8 @@ def _lidar_proc(spec: LidarSpec, frames: int, transport: str, dom_name: str,
             msg.set("stamp", t_frame)
             msg.set("is_dense", 1)
             pub.reclaim()
-            while True:  # backpressure: queue full -> reclaim and retry
-                try:
-                    pub.publish(msg)
-                    break
-                except AgnocastQueueFull:
-                    pub.reclaim()
-                    time.sleep(0.001)
+            # backpressure: event-driven wait on the slot-freed FIFO
+            pub.publish_blocking(msg)
         else:
             m = POINT_CLOUD2.plain()
             m.data = filtered.view(np.uint8).reshape(-1)

@@ -15,8 +15,11 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
   sockets, bridges, and timers into callback groups (mutually-exclusive /
   reentrant), with batched zero-copy takes and deterministic
   ``MessagePtr`` release on unregister/shutdown;
-* :mod:`repro.core.bridge` — selective-adoption bridge to conventional
-  middleware (§IV-D);
+* :mod:`repro.core.routing` — the federated routing plane: longest-prefix
+  ``RoutingTable``, per-remote-bus ``DomainBridge`` (the §IV-D selective-
+  adoption bridge generalized to many topics), and ``Router`` with
+  origin-tag/route-id/hop-count loop prevention so N≥3 agnocast domains
+  federate through the conventional plane;
 * :mod:`repro.core.transport` — conventional baselines (serialized bus =
   DDS analogue, shm ring = IceOryx analogue) for the §V comparisons;
 * :mod:`repro.core.device_arena` — the same lifetime discipline applied to
@@ -24,7 +27,6 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
 """
 
 from .arena import AllocRef, Arena, ArenaError, OutOfArenaMemory
-from .bridge import Bridge
 from .executor import (
     CallbackGroup,
     EventExecutor,
@@ -56,9 +58,17 @@ from .registry import (
     Registry,
     RegistryError,
 )
+from .routing import (
+    Bridge,
+    DomainBridge,
+    Router,
+    RoutingRule,
+    RoutingTable,
+    domain_tag,
+)
 from .smart_ptr import MessagePtr
 from .topic import Domain, Publisher, Subscription
-from .transport import Bus, BusClient, ShmRing
+from .transport import Bus, BusClient, Frame, ShmRing
 
 __all__ = [
     "AllocRef", "Arena", "ArenaError", "OutOfArenaMemory",
@@ -69,7 +79,9 @@ __all__ = [
     "Registry", "RegistryError", "AgnocastQueueFull", "Entry",
     "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
     "MessagePtr", "Domain", "Publisher", "Subscription",
-    "Bus", "BusClient", "ShmRing", "Bridge",
+    "Bus", "BusClient", "Frame", "ShmRing",
+    "Bridge", "DomainBridge", "Router", "RoutingRule", "RoutingTable",
+    "domain_tag",
     "EventExecutor", "CallbackGroup",
     "MutuallyExclusiveCallbackGroup", "ReentrantCallbackGroup",
 ]

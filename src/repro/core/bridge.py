@@ -1,113 +1,9 @@
-"""Per-topic bridge between Agnocast space and conventional middleware (§IV-D).
+"""Compatibility shim — the single-topic bridge now lives in
+:mod:`repro.core.routing` as the one-rule special case of
+:class:`~repro.core.routing.DomainBridge` (see that module's docstring for
+the routing table, loop-prevention invariants, and the backpressure FIFO
+protocol)."""
 
-The bridge subscribes in both spaces and republishes in the other:
+from .routing import Bridge, DomainBridge, Router, RoutingRule, RoutingTable
 
-* Agnocast → conventional: serialize the zero-copy message and publish it on
-  the bus (this serialization is the size-proportional overhead the paper
-  measures in Fig. 11).
-* Conventional → Agnocast: deserialize into a loaned arena message and
-  move-publish it (a size-proportional copy-in).
-
-Loop prevention mirrors the paper: "the bridge's subscription callback
-ignores messages originating from itself in both communication paths" —
-messages the bridge publishes into Agnocast carry ``ORIGIN_BRIDGE`` (and
-exclude the bridge's own subscription slot); frames it publishes on the bus
-carry ``origin=1``.
-"""
-
-from __future__ import annotations
-
-import numpy as np
-
-import time
-
-from .messages import MessageType, Ragged, deserialize, serialize
-from .registry import ORIGIN_AGNOCAST, ORIGIN_BRIDGE, AgnocastQueueFull
-from .topic import Domain
-from .transport import BusClient
-
-__all__ = ["Bridge"]
-
-
-class Bridge:
-    def __init__(self, dom: Domain, bus_path: str, mtype: MessageType, topic: str,
-                 *, depth: int = 10):
-        self.dom = dom
-        self.mtype = mtype
-        self.topic = topic
-        self.pub = dom.create_publisher(mtype, topic, depth=depth)
-        self.sub = dom.create_subscription(mtype, topic)
-        self.bus = BusClient(bus_path)
-        self.bus.subscribe(topic)
-        self.relayed_out = 0  # agnocast -> bus
-        self.relayed_in = 0   # bus -> agnocast
-
-    # -- agnocast -> conventional ------------------------------------------------
-
-    def pump_agnocast(self) -> int:
-        n = 0
-        for ptr in self.sub.take():
-            try:
-                if ptr.origin == ORIGIN_BRIDGE:
-                    continue  # self-origin: ignore (loop prevention)
-                payload = serialize(ptr.msg)  # the Fig. 11 serialization cost
-                self.bus.publish(self.topic, payload, origin=1)
-                n += 1
-            finally:
-                ptr.release()
-        self.relayed_out += n
-        return n
-
-    # -- conventional -> agnocast --------------------------------------------------
-
-    def pump_bus(self, timeout: float = 0.0) -> int:
-        n = 0
-        while True:
-            got = self.bus.recv(timeout if n == 0 else 0.0)
-            if got is None:
-                return n
-            topic, origin, payload = got
-            if topic != self.topic or origin == 1:
-                continue  # self-origin: ignore (loop prevention)
-            fields = deserialize(payload)
-            loan = self.pub.borrow_loaded_message()
-            for name, spec in self.mtype.fields.items():
-                arr = fields[name]
-                if isinstance(spec, Ragged):
-                    getattr(loan, name).extend(arr)  # the Fig. 11 copy-in cost
-                else:
-                    loan.set(name, arr if spec.shape else np.asarray(arr).reshape(-1)[0])
-            while True:  # backpressure instead of dying on a full queue
-                try:
-                    self.pub.publish(loan, origin=ORIGIN_BRIDGE,
-                                     exclude_sub=self.sub.sidx)
-                    break
-                except AgnocastQueueFull:
-                    self.pub.reclaim()
-                    time.sleep(0.0005)
-            n += 1
-            self.relayed_in += 1
-
-    def spin_once(self, timeout: float = 0.05) -> int:
-        moved = self.pump_agnocast()
-        moved += self.pump_bus(0.0)
-        if moved == 0:
-            # wait on BOTH planes at once: the agnocast wake-up FIFO and the
-            # bus socket (blocking on only one would add up to ``timeout`` of
-            # latency to the other direction).
-            import select as _select
-
-            r, _, _ = _select.select([self.sub, self.bus], [], [], timeout)
-            if self.sub in r:
-                self.sub.drain_wakeups()
-            moved = self.pump_agnocast() + self.pump_bus(0.0)
-        return moved
-
-    def register(self, executor, *, group=None):
-        """Run this bridge on an :class:`repro.core.executor.EventExecutor`:
-        both planes' fds are multiplexed into the loop and each readable
-        event triggers the matching pump.  Returns the executor handle."""
-        return executor.add_bridge(self, group=group)
-
-    def close(self) -> None:
-        self.bus.close()
+__all__ = ["Bridge", "DomainBridge", "Router", "RoutingRule", "RoutingTable"]

@@ -9,8 +9,11 @@ restores that layer:
 
 * one ``selectors``-based (epoll on Linux) event loop multiplexes any
   number of :class:`~repro.core.topic.Subscription` wakeup FIFOs,
-  :class:`~repro.core.transport.BusClient` sockets (and whole
-  :class:`~repro.core.bridge.Bridge` instances), plus monotonic timers;
+  :class:`~repro.core.transport.BusClient` sockets, whole
+  :class:`~repro.core.routing.DomainBridge` instances (every endpoint FIFO
+  + bus socket + any blocked publisher's slot-freed FIFO), blocked
+  :class:`~repro.core.topic.Publisher` wakeups (``add_publisher``), plus
+  monotonic timers;
 * each subscription wakeup triggers one **batched zero-copy take**
   (``take_all`` claims up to the queue depth of descriptors under a single
   registry lock) and dispatches the resulting ``MessagePtr``s to the
@@ -174,20 +177,63 @@ class _BusHandle(_Handle):
         return out
 
 
-class _BridgeHandle(_Handle):
-    """Both planes of a :class:`repro.core.bridge.Bridge` in one loop."""
+class _PublisherHandle(_Handle):
+    """A Publisher's slot-freed FIFO: dispatch when backpressure lifts."""
 
-    def __init__(self, executor, group, bridge):
-        super().__init__(executor, group, f"bridge:{bridge.topic}")
-        self.bridge = bridge
-        self._fifo = bridge.sub.fileno()
-        self._sock = bridge.bus.fileno()
-        self.fds = [self._fifo, self._sock]
+    def __init__(self, executor, group, pub, callback):
+        super().__init__(executor, group, f"pub:{pub.topic}")
+        self.pub = pub
+        self.callback = callback
+        self.fds = [pub.fileno()]
 
     def _on_ready(self, fd: int) -> list[_Work]:
-        if fd == self._fifo:
-            self.bridge.sub.drain_wakeups()  # consume tokens in the loop thread
-            return [_Work(self, self.bridge.pump_agnocast)]
+        self.pub.drain_slot_wakeups()
+        return [_Work(self, lambda: self.callback(self.pub))]
+
+
+class _BridgeHandle(_Handle):
+    """All planes of a :class:`repro.core.routing.DomainBridge` in one loop:
+    every endpoint's wakeup FIFO, the bus socket, and — while a copy-in is
+    parked on ``AgnocastQueueFull`` — the blocked publisher's slot-freed
+    FIFO.  While parked, the bus fd stays suspended (no further frames are
+    consumed) and the publisher fd drives retries; once the parked publish
+    lands, intake resumes."""
+
+    def __init__(self, executor, group, bridge):
+        super().__init__(executor, group, f"bridge:{bridge.name}")
+        self.bridge = bridge
+        self._sock = bridge.bus.fileno()
+        self._sub_eps = {ep.sub.fileno(): ep for ep in bridge.endpoints.values()}
+        self._pub_fd: int | None = None
+        self.fds = list(self._sub_eps) + [self._sock]
+        bridge._handle = self  # topics attached later are watched too
+
+    def watch_endpoint(self, ep) -> None:
+        """Multiplex an endpoint attached after registration."""
+        fd = ep.sub.fileno()
+        if fd in self._sub_eps:
+            return
+        self._sub_eps[fd] = ep
+        self.fds.append(fd)
+        self.executor._resume_fd(fd, self)
+
+    def _on_ready(self, fd: int) -> list[_Work]:
+        if fd in self._sub_eps:
+            ep = self._sub_eps[fd]
+            ep.sub.drain_wakeups()  # consume tokens in the loop thread
+            if getattr(ep.sub, "hung_up", False):
+                # every writer closed: the fd is POLLHUP-readable forever —
+                # park it on the slow re-poll timer exactly like a plain
+                # subscription, or this loop would spin a core
+                self.executor._park_hangup(fd, self)
+            return [_Work(self, lambda ep=ep: self.bridge.pump_agnocast(ep.topic))]
+        if fd == self._pub_fd:
+            pub = self.bridge.blocked_publisher
+            if pub is not None:
+                pub.drain_slot_wakeups()
+                return [_Work(self, self._retry_blocked)]
+            self._disarm_pub()  # stale: the parked publish already landed
+            return []
         # bus socket: frames are only consumed when the pump runs, so suppress
         # the fd until then or a threaded loop would re-enqueue the same event
         self.executor._suspend_fd(fd)
@@ -196,9 +242,45 @@ class _BridgeHandle(_Handle):
             try:
                 self.bridge.pump_bus(0.0)
             finally:
-                self.executor._resume_fd(fd, self)
+                self._after_bus_pump()
 
-        return [_Work(self, run, cleanup=lambda: self.executor._resume_fd(fd, self))]
+        return [_Work(self, run, cleanup=self._after_bus_pump)]
+
+    # -- blocked-publisher multiplexing (backpressure) -------------------------
+
+    def _after_bus_pump(self) -> None:
+        pub = self.bridge.blocked_publisher
+        if pub is not None:
+            self._arm_pub(pub)
+        else:
+            self.executor._resume_fd(self._sock, self)
+
+    def _arm_pub(self, pub) -> None:
+        fd = pub.fileno()
+        self._pub_fd = fd
+        if fd not in self.fds:
+            self.fds.append(fd)
+        self.executor._resume_fd(fd, self)
+
+    def _disarm_pub(self) -> None:
+        fd, self._pub_fd = self._pub_fd, None
+        if fd is not None:
+            self.executor._suspend_fd(fd)
+            if fd in self.fds:
+                self.fds.remove(fd)
+
+    def _retry_blocked(self) -> None:
+        # a raising retry drops the parked frame (loan freed by the bridge):
+        # treat it as cleared, or the suspended bus fd would never resume
+        # and the bridge would silently stop relaying
+        cleared = True
+        try:
+            cleared = self.bridge.retry_pending()
+        finally:
+            if cleared:
+                self._disarm_pub()
+                # resume intake: buffered frames re-arm the socket readiness
+                self.executor._resume_fd(self._sock, self)
 
 
 class _TimerHandle(_Handle):
@@ -279,11 +361,21 @@ class EventExecutor:
         return self._adopt(_BusHandle(self, group or self.default_group,
                                       client, callback))
 
+    def add_publisher(self, pub, callback, *,
+                      group: CallbackGroup | None = None) -> _Handle:
+        """Watch a Publisher's slot-freed FIFO; dispatch ``callback(pub)``
+        whenever backpressure lifts (a subscriber released the last ref on
+        a ring slot) — the event-driven alternative to sleep-retrying
+        ``AgnocastQueueFull``."""
+        return self._adopt(_PublisherHandle(self, group or self.default_group,
+                                            pub, callback))
+
     def add_bridge(self, bridge, *, group: CallbackGroup | None = None) -> _Handle:
-        """Pump a Bridge from this loop (its own exclusive group by default:
-        the two pumps share the bridge's publisher/bus state)."""
-        g = group or CallbackGroup(MUTUALLY_EXCLUSIVE,
-                                   name=f"bridge:{bridge.topic}")
+        """Pump a DomainBridge/Bridge from this loop (its own exclusive
+        group by default: the pumps share the bridge's publisher/bus
+        state)."""
+        label = getattr(bridge, "name", None) or getattr(bridge, "topic", "?")
+        g = group or CallbackGroup(MUTUALLY_EXCLUSIVE, name=f"bridge:{label}")
         return self._adopt(_BridgeHandle(self, g, bridge))
 
     def add_timer(self, period_s: float, callback, *,
@@ -305,6 +397,9 @@ class EventExecutor:
         (MessagePtrs released, registry held-bits dropped).  Returns the
         number of discarded work items."""
         dropped = 0
+        bridge = getattr(handle, "bridge", None)
+        if bridge is not None and getattr(bridge, "_handle", None) is handle:
+            bridge._handle = None
         with self._cond:
             handle.cancelled = True
             if handle in self._handles:

@@ -279,6 +279,7 @@ class ReceivedMessage:
 
     def __init__(self, arena: Arena, descriptor: dict):
         self.type_name = descriptor["type"]
+        self.arena_name = arena.name  # identifies the publisher incarnation
         self._views: dict[str, np.ndarray] = {}
         for name, (kind, off, shape, dtstr) in descriptor["fields"].items():
             dt = np.dtype(dtstr)

@@ -26,6 +26,21 @@ Entry lifetime follows the paper's two-counter rule (§IV-C): an entry's
 payload may be freed only when its reference holders ("held", a bitmask of
 subscribers, popcount = refcount) and its unreceived-subscriber set are both
 empty — and only by the owning publisher.
+
+Two extensions ride on the same plane:
+
+* **Route metadata** (multi-domain federation, :mod:`repro.core.routing`):
+  each entry carries ``hops`` / ``src_tag`` / ``route_seq`` so a message
+  copied in from a remote agnocast domain keeps its origin identity while
+  transiting this domain's zero-copy plane — the relay bridges need it for
+  duplicate suppression and hop-count loop prevention.
+* **Owner-side backpressure wakeups**: every publisher owns a reverse
+  "slot freed" FIFO (``pub_fifo_path``).  When :meth:`Registry.release`
+  (or the janitor dropping a dead subscriber) clears an entry's last
+  *held* bit — the only counter a publish can block on — the releasing
+  process writes one byte to the owner's FIFO, so a publisher blocked on
+  ``AgnocastQueueFull`` is woken event-driven instead of sleep-polling
+  the ring.
 """
 
 from __future__ import annotations
@@ -34,6 +49,7 @@ import errno
 import fcntl
 import os
 import secrets
+import threading
 from dataclasses import dataclass
 
 import numpy as np
@@ -41,7 +57,8 @@ import numpy as np
 from .arena import _new_shm
 
 __all__ = ["Registry", "RegistryError", "AgnocastQueueFull", "Entry",
-           "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX"]
+           "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
+           "fifo_dir", "sub_fifo_path", "pub_fifo_path"]
 
 MAX_TOPICS = 64
 MAX_PUBS = 4
@@ -77,8 +94,11 @@ ENTRY_DT = np.dtype(
         ("held", "u8"),         # bitmask: subscribers currently holding a ref
         ("state", "u1"),
         ("origin", "u1"),
-        ("_pad", "u2"),
+        ("hops", "u1"),         # bus hops taken to reach this domain (0 = local)
+        ("_pad", "u1"),
         ("pub_refs", "u4"),     # publisher-local refs (0 after move-publish)
+        ("src_tag", "u8"),      # origin-domain tag (0 = no route metadata)
+        ("route_seq", "u8"),    # origin-unique message id for dedup
     ]
 )
 
@@ -113,6 +133,23 @@ class Entry:
     desc_len: int
     origin: int
     pub_idx: int
+    hops: int = 0
+    src_tag: int = 0
+    route_seq: int = 0
+
+
+def fifo_dir(reg: str) -> str:
+    return f"/tmp/.agnocast-{reg}.d"
+
+
+def sub_fifo_path(reg: str, tidx: int, sidx: int) -> str:
+    """Subscriber wakeup FIFO: publishers write one byte per publish."""
+    return os.path.join(fifo_dir(reg), f"t{tidx}s{sidx}.fifo")
+
+
+def pub_fifo_path(reg: str, tidx: int, pidx: int) -> str:
+    """Owner-side reverse FIFO: releasers write one byte per freed slot."""
+    return os.path.join(fifo_dir(reg), f"t{tidx}p{pidx}.pub.fifo")
 
 
 def _alive(pid: int) -> bool:
@@ -169,6 +206,8 @@ class Registry:
             MAX_TOPICS, MAX_PUBS, DEPTH_MAX
         )
         self._lock = _Flock(f"/tmp/.agnocast-{name}.lock")
+        self._pub_fds: dict[tuple[int, int], int] = {}  # (tidx,pidx) -> write fd
+        self._pub_fds_mu = threading.Lock()  # executor worker threads share us
         if owner:
             self._hdr[0] = _MAGIC
         elif int(self._hdr[0]) != _MAGIC:
@@ -198,6 +237,13 @@ class Registry:
     def close(self):
         import gc
 
+        with self._pub_fds_mu:
+            for fd in self._pub_fds.values():
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+            self._pub_fds = {}
         self._lock.close()
         for a in ("_hdr", "_journal", "topics", "entries"):
             setattr(self, a, None)
@@ -325,9 +371,13 @@ class Registry:
     def remove_subscriber(self, tidx: int, sidx: int) -> None:
         with self._lock:
             self._recover()
-            self._drop_subscriber(tidx, sidx)
+            owners = self._drop_subscriber(tidx, sidx)
+        self._notify_owners(owners)
 
-    def _drop_subscriber(self, tidx: int, sidx: int) -> None:
+    def _drop_subscriber(self, tidx: int, sidx: int) -> list[tuple[int, int]]:
+        """Caller holds the lock.  Returns the (tidx, pidx) owners to wake
+        (dropping refs may have freed ring slots) — the FIFO writes happen
+        after the lock is released."""
         mask = np.uint64(~np.uint64(1 << sidx))
         t = self.topics[tidx]
         with self._Txn(self, tidx, topic=True):
@@ -336,6 +386,41 @@ class Registry:
         e = self.entries[tidx]
         e["unreceived"] &= mask
         e["held"] &= mask  # releases the dead subscriber's references (§IV-C)
+        return [(tidx, p) for p in range(MAX_PUBS) if t["pub_alive"][p]]
+
+    def _notify_owners(self, owners: list[tuple[int, int]]) -> None:
+        for tidx, pidx in owners:
+            self._notify_owner(tidx, pidx)
+
+    # -- owner-side "slot freed" wakeup (reverse FIFO) -------------------------
+
+    def _notify_owner(self, tidx: int, pidx: int) -> None:
+        """Write one byte to the owning publisher's slot-freed FIFO.
+
+        Best-effort and non-blocking: no reader (publisher gone, or created
+        before this feature) means no wakeup is needed; a full pipe means
+        wakeups are already pending and will coalesce on drain.
+        """
+        key = (tidx, pidx)
+        with self._pub_fds_mu:  # fd cache shared by executor worker threads
+            fd = self._pub_fds.get(key)
+            if fd is None:
+                try:
+                    fd = os.open(pub_fifo_path(self.name, tidx, pidx),
+                                 os.O_WRONLY | os.O_NONBLOCK)
+                except OSError:
+                    return  # ENXIO/ENOENT: nobody is listening
+                self._pub_fds[key] = fd
+            try:
+                os.write(fd, b"\x01")
+            except BlockingIOError:
+                pass  # pipe full: a wakeup is already pending
+            except OSError:
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+                self._pub_fds.pop(key, None)
 
     def publishers(self, tidx: int) -> list[tuple[int, str]]:
         with self._lock:
@@ -349,9 +434,22 @@ class Registry:
 
     # -- the ioctl surface: publish / take / release --------------------------
 
+    def can_publish(self, tidx: int, pidx: int) -> bool:
+        """Would :meth:`publish` succeed right now?  The target ring slot is
+        publishable unless a subscriber still *holds* its occupant (an
+        unreceived-only occupant is dropped by QoS keep-last)."""
+        with self._lock:
+            self._recover()
+            t = self.topics[tidx]
+            depth = int(t["pub_depth"][pidx])
+            slot = int(t["pub_next_seq"][pidx]) % depth
+            e = self.entries[tidx, pidx, slot]
+            return not (int(e["state"]) == ST_USED and int(e["held"]))
+
     def publish(self, tidx: int, pidx: int, desc_off: int, desc_len: int,
-                *, origin: int = ORIGIN_AGNOCAST,
-                exclude_sub: int = -1) -> tuple[int, list[int]]:
+                *, origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
+                hops: int = 0, src_tag: int = 0,
+                route_seq: int = 0) -> tuple[int, list[int]]:
         """Enqueue an entry; returns (seq, freeable_seqs_for_owner).
 
         QoS keep-last(depth): an *unreceived* occupant of the target slot is
@@ -395,6 +493,9 @@ class Registry:
                 e["unreceived"] = np.uint64(sub_mask)
                 e["held"] = 0
                 e["origin"] = origin
+                e["hops"] = hops
+                e["src_tag"] = np.uint64(src_tag)
+                e["route_seq"] = np.uint64(route_seq)
                 e["pub_refs"] = 0  # move semantics: rvalue publish (§VII-A)
                 e["state"] = ST_USED
                 t["pub_next_seq"][pidx] = seq + 1
@@ -428,13 +529,23 @@ class Registry:
                     e["held"] = np.uint64(int(e["held"]) | int(bit))
                     got.append(
                         Entry(seq, int(e["desc_off"]), int(e["desc_len"]),
-                              int(e["origin"]), pidx)
+                              int(e["origin"]), pidx, hops=int(e["hops"]),
+                              src_tag=int(e["src_tag"]),
+                              route_seq=int(e["route_seq"]))
                     )
         return got
 
     def release(self, tidx: int, pidx: int, sidx: int, seq: int) -> None:
-        """Drop subscriber ``sidx``'s reference on entry ``seq``."""
+        """Drop subscriber ``sidx``'s reference on entry ``seq``.
+
+        When this drops the entry's last *held* reference the owner is woken
+        through its slot-freed FIFO: publish only blocks on held occupants
+        (an unreceived-only one is dropped by QoS keep-last), so the
+        held->0 transition is exactly when a blocked publisher can make
+        progress — waiting for the unreceived set too would strand it until
+        every slow subscriber catches up."""
         bit = np.uint64(1 << sidx)
+        freed = False
         with self._lock:
             self._recover()
             t = self.topics[tidx]
@@ -443,6 +554,11 @@ class Registry:
             if int(e["seq"]) == seq and int(e["state"]) == ST_USED:
                 with self._Txn(self, tidx, pidx, slot, entry=True):
                     e["held"] = np.uint64(int(e["held"]) & ~int(bit))
+                freed = int(e["held"]) == 0
+        if freed:
+            # outside the flock: the FIFO write is best-effort/non-blocking
+            # and must not lengthen the global critical section
+            self._notify_owner(tidx, pidx)
 
     def reclaimable(self, tidx: int, pidx: int) -> list[int]:
         """Owner-side query: seqs whose payload may now be freed (both
@@ -468,6 +584,7 @@ class Registry:
         (safe to crash mid-sweep and re-run).
         """
         report = {"dead_subs": 0, "dead_pubs": 0, "orphan_arenas": []}
+        owners: list[tuple[int, int]] = []
         with self._lock:
             self._recover()
             for tidx in range(MAX_TOPICS):
@@ -477,7 +594,7 @@ class Registry:
                 alive = int(t["sub_alive"])
                 for s in range(MAX_SUBS):
                     if (alive >> s) & 1 and not _alive(int(t["sub_pids"][s])):
-                        self._drop_subscriber(tidx, s)
+                        owners.extend(self._drop_subscriber(tidx, s))
                         report["dead_subs"] += 1
                 for p in range(MAX_PUBS):
                     if t["pub_alive"][p] and not _alive(int(t["pub_pids"][p])):
@@ -488,6 +605,7 @@ class Registry:
                         self.entries[tidx, p]["state"] = ST_DEAD
                         report["dead_pubs"] += 1
                         report["orphan_arenas"].append(arena)
+        self._notify_owners(owners)  # FIFO writes outside the flock
         return report
 
     # -- introspection ---------------------------------------------------------

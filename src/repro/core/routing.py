@@ -1,0 +1,580 @@
+"""Federated routing plane: multi-domain bridging over the conventional bus
+(§IV-D generalized to N≥3 agnocast domains).
+
+The paper's bridge federates exactly one topic between one agnocast domain
+and one conventional bus.  This module grows that into a routing subsystem
+(the HPRM / service-discovery-middleware shape — rule-based selection
+between the local zero-copy plane and networked planes):
+
+* :class:`RoutingTable` — longest-topic-prefix rules mapping a topic to
+  the remote bus(es)/domain(s) that should see it.  Among the rules whose
+  prefix matches a topic, only those at the *longest* matching prefix
+  apply; a rule whose remote is ``None`` is a blackhole (keep the topic
+  local), shadowing any shorter-prefix rule.
+* :class:`DomainBridge` — one bridge per remote bus, federating any number
+  of topics (today's single-topic ``Bridge`` is the one-rule special
+  case).  Agnocast → bus relays serialize (the Fig. 11 cost); bus →
+  agnocast relays deserialize into a loaned arena message and
+  move-publish.
+* :class:`Router` — owns the table and the bridges of one domain,
+  registers them all on one :class:`~repro.core.executor.EventExecutor`,
+  and enforces loop prevention across the federation.
+
+Loop-prevention invariants (each message is delivered at most once per
+domain, and relay chains terminate, even under cyclic bus topologies):
+
+1. **Origin tag**: every routed frame carries ``src_tag``, the tag of the
+   agnocast domain it originated in (assigned at first relay).  A bridge
+   drops any frame whose ``src_tag`` equals its own domain's tag — a
+   message can never re-enter its origin domain (no ping-pong).  Frames
+   from *conventional* bus publishers carry no origin; each domain that
+   bridges that bus adopts them independently under its own tag (dedup and
+   exactly-once guarantees apply to agnocast-origin routed messages).
+2. **Route id dedup**: frames carry ``route_seq``, an origin-unique id
+   (derived deterministically from the origin ring position, so sibling
+   bridges of one router assign the *same* id to the same message).  A
+   router admits each ``(src_tag, route_seq)`` once; copies arriving over
+   other paths of a cyclic topology are dropped.
+3. **Hop count**: frames carry ``hops``; entries copied into a domain keep
+   it, and re-relays increment it.  Frames beyond ``max_hops`` are dropped
+   — the backstop if 1–2 are ever misconfigured (e.g. colliding tags).
+4. **Self-subscription exclusion**: a bridge's copy-in publish excludes the
+   bridge's own subscription slot, so a bridge never re-relays a message it
+   itself imported; sibling bridges of the same router *do* see it, which
+   is exactly what lets a middle domain relay A → B → C.
+
+Backpressure FIFO protocol (event-driven end to end, no sleep-polling):
+
+* Every publisher owns a reverse "slot freed" FIFO
+  (``registry.pub_fifo_path``); ``Registry.release`` — and the janitor
+  releasing a dead subscriber's refs — writes one byte to it when an
+  entry's last *held* reference drops (the only counter a publish can
+  block on).
+* A bridge whose copy-in hits ``AgnocastQueueFull`` *parks* the filled
+  loan (``pending``), stops consuming bus frames (bounded memory, FIFO
+  order preserved), and exposes the blocked publisher's ``fileno()``; the
+  executor multiplexes that fd and retries the parked publish on wakeup.
+* Standalone (executor-less) bridges select on the same fd in
+  ``spin_once``; plain publishers use ``Publisher.wait_for_slot`` /
+  ``publish_blocking``.
+
+Copy-in is abort-safe: if deserialization or field copy-in raises
+mid-fill, the borrowed loan's arena blocks are returned (``dealloc``) —
+a malformed frame can never leak publisher arena memory.
+"""
+
+from __future__ import annotations
+
+import itertools
+import secrets
+import select
+import threading
+import zlib
+from collections import OrderedDict
+from typing import NamedTuple
+
+import numpy as np
+
+from .messages import MessageType, Ragged, deserialize, serialize
+from .registry import ORIGIN_BRIDGE, AgnocastQueueFull
+from .topic import Domain, Publisher, Subscription
+from .transport import BusClient, Frame
+
+__all__ = ["RoutingRule", "RoutingTable", "DomainBridge", "Router",
+           "Bridge", "domain_tag"]
+
+DEFAULT_MAX_HOPS = 8
+_SEEN_LIMIT = 8192
+
+
+def domain_tag(name: str) -> int:
+    """Stable nonzero tag for a domain name (every participant of the same
+    domain derives the same tag without coordination)."""
+    return zlib.crc32(name.encode()) | 0x1_0000_0000
+
+
+# route_seq id spaces are disjoint: bit 63 marks ids minted for *adopted*
+# conventional frames; origin ids stay below bit 63, so the two can never
+# collide in a dedup window keyed on (src_tag, route_seq).  Both spaces are
+# salted per *incarnation* — ring seqs restart at 1 when a publisher
+# re-registers and counters restart with the process, and src_tag is a
+# stable name hash, so unsalted ids would replay into remote dedup windows
+# after a restart and silently drop fresh messages.
+_ADOPTED_ID = 1 << 63
+
+
+def _origin_salt(arena: str, tidx: int, pidx: int) -> int:
+    """Publisher-incarnation salt: the arena name is random per process, so
+    a re-registered publisher can never reproduce its predecessor's ids —
+    while every sibling bridge reading the same registry derives the same
+    salt for the same message."""
+    return zlib.crc32(f"{arena}:{tidx}:{pidx}".encode())
+
+
+def _origin_route_seq(salt: int, seq: int) -> int:
+    """Deterministic origin-unique id from (incarnation salt, ring seq)."""
+    return ((salt & 0x7FFF_FFFF) << 32) | (seq & 0xFFFF_FFFF)
+
+
+class _AdoptedIdMint:
+    """Mints adopted-frame ids: _ADOPTED_ID | random incarnation salt |
+    counter — shared by Router and standalone DomainBridge so the id-space
+    layout lives in exactly one place."""
+
+    def __init__(self):
+        self._salt = secrets.randbits(31) << 32
+        self._counter = itertools.count(1)
+
+    def next(self) -> int:
+        return _ADOPTED_ID | self._salt | (next(self._counter) & 0xFFFF_FFFF)
+
+
+class _DedupWindow:
+    """Bounded record-and-test window over ``(src_tag, route_seq)`` — the
+    one dedup implementation shared by :class:`Router` (across its bridges)
+    and standalone :class:`DomainBridge` instances."""
+
+    def __init__(self, limit: int = _SEEN_LIMIT):
+        self._seen: OrderedDict[tuple[int, int], bool] = OrderedDict()
+        self._limit = limit
+        self._lock = threading.Lock()
+
+    def admit(self, src_tag: int, route_seq: int) -> bool:
+        """True exactly once per key; later calls with the same key are
+        duplicates."""
+        key = (src_tag, route_seq)
+        with self._lock:
+            if key in self._seen:
+                return False
+            self._seen[key] = True
+            while len(self._seen) > self._limit:
+                self._seen.popitem(last=False)
+            return True
+
+    def forget(self, src_tag: int, route_seq: int) -> None:
+        """Un-admit a key whose message was NOT delivered (failed copy-in):
+        a copy arriving over another path must not be treated as a dup."""
+        with self._lock:
+            self._seen.pop((src_tag, route_seq), None)
+
+
+class RoutingRule(NamedTuple):
+    prefix: str
+    remote: str | None  # DomainBridge name; None = keep local (blackhole)
+
+
+class RoutingTable:
+    """Longest-topic-prefix rules → remote bus/domain selection."""
+
+    def __init__(self):
+        self.rules: list[RoutingRule] = []
+
+    def add(self, prefix: str, remote: str | None) -> RoutingRule:
+        rule = RoutingRule(prefix, remote)
+        self.rules.append(rule)
+        return rule
+
+    def match(self, topic: str) -> RoutingRule | None:
+        """The single best rule (longest prefix; insertion order breaks
+        ties).  ``None`` if no rule matches."""
+        best: RoutingRule | None = None
+        for r in self.rules:
+            if topic.startswith(r.prefix):
+                if best is None or len(r.prefix) > len(best.prefix):
+                    best = r
+        return best
+
+    def lookup(self, topic: str) -> list[str]:
+        """Remotes that should federate ``topic``: every distinct remote at
+        the longest matching prefix length.  A blackhole rule at that
+        length keeps the topic local ([])."""
+        best = -1
+        chosen: list[RoutingRule] = []
+        for r in self.rules:
+            if topic.startswith(r.prefix):
+                if len(r.prefix) > best:
+                    best, chosen = len(r.prefix), [r]
+                elif len(r.prefix) == best:
+                    chosen.append(r)
+        if best < 0 or any(r.remote is None for r in chosen):
+            return []
+        out: list[str] = []
+        for r in chosen:
+            if r.remote not in out:
+                out.append(r.remote)
+        return out
+
+
+class _Endpoint:
+    """One federated topic on one bridge: the bridge's pub/sub pair."""
+
+    __slots__ = ("mtype", "topic", "pub", "sub")
+
+    def __init__(self, mtype: MessageType, topic: str, pub: Publisher,
+                 sub: Subscription):
+        self.mtype = mtype
+        self.topic = topic
+        self.pub = pub
+        self.sub = sub
+
+
+class _Pending(NamedTuple):
+    """A filled loan parked on AgnocastQueueFull, awaiting a freed slot."""
+
+    ep: _Endpoint
+    loan: object
+    hops: int
+    src_tag: int
+    route_seq: int
+
+
+class DomainBridge:
+    """Bridge between one agnocast domain and one remote bus, federating a
+    set of topics.  Usually owned by a :class:`Router`; standalone use (one
+    bus, no routing table) is the legacy single-topic :class:`Bridge`."""
+
+    def __init__(self, dom: Domain, bus_path: str, *, name: str = "remote",
+                 router: "Router | None" = None, depth: int = 10,
+                 max_hops: int = DEFAULT_MAX_HOPS):
+        self.dom = dom
+        self.name = name
+        self.router = router
+        self.tag = router.tag if router is not None else domain_tag(dom.name)
+        self.depth = depth
+        self.max_hops = router.max_hops if router is not None else max_hops
+        self.bus = BusClient(bus_path)
+        self.endpoints: dict[str, _Endpoint] = {}
+        self._pending: _Pending | None = None
+        # standalone bridges own their dedup window + id mint; router-owned
+        # ones share the router's
+        self._seen = _DedupWindow() if router is None else None
+        self._mint = _AdoptedIdMint() if router is None else None
+        self._handle = None  # set by the executor's bridge handle
+        # counters (observability + tests)
+        self.relayed_out = 0       # agnocast -> bus
+        self.relayed_in = 0        # bus -> agnocast
+        self.dropped_loops = 0     # src_tag == own tag, or hop cap
+        self.dropped_dups = 0      # (src_tag, route_seq) already admitted
+        self.copy_errors = 0       # aborted copy-ins (loan returned)
+
+    # -- federation surface ---------------------------------------------------
+
+    def attach(self, mtype: MessageType, topic: str, *,
+               depth: int | None = None) -> _Endpoint:
+        """Federate ``topic`` over this bridge (idempotent per topic).
+        Safe after :meth:`register`: a live executor handle is told to
+        start watching the new endpoint's wakeup FIFO."""
+        ep = self.endpoints.get(topic)
+        if ep is None:
+            pub = self.dom.create_publisher(mtype, topic,
+                                            depth=depth or self.depth)
+            sub = self.dom.create_subscription(mtype, topic)
+            ep = _Endpoint(mtype, topic, pub, sub)
+            self.endpoints[topic] = ep
+            self.bus.subscribe(topic)
+            if self._handle is not None:
+                self._handle.watch_endpoint(ep)
+        return ep
+
+    # -- loop prevention ------------------------------------------------------
+
+    def _admit(self, src_tag: int, route_seq: int) -> bool:
+        if self.router is not None:
+            return self.router.admit(src_tag, route_seq)
+        return self._seen.admit(src_tag, route_seq)
+
+    def _forget(self, src_tag: int, route_seq: int) -> None:
+        if self.router is not None:
+            self.router.forget(src_tag, route_seq)
+        else:
+            self._seen.forget(src_tag, route_seq)
+
+    def _next_rseq(self) -> int:
+        if self.router is not None:
+            return self.router.next_route_seq()
+        return self._mint.next()
+
+    # -- agnocast -> conventional ----------------------------------------------
+
+    def pump_agnocast(self, topic: str | None = None) -> int:
+        """Serialize pending agnocast messages onto the bus (Fig. 11 cost).
+
+        Locally originated messages get fresh route metadata; messages a
+        sibling bridge copied in keep theirs (hop count incremented)."""
+        n = 0
+        eps = ([self.endpoints[topic]] if topic is not None
+               else list(self.endpoints.values()))
+        for ep in eps:
+            for ptr in ep.sub.take():
+                try:
+                    hops = ptr.hops
+                    if ptr.origin == ORIGIN_BRIDGE:
+                        # keep the identity it arrived with (src == self.tag
+                        # means this domain *adopted* a conventional frame —
+                        # still relayed; true ping-pong is dropped at frame
+                        # admission, where src names the frame's origin)
+                        src, rseq = ptr.src_tag, ptr.route_seq
+                        if hops >= self.max_hops:
+                            self.dropped_loops += 1
+                            continue
+                    else:  # local origin: first relay assigns identity.
+                        # The salt comes from the message's own arena name
+                        # (pinned at take()): no registry lookup, and every
+                        # sibling bridge derives the same id even if the
+                        # origin publisher dies / its slot is swept between
+                        # their pumps.
+                        src = self.tag
+                        rseq = _origin_route_seq(
+                            _origin_salt(ptr.msg.arena_name, ep.sub.tidx,
+                                         ptr.pub_idx),
+                            ptr.seq)
+                    payload = serialize(ptr.msg)  # the Fig. 11 serialization
+                    self.bus.publish(ep.topic, payload, origin=1,
+                                     hops=hops + 1, src_tag=src,
+                                     route_seq=rseq)
+                    n += 1
+                finally:
+                    ptr.release()
+        self.relayed_out += n
+        return n
+
+    # -- conventional -> agnocast ------------------------------------------------
+
+    def pump_bus(self, timeout: float = 0.0) -> int:
+        """Copy admitted bus frames into the agnocast plane.
+
+        While a copy-in is parked on a full queue no further frames are
+        consumed (bounded memory, per-topic order preserved); the parked
+        publish is retried first."""
+        n = 0
+        if self._pending is not None and not self.retry_pending():
+            return n
+        while True:
+            fr = self.bus.recv_frame(timeout if n == 0 else 0.0)
+            if fr is None:
+                return n
+            n += self._handle_frame(fr)
+            if self._pending is not None:
+                return n
+
+    def _handle_frame(self, fr: Frame) -> int:
+        ep = self.endpoints.get(fr.topic)
+        if ep is None:
+            return 0
+        if fr.src_tag == self.tag or fr.hops > self.max_hops:
+            self.dropped_loops += 1  # returned to origin, or runaway chain
+            return 0
+        if fr.origin == 1:  # routed frame: identity travels with it
+            src, rseq = fr.src_tag, fr.route_seq
+            if not self._admit(src, rseq):
+                self.dropped_dups += 1
+                return 0
+        else:  # conventional publisher: this domain adopts the message
+            src, rseq = self.tag, self._next_rseq()
+        try:
+            self._copy_in(ep, fr, src, rseq)
+        except Exception:
+            self.copy_errors += 1  # malformed frame: dropped, nothing leaked
+            if fr.origin == 1:
+                # the message was NOT delivered: release its dedup key so a
+                # copy arriving over another path still can be (transient
+                # failures like arena pressure must not burn exactly-once)
+                self._forget(src, rseq)
+            return 0
+        return 1
+
+    def _copy_in(self, ep: _Endpoint, fr: Frame, src: int, rseq: int) -> None:
+        fields = deserialize(fr.payload)
+        loan = ep.pub.borrow_loaded_message()
+        try:
+            for name, spec in ep.mtype.fields.items():
+                arr = fields[name]
+                if isinstance(spec, Ragged):
+                    getattr(loan, name).extend(arr)  # the Fig. 11 copy-in
+                else:
+                    loan.set(name, arr if spec.shape
+                             else np.asarray(arr).reshape(-1)[0])
+        except Exception:
+            loan.dealloc()  # abort path: return the arena blocks
+            raise
+        self._publish_or_park(ep, loan, fr.hops, src, rseq)
+
+    def _publish_or_park(self, ep: _Endpoint, loan, hops: int, src: int,
+                         rseq: int) -> None:
+        ep.pub.reclaim()
+        try:
+            ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
+                           exclude_sub=ep.sub.sidx, hops=hops,
+                           src_tag=src, route_seq=rseq)
+            self.relayed_in += 1
+        except AgnocastQueueFull:
+            # park: the loan stays valid; the blocked publisher's slot-freed
+            # FIFO is the wakeup source (executor-multiplexed or select()ed)
+            self._pending = _Pending(ep, loan, hops, src, rseq)
+        except Exception:
+            loan.dealloc()  # any other failure: return the arena blocks
+            raise
+
+    def retry_pending(self) -> bool:
+        """Retry the parked copy-in; True when the bridge is unblocked."""
+        if self._pending is None:
+            return True
+        ep, loan, hops, src, rseq = self._pending
+        ep.pub.reclaim()
+        try:
+            ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
+                           exclude_sub=ep.sub.sidx, hops=hops,
+                           src_tag=src, route_seq=rseq)
+        except AgnocastQueueFull:
+            return False
+        except Exception:
+            self._pending = None  # poisoned: drop the frame, free the loan
+            self.copy_errors += 1
+            loan.dealloc()
+            # undelivered: release its dedup key so another route can still
+            # deliver (no-op for adopted ids — they are never re-admitted)
+            self._forget(src, rseq)
+            raise
+        self._pending = None
+        self.relayed_in += 1
+        return True
+
+    @property
+    def blocked_publisher(self) -> Publisher | None:
+        """The publisher whose full ring is stalling copy-ins (if any)."""
+        return self._pending.ep.pub if self._pending is not None else None
+
+    # -- standalone spinning -----------------------------------------------------
+
+    def spin_once(self, timeout: float = 0.05) -> int:
+        """Pump both planes once, then wait on every relevant fd at once:
+        each endpoint's wakeup FIFO, the bus socket, and — when a copy-in is
+        parked — the blocked publisher's slot-freed FIFO."""
+        moved = self.pump_agnocast() + self.pump_bus(0.0)
+        if moved == 0:
+            rlist: list = [ep.sub for ep in self.endpoints.values()]
+            pub = self.blocked_publisher
+            if pub is not None:
+                rlist.append(pub)
+            else:
+                rlist.append(self.bus)
+            r, _, _ = select.select(rlist, [], [], timeout)
+            for obj in r:
+                if isinstance(obj, Subscription):
+                    obj.drain_wakeups()
+                elif isinstance(obj, Publisher):
+                    obj.drain_slot_wakeups()
+            moved = self.pump_agnocast() + self.pump_bus(0.0)
+        return moved
+
+    def register(self, executor, *, group=None):
+        """Run this bridge on an :class:`repro.core.executor.EventExecutor`:
+        every endpoint FIFO, the bus socket, and any blocked publisher's
+        slot-freed FIFO are multiplexed into the loop."""
+        return executor.add_bridge(self, group=group)
+
+    def close(self) -> None:
+        if self._pending is not None:
+            try:
+                self._pending.loan.dealloc()  # return the parked loan's arena
+            except Exception:
+                pass
+            # the parked frame was admitted but never delivered: release its
+            # dedup key so other routes (or a restarted bridge) can deliver
+            self._forget(self._pending.src_tag, self._pending.route_seq)
+            self._pending = None
+        self.bus.close()
+
+
+class Bridge(DomainBridge):
+    """The paper's single-topic bridge (§IV-D) as a one-rule special case
+    of :class:`DomainBridge` — kept for API compatibility."""
+
+    def __init__(self, dom: Domain, bus_path: str, mtype: MessageType,
+                 topic: str, *, depth: int = 10):
+        super().__init__(dom, bus_path, name=f"bridge:{topic}", depth=depth)
+        ep = self.attach(mtype, topic)
+        self.mtype = mtype
+        self.topic = topic
+        self.pub = ep.pub
+        self.sub = ep.sub
+
+
+class Router:
+    """One domain's view of the federation: the routing table plus one
+    :class:`DomainBridge` per remote bus, sharing a dedup window."""
+
+    def __init__(self, dom: Domain, *, tag: int | None = None,
+                 max_hops: int = DEFAULT_MAX_HOPS,
+                 seen_limit: int = _SEEN_LIMIT):
+        self.dom = dom
+        self.tag = tag if tag is not None else domain_tag(dom.name)
+        self.max_hops = max_hops
+        self.table = RoutingTable()
+        self.bridges: dict[str, DomainBridge] = {}
+        self._seen = _DedupWindow(seen_limit)
+        self._mint = _AdoptedIdMint()
+
+    # -- topology -------------------------------------------------------------
+
+    def add_remote(self, name: str, bus_path: str, *,
+                   depth: int = 10) -> DomainBridge:
+        if name in self.bridges:
+            raise ValueError(f"remote {name!r} already exists")
+        br = DomainBridge(self.dom, bus_path, name=name, router=self,
+                          depth=depth)
+        self.bridges[name] = br
+        return br
+
+    def add_route(self, prefix: str, remote: str | None) -> RoutingRule:
+        if remote is not None and remote not in self.bridges:
+            raise ValueError(f"unknown remote {remote!r}")
+        return self.table.add(prefix, remote)
+
+    def activate(self, mtype: MessageType, topic: str) -> list[DomainBridge]:
+        """Start federating ``topic``: attach an endpoint on every remote
+        the table selects (longest-prefix rules)."""
+        out = []
+        for name in self.table.lookup(topic):
+            br = self.bridges[name]
+            br.attach(mtype, topic)
+            out.append(br)
+        return out
+
+    # -- shared loop-prevention state ------------------------------------------
+
+    def admit(self, src_tag: int, route_seq: int) -> bool:
+        """Record-and-test the dedup window: True exactly once per
+        ``(src_tag, route_seq)`` across all of this router's bridges."""
+        return self._seen.admit(src_tag, route_seq)
+
+    def forget(self, src_tag: int, route_seq: int) -> None:
+        """Un-admit a key whose message was not delivered (failed copy-in)."""
+        self._seen.forget(src_tag, route_seq)
+
+    def next_route_seq(self) -> int:
+        """Mint an id for an adopted conventional frame: disjoint from the
+        ring-derived origin ids (``_ADOPTED_ID``) and salted per router
+        incarnation so restarts / sibling routers never reuse a key."""
+        return self._mint.next()
+
+    # -- running ----------------------------------------------------------------
+
+    def register(self, executor, *, group=None) -> list:
+        """Put every bridge on one EventExecutor loop."""
+        return [br.register(executor, group=group)
+                for br in self.bridges.values()]
+
+    def spin_once(self, timeout: float = 0.05) -> int:
+        """Standalone round-robin pump (tests / executor-less deployments)."""
+        moved = sum(br.pump_agnocast() + br.pump_bus(0.0)
+                    for br in self.bridges.values())
+        if moved == 0 and timeout > 0:
+            per = timeout / max(len(self.bridges), 1)
+            moved = sum(br.spin_once(per) for br in self.bridges.values())
+        return moved
+
+    def close(self) -> None:
+        for br in self.bridges.values():
+            br.close()
+        self.bridges = {}

@@ -82,6 +82,24 @@ class MessagePtr:
     def origin(self) -> int:
         return self._state.entry.origin
 
+    @property
+    def pub_idx(self) -> int:
+        return self._state.entry.pub_idx
+
+    # -- route metadata (multi-domain federation, repro.core.routing) -----------
+
+    @property
+    def hops(self) -> int:
+        return self._state.entry.hops
+
+    @property
+    def src_tag(self) -> int:
+        return self._state.entry.src_tag
+
+    @property
+    def route_seq(self) -> int:
+        return self._state.entry.route_seq
+
     # -- refcount management (create/duplicate/destroy, §IV-C) -----------------
 
     def clone(self) -> "MessagePtr":

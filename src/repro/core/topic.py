@@ -17,6 +17,12 @@ Publish passes only a constant-size descriptor through the metadata plane;
 payload bytes are never copied (true zero-copy).  Wake-ups use a per-
 subscriber FIFO write of one byte — O(1) in payload size, preserving the
 paper's size-independent latency property.
+
+Backpressure is symmetric and event-driven: each publisher owns a reverse
+"slot freed" FIFO written by releasers (``Registry.release`` / the
+janitor), so a publisher hitting ``AgnocastQueueFull`` blocks in
+``wait_for_slot``/``publish_blocking`` (or multiplexes ``fileno()`` into an
+``EventExecutor``) instead of sleep-polling the ring.
 """
 
 from __future__ import annotations
@@ -26,23 +32,23 @@ import os
 import pickle
 import secrets
 import select
+import time
 
 from .arena import Arena
 from .messages import LoanedMessage, MessageType, ReceivedMessage
-from .registry import ORIGIN_AGNOCAST, Registry
+from .registry import (
+    ORIGIN_AGNOCAST,
+    AgnocastQueueFull,
+    Registry,
+    fifo_dir as _fifo_dir,
+    pub_fifo_path as _pub_fifo_path,
+    sub_fifo_path as _fifo_path,
+)
 from .smart_ptr import MessagePtr
 
 __all__ = ["Domain", "Publisher", "Subscription"]
 
 _DEFAULT_ARENA = 64 << 20
-
-
-def _fifo_dir(reg: str) -> str:
-    return f"/tmp/.agnocast-{reg}.d"
-
-
-def _fifo_path(reg: str, tidx: int, sidx: int) -> str:
-    return os.path.join(_fifo_dir(reg), f"t{tidx}s{sidx}.fifo")
 
 
 class Domain:
@@ -141,6 +147,20 @@ class Publisher:
         self.pidx = dom.registry.add_publisher(self.tidx, os.getpid(), dom.arena.name, depth)
         self._inflight: dict[int, tuple[int, int, list[int]]] = {}  # seq -> (desc_off, desc_len, payload offs)
         self._fifo_fds: dict[int, int] = {}
+        # owner-side "slot freed" reverse FIFO: releasers (Registry.release /
+        # the janitor) write a byte when a ring slot becomes reusable.  The
+        # read end is held open for the publisher's whole life so wakeups are
+        # never lost while we are not waiting.  O_RDWR (not O_RDONLY): the
+        # publisher itself anchors a write end, so the fd can never reach
+        # EOF-permanently-readable when a releaser process closes its cached
+        # write fd — the POLLHUP hazard Subscription handles with hung_up
+        # parking cannot occur here by construction.
+        path = _pub_fifo_path(dom.name, self.tidx, self.pidx)
+        try:
+            os.mkfifo(path)
+        except FileExistsError:
+            pass
+        self._slot_fifo = os.open(path, os.O_RDWR | os.O_NONBLOCK)
 
     # -- the Fig. 2 API ----------------------------------------------------------
 
@@ -148,8 +168,13 @@ class Publisher:
         return self.mtype.loan(self.dom.arena)
 
     def publish(self, loan: LoanedMessage, *, origin: int = ORIGIN_AGNOCAST,
-                exclude_sub: int = -1) -> int:
-        """Move-publish: the loan is consumed (rvalue semantics, §VII-A)."""
+                exclude_sub: int = -1, hops: int = 0, src_tag: int = 0,
+                route_seq: int = 0) -> int:
+        """Move-publish: the loan is consumed (rvalue semantics, §VII-A).
+
+        ``hops``/``src_tag``/``route_seq`` are route metadata for messages
+        relayed in from other agnocast domains (see :mod:`repro.core.routing`);
+        locally originated messages leave them zero."""
         if loan.arena is not self.dom.arena:
             raise ValueError("loan does not belong to this publisher's arena")
         desc = pickle.dumps(loan.descriptor(), protocol=5)  # constant-size metadata
@@ -157,7 +182,9 @@ class Publisher:
         self.dom.arena.write_bytes(off, desc)
         try:
             seq, freeable = self.dom.registry.publish(
-                self.tidx, self.pidx, off, len(desc), origin=origin, exclude_sub=exclude_sub
+                self.tidx, self.pidx, off, len(desc), origin=origin,
+                exclude_sub=exclude_sub, hops=hops, src_tag=src_tag,
+                route_seq=route_seq
             )
         except Exception:
             self.dom.arena.free(off)  # queue full: loan stays valid for retry
@@ -184,6 +211,76 @@ class Publisher:
         seqs = self.dom.registry.reclaimable(self.tidx, self.pidx)
         self._reclaim(seqs)
         return len(seqs)
+
+    # -- event-driven backpressure (slot-freed reverse FIFO) -----------------------
+
+    def fileno(self) -> int:
+        """The slot-freed FIFO's read end — selectable by an event loop.
+        Readable exactly when a releaser freed a ring slot since the last
+        :meth:`drain_slot_wakeups`."""
+        return self._slot_fifo
+
+    def drain_slot_wakeups(self) -> int:
+        """Consume pending slot-freed tokens without blocking."""
+        n = 0
+        try:
+            while True:
+                chunk = os.read(self._slot_fifo, 4096)
+                if not chunk:
+                    break  # no writer currently holds the other end
+                n += len(chunk)
+        except BlockingIOError:
+            pass
+        except OSError:
+            pass
+        return n
+
+    def wait_for_slot(self, timeout: float | None = None) -> bool:
+        """Block until :meth:`publish` can succeed (a ring slot is free or
+        droppable), waking event-driven on the slot-freed FIFO.
+
+        Returns ``True`` when a slot is available, ``False`` on timeout.
+        Reclaims fully-released payloads as a side effect."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            self.reclaim()
+            if self.dom.registry.can_publish(self.tidx, self.pidx):
+                return True
+            left = None
+            if deadline is not None:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+            r, _, _ = select.select([self._slot_fifo], [], [], left)
+            if r:
+                self.drain_slot_wakeups()
+
+    def publish_blocking(self, loan: LoanedMessage, *,
+                         timeout: float | None = None, should_stop=None,
+                         origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
+                         hops: int = 0, src_tag: int = 0,
+                         route_seq: int = 0) -> int | None:
+        """Publish with event-driven backpressure: on ``AgnocastQueueFull``
+        wait on the slot-freed FIFO (never sleep-poll) and retry.
+
+        ``should_stop()`` is consulted between waits (bounded at 50 ms) so
+        long stalls stay cancellable; returns ``None`` if it fired, raises
+        ``AgnocastQueueFull`` if ``timeout`` elapses first."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            try:
+                return self.publish(loan, origin=origin, exclude_sub=exclude_sub,
+                                    hops=hops, src_tag=src_tag,
+                                    route_seq=route_seq)
+            except AgnocastQueueFull:
+                if should_stop is not None and should_stop():
+                    return None
+                left = None if deadline is None else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise
+                step = left if should_stop is None else (
+                    0.05 if left is None else min(0.05, left))
+                self.wait_for_slot(step)
 
     # -- O(1) wake-ups -------------------------------------------------------------
 
@@ -217,6 +314,12 @@ class Publisher:
             except OSError:
                 pass
         self._fifo_fds = {}
+        if self._slot_fifo is not None:
+            try:
+                os.close(self._slot_fifo)
+            except OSError:
+                pass
+            self._slot_fifo = None
 
 
 class Subscription:

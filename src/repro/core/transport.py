@@ -24,16 +24,32 @@ import selectors
 import socket
 import struct
 import threading
+from dataclasses import dataclass
 from multiprocessing import shared_memory
 
 import numpy as np
 
 from .arena import _new_shm
 
-__all__ = ["Bus", "BusClient", "ShmRing"]
+__all__ = ["Bus", "BusClient", "Frame", "ShmRing"]
 
 _FRAME = struct.Struct("<I")
-_PUBHDR = struct.Struct("<HB")  # topic_len, origin
+# topic_len, origin, hops, src_tag, route_seq — the last three are the route
+# metadata the multi-domain bridges (repro.core.routing) need for duplicate
+# suppression and hop-count loop prevention; plain publishers leave them 0.
+_PUBHDR = struct.Struct("<HBBQQ")
+
+
+@dataclass(frozen=True)
+class Frame:
+    """One bus frame with its route metadata."""
+
+    topic: str
+    origin: int      # 0 = conventional publisher, 1 = a bridge
+    hops: int        # bus hops taken so far (origin domain -> here)
+    src_tag: int     # origin agnocast-domain tag (0 = conventional origin)
+    route_seq: int   # origin-unique message id (dedup key with src_tag)
+    payload: bytes
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
@@ -93,7 +109,7 @@ class Bus:
         if kind == 1:  # SUB topic
             self._subs[conn].add(body.decode())
         else:  # PUB: fan out to subscribers of the topic
-            (tlen, _origin) = _PUBHDR.unpack(body[: _PUBHDR.size])
+            tlen = _PUBHDR.unpack(body[: _PUBHDR.size])[0]
             topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
             out = _FRAME.pack(len(frame)) + frame
             dead = []
@@ -128,12 +144,15 @@ class BusClient:
         body = b"\x01" + topic.encode()
         self._sock.sendall(_FRAME.pack(len(body)) + body)
 
-    def publish(self, topic: str, payload: bytes, *, origin: int = 0) -> None:
+    def publish(self, topic: str, payload: bytes, *, origin: int = 0,
+                hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
         t = topic.encode()
-        body = b"\x00" + _PUBHDR.pack(len(t), origin) + t + payload
+        body = (b"\x00" + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
+                + t + payload)
         self._sock.sendall(_FRAME.pack(len(body)) + body)
 
-    def recv(self, timeout: float | None = None) -> tuple[str, int, bytes] | None:
+    def recv_frame(self, timeout: float | None = None) -> Frame | None:
+        """Receive one frame with its route metadata (bridges use this)."""
         import select as _select
 
         if timeout is not None:
@@ -150,9 +169,14 @@ class BusClient:
         if frame is None:
             return None
         body = frame[1:]
-        (tlen, origin) = _PUBHDR.unpack(body[: _PUBHDR.size])
+        tlen, origin, hops, src_tag, route_seq = _PUBHDR.unpack(body[: _PUBHDR.size])
         topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
-        return topic, origin, body[_PUBHDR.size + tlen :]
+        return Frame(topic, origin, hops, src_tag, route_seq,
+                     body[_PUBHDR.size + tlen :])
+
+    def recv(self, timeout: float | None = None) -> tuple[str, int, bytes] | None:
+        fr = self.recv_frame(timeout)
+        return None if fr is None else (fr.topic, fr.origin, fr.payload)
 
     def close(self) -> None:
         self._sock.close()

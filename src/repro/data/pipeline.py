@@ -26,7 +26,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import TOKEN_BATCH, AgnocastQueueFull, Domain
+from repro.core import TOKEN_BATCH, Domain
 from repro.data.packing import Packer, unpack_batch
 from repro.data.synthetic import SyntheticCorpus
 
@@ -117,14 +117,9 @@ def _packer_stage(domain_name: str, spec: BatchSpec, topic_out: str,
         msg.set("stamp", time.monotonic())
         msg.set("step", step)
         msg.set("epoch", 0)
-        # backpressure: wait for queue room instead of dropping
-        while not stop_evt.is_set():
-            try:
-                pub.publish(msg)
-                break
-            except AgnocastQueueFull:
-                pub.reclaim()
-                time.sleep(0.001)
+        # backpressure: block on the slot-freed FIFO (event-driven, no
+        # sleep-polling) until queue room appears or we are told to stop
+        pub.publish_blocking(msg, should_stop=stop_evt.is_set)
         step += 1
     dom.close()
 

@@ -95,6 +95,28 @@ def executor_subscriber(reg_name, topics, q, n_expected):
     dom.close()
 
 
+def holding_releaser(reg_name, topic, q_out, q_in):
+    """Take-and-hold subscriber for backpressure tests: holds every ref it
+    takes until told to release (the cross-process slot-freed-FIFO path)."""
+    from repro.core import POINT_CLOUD2, Domain
+
+    dom = Domain.join(reg_name, publisher=False)
+    sub = dom.create_subscription(POINT_CLOUD2, topic)
+    q_out.put("ready")
+    held = []
+    t0 = time.time()
+    while len(held) < 2 and time.time() - t0 < 30:
+        if sub.wait(0.5):
+            held.extend(sub.take())
+    q_out.put("holding")
+    assert q_in.get(timeout=30) == "release"
+    for ptr in held:
+        ptr.release()
+    q_out.put("released")
+    assert q_in.get(timeout=30) == "done"  # parent confirms before teardown
+    dom.close()
+
+
 def bridge_runner(reg_name, bus_path, topic, q, run_s=10.0):
     from repro.core import POINT_CLOUD2, Bridge, Domain
 

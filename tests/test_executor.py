@@ -262,6 +262,145 @@ def test_bridge_on_executor(dom):
 
 
 # ---------------------------------------------------------------------------
+# event-driven backpressure (slot-freed reverse FIFO)
+# ---------------------------------------------------------------------------
+
+
+def test_wait_for_slot_event_driven(dom):
+    """A publisher blocked on a full ring is woken by the releaser's FIFO
+    write — no polling, and well before a poll interval would fire."""
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=2)
+    sub = dom.create_subscription(POINT_CLOUD2, "t")
+    _publish(pub, np.ones(8, np.uint8))
+    _publish(pub, np.ones(8, np.uint8))
+    held = sub.take()
+    assert len(held) == 2
+    with pytest.raises(AgnocastQueueFull):
+        m = pub.borrow_loaded_message()
+        m.data.extend(np.ones(8, np.uint8))
+        pub.publish(m)
+    assert not pub.wait_for_slot(timeout=0.05)   # nothing released yet
+
+    t_rel = []
+
+    def releaser():
+        time.sleep(0.15)
+        t_rel.append(time.monotonic())
+        held[0].release()                        # frees the target slot
+
+    th = threading.Thread(target=releaser)
+    th.start()
+    assert pub.wait_for_slot(timeout=5.0)
+    woke = time.monotonic()
+    th.join()
+    assert woke - t_rel[0] < 0.1                 # event wake, not a timeout
+    pub.publish(m)                               # the retried publish lands
+    held[1].release()
+    for ptr in sub.take():
+        ptr.release()
+    pub.reclaim()
+
+
+def test_slot_fifo_immune_to_departing_releaser(dom):
+    """A releaser opening and closing the write end (what Registry.close
+    does when a subscriber process exits) must not leave the publisher's
+    slot-freed fd permanently EOF-readable — that would turn every
+    wait_for_slot / executor pub-fd wait into a hot spin."""
+    import select as _select
+
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=2)
+    from repro.core.registry import pub_fifo_path
+    path = pub_fifo_path(dom.name, pub.tidx, pub.pidx)
+    w = os.open(path, os.O_WRONLY | os.O_NONBLOCK)
+    os.write(w, b"\x01")
+    os.close(w)                              # the releaser process exits
+    pub.drain_slot_wakeups()
+    # no writer left: the fd must be silent, not permanently readable
+    r, _, _ = _select.select([pub.fileno()], [], [], 0.2)
+    assert not r
+    # and a fresh wakeup still lands afterwards
+    w = os.open(path, os.O_WRONLY | os.O_NONBLOCK)
+    os.write(w, b"\x01")
+    r, _, _ = _select.select([pub.fileno()], [], [], 2.0)
+    assert r
+    os.close(w)
+
+
+def test_wait_for_slot_wakes_despite_lagging_subscriber(dom):
+    """publish blocks only on *held* occupants (unreceived-only ones are
+    QoS-dropped), so the held->0 transition must wake the blocked publisher
+    even while a second, slow subscriber has not taken the entry yet."""
+    pub = dom.create_publisher(POINT_CLOUD2, "t", depth=2)
+    fast = dom.create_subscription(POINT_CLOUD2, "t")
+    slow = dom.create_subscription(POINT_CLOUD2, "t")   # never takes
+    _publish(pub, np.ones(8, np.uint8))
+    _publish(pub, np.ones(8, np.uint8))
+    held = fast.take()
+    assert len(held) == 2
+    assert not pub.wait_for_slot(timeout=0.05)
+
+    def releaser():
+        time.sleep(0.15)
+        held[0].release()   # held -> 0 on the target slot; slow still lags
+
+    th = threading.Thread(target=releaser)
+    th.start()
+    assert pub.wait_for_slot(timeout=2.0)   # a lost wakeup would time out
+    th.join()
+    held[1].release()
+    slow.close()
+    for ptr in fast.take():
+        ptr.release()
+    pub.reclaim()
+
+
+def test_cross_process_blocked_publisher_wakeup():
+    """Executor-multiplexed backpressure across processes: a child holds
+    every ring slot; its release must wake this process's blocked publisher
+    through the slot-freed FIFO *inside the executor loop*."""
+    ctx = mp.get_context("spawn")
+    dom = Domain.create(arena_capacity=16 << 20)
+    try:
+        pub = dom.create_publisher(POINT_CLOUD2, "bp", depth=2)
+        q_out, q_in = ctx.Queue(), ctx.Queue()
+        child = ctx.Process(target=H.holding_releaser,
+                            args=(dom.name, "bp", q_out, q_in), daemon=True)
+        child.start()
+        assert q_out.get(timeout=15) == "ready"
+        _publish(pub, np.full(8, 1, np.uint8))
+        _publish(pub, np.full(8, 2, np.uint8))
+        assert q_out.get(timeout=15) == "holding"
+        pending = pub.borrow_loaded_message()
+        pending.data.extend(np.full(8, 3, np.uint8))
+        with pytest.raises(AgnocastQueueFull):
+            pub.publish(pending)
+
+        woken = []
+
+        def on_slot_freed(p):
+            p.reclaim()
+            if pending is not None and not woken:
+                p.publish(pending)
+                woken.append(time.monotonic())
+
+        with EventExecutor() as ex:
+            ex.add_publisher(pub, on_slot_freed)
+            ex.spin_once(0.1)
+            t_ask = time.monotonic()
+            q_in.put("release")                  # child drops both refs
+            ex.spin(until=lambda: woken, timeout=15)
+            assert q_out.get(timeout=15) == "released"
+        assert woken and woken[0] - t_ask < 5.0
+        assert int(dom.registry.topics[pub.tidx]["pub_next_seq"][pub.pidx]) == 4
+        q_in.put("done")
+        child.join(timeout=10)
+        dom.sweep()
+        pub.reclaim()
+    finally:
+        dom.close()
+
+
+# ---------------------------------------------------------------------------
 # cross-process mode
 # ---------------------------------------------------------------------------
 
