@@ -1,0 +1,38 @@
+"""Agnocast reproduction grown toward a production-scale serving system.
+
+True zero-copy publish/subscribe IPC for unsized message types (the
+paper's contribution), plus the layers a "millions of users" deployment
+needs on top.  Module map:
+
+* :mod:`repro.core` — the paper's plane: shared-memory arena +
+  unsized messages (``ArenaVector``), transactional registry (flock +
+  WAL + janitor), two-counter smart pointers, ``Publisher`` /
+  ``Subscription`` topics with O(1) FIFO wakeups, the epoll
+  ``EventExecutor`` (callback groups, batched takes, event-driven
+  backpressure with owner-side waiter flags), the federated routing
+  plane (``RoutingTable`` / ``DomainBridge`` / ``Router``), the
+  conventional-bus baselines, and the device-arena KV page pool;
+* :mod:`repro.serving` — the sharded serving plane composed ON TOP of
+  the core: consistent-hash ``ShardRouter`` over K request shard
+  topics, ``ReplicaPool`` of server replicas (PID + registry-lease
+  liveness, re-hash + generation-stamped replay on loss), and a
+  ``ResultsCollector`` reassembling per-rid token streams (seq window,
+  gap detection, exactly-once completion) from one zero-copy results
+  topic;
+* :mod:`repro.runtime` — continuous-batching ``InferenceServer``
+  (prefill→decode KV hand-off through the device page pool, streaming
+  chunk sink, generation-gated serve ingest), ``Trainer``, fault
+  tolerance (failure detector, straggler monitor, re-mesh planner);
+* :mod:`repro.kernels` — Pallas kernels (flash/decode attention,
+  rmsnorm, ragged concat, sLSTM scan) with reference implementations;
+* :mod:`repro.models` / :mod:`repro.configs` — model zoo + configs;
+* :mod:`repro.data` — zero-copy data pipeline over the agnocast plane;
+* :mod:`repro.optim` / :mod:`repro.sharding` / :mod:`repro.checkpoint`
+  / :mod:`repro.launch` — training substrate;
+* :mod:`repro.apps` — end-to-end applications (the Fig. 13 point-cloud
+  pipeline).
+
+Submodules import independently (``repro.serving`` never pulls jax;
+``repro.runtime`` does) — keep this ``__init__`` import-free so spawning
+a replica process stays cheap.
+"""

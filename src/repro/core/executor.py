@@ -116,6 +116,10 @@ class _Handle:
     def _on_ready(self, fd: int) -> list["_Work"]:  # pragma: no cover
         raise NotImplementedError
 
+    def _detach(self) -> None:
+        """Handle-specific teardown, run on unregister/shutdown (e.g. clear
+        a publisher's waiter flag so releasers stop paying FIFO writes)."""
+
     def cancel(self) -> None:
         self.executor.unregister(self)
 
@@ -185,6 +189,15 @@ class _PublisherHandle(_Handle):
         self.pub = pub
         self.callback = callback
         self.fds = [pub.fileno()]
+        # the handle waits on the publisher's behalf for its whole life:
+        # releasers only write the slot-freed FIFO while this flag is up
+        pub.set_waiting(True)
+
+    def _detach(self) -> None:
+        try:
+            self.pub.set_waiting(False)
+        except Exception:
+            pass  # registry/publisher already closed
 
     def _on_ready(self, fd: int) -> list[_Work]:
         self.pub.drain_slot_wakeups()
@@ -256,6 +269,7 @@ class _BridgeHandle(_Handle):
             self.executor._resume_fd(self._sock, self)
 
     def _arm_pub(self, pub) -> None:
+        pub.set_waiting(True)  # park already set it; re-arm is idempotent
         fd = pub.fileno()
         self._pub_fd = fd
         if fd not in self.fds:
@@ -367,8 +381,19 @@ class EventExecutor:
         whenever backpressure lifts (a subscriber released the last ref on
         a ring slot) — the event-driven alternative to sleep-retrying
         ``AgnocastQueueFull``."""
-        return self._adopt(_PublisherHandle(self, group or self.default_group,
-                                            pub, callback))
+        h = self._adopt(_PublisherHandle(self, group or self.default_group,
+                                         pub, callback))
+        # late-registration guard: a slot freed between the caller's failed
+        # publish and the waiter flag going up produced no FIFO byte (the
+        # flag-gated _notify_owner skipped it) — synthesize the first wakeup
+        # if the ring is already publishable
+        try:
+            free = pub.dom.registry.can_publish(pub.tidx, pub.pidx)
+        except Exception:
+            free = False
+        if free:
+            self._request_repoll(h)
+        return h
 
     def add_bridge(self, bridge, *, group: CallbackGroup | None = None) -> _Handle:
         """Pump a DomainBridge/Bridge from this loop (its own exclusive
@@ -419,6 +444,7 @@ class EventExecutor:
                 self._sel.unregister(fd)
             except (KeyError, ValueError, OSError):
                 pass
+        handle._detach()
         self._poke()
         return dropped
 
@@ -620,6 +646,32 @@ class EventExecutor:
             self._spin_thread.start()
         return self
 
+    def drain(self, timeout: float = 5.0) -> bool:
+        """Run every *already pending* piece of work to completion, then
+        return: ready fds are polled with a zero wait, queued callbacks are
+        dispatched (inline or by the worker pool), and anything they enqueue
+        in turn is drained too.  Timers that are not yet due do NOT hold
+        drain open — this is the clean-shutdown hook, not a spin loop: a
+        serving replica calls ``drain()`` after its stop signal so in-flight
+        ingests/rounds finish deterministically before ``shutdown()``.
+
+        Returns ``True`` when the executor went quiescent, ``False`` on
+        timeout."""
+        deadline = time.monotonic() + timeout
+        while not self._shutdown:
+            n = self.spin_once(0.0)
+            with self._cond:
+                busy = bool(self._active or self._repoll
+                            or any(g._queue for g in self._groups.values()))
+            if n == 0 and not busy:
+                return True
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return False
+            if self._workers:
+                self.wait_idle(min(left, 0.1))
+        return False
+
     def wait_idle(self, timeout: float = 10.0) -> bool:
         """Block until no callback is queued or executing (threaded mode)."""
         deadline = time.monotonic() + timeout
@@ -662,7 +714,9 @@ class EventExecutor:
             self._timers.clear()
             for h in self._handles:
                 h.cancelled = True
-            self._handles.clear()
+            detached, self._handles = list(self._handles), []
+        for h in detached:
+            h._detach()  # outside the lock: may touch the shared registry
         try:
             self._sel.close()
         except OSError:

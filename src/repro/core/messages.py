@@ -215,12 +215,19 @@ class LoanedMessage:
         self.arena = arena
         self._ragged: dict[str, ArenaVector] = {}
         self._fixed: dict[str, tuple[int, Fixed]] = {}
-        for name, spec in mtype.fields.items():
-            if isinstance(spec, Ragged):
-                self._ragged[name] = ArenaVector(arena, spec)
-            else:
-                off = arena.alloc(spec.nbytes)
-                self._fixed[name] = (off, spec)
+        try:
+            for name, spec in mtype.fields.items():
+                if isinstance(spec, Ragged):
+                    self._ragged[name] = ArenaVector(arena, spec)
+                else:
+                    off = arena.alloc(spec.nbytes)
+                    self._fixed[name] = (off, spec)
+        except Exception:
+            # abort-safe borrow: an OutOfArenaMemory mid-construction must
+            # not strand the fields already allocated (bridges retry borrows
+            # under arena pressure, so this path is reachable in steady state)
+            self.dealloc()
+            raise
 
     def __getattr__(self, name: str):
         ragged = object.__getattribute__(self, "_ragged")

@@ -40,7 +40,20 @@ Two extensions ride on the same plane:
   *held* bit — the only counter a publish can block on — the releasing
   process writes one byte to the owner's FIFO, so a publisher blocked on
   ``AgnocastQueueFull`` is woken event-driven instead of sleep-polling
-  the ring.
+  the ring.  A per-(topic, publisher) **waiter flag** in the shared topic
+  header (set by ``Publisher.wait_for_slot`` / the executor's blocked-
+  publisher arming, cleared when the wait ends) lets releasers skip the
+  FIFO write entirely when nobody is blocked — the common case pays zero
+  extra syscalls on the hot release path.  The flag protocol is
+  lost-wakeup-free because both sides order their ops through the flock:
+  the waiter sets its flag *before* re-checking ``can_publish``, and the
+  releaser reads the flag *after* its held→0 mutation commits.
+* **Subscriber liveness leases**: every ``take`` (and the explicit
+  ``refresh_lease``) stamps a per-subscriber monotonic-clock lease in the
+  shared topic header.  PID liveness catches *dead* participants; the
+  lease catches *wedged* ones (alive but no longer consuming) — the
+  serving plane's replica pool uses it to re-hash a stuck replica's shard
+  to survivors (:mod:`repro.serving`).
 """
 
 from __future__ import annotations
@@ -50,6 +63,7 @@ import fcntl
 import os
 import secrets
 import threading
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -61,10 +75,10 @@ __all__ = ["Registry", "RegistryError", "AgnocastQueueFull", "Entry",
            "fifo_dir", "sub_fifo_path", "pub_fifo_path"]
 
 MAX_TOPICS = 64
-MAX_PUBS = 4
+MAX_PUBS = 8           # a sharded results topic fans in one pub per replica
 MAX_SUBS = 64          # one bit per subscriber in uint64 masks
 DEPTH_MAX = 64
-_MAGIC = 0xA6_0C_0D_01
+_MAGIC = 0xA6_0C_0D_02  # layout v2: waiter flags + subscriber leases
 
 ST_FREE, ST_USED, ST_DEAD = 0, 1, 2
 ORIGIN_AGNOCAST, ORIGIN_BRIDGE = 0, 1
@@ -76,8 +90,10 @@ TOPIC_DT = np.dtype(
         ("_pad", "u1", (7,)),
         ("sub_pids", "u8", (MAX_SUBS,)),
         ("sub_alive", "u8"),                 # bitmask of live subscriber slots
+        ("sub_lease_ns", "u8", (MAX_SUBS,)),  # CLOCK_MONOTONIC stamp of last take
         ("pub_pids", "u8", (MAX_PUBS,)),
         ("pub_alive", "u1", (MAX_PUBS,)),
+        ("pub_waiters", "u1", (MAX_PUBS,)),  # publisher blocked on a full ring
         ("pub_arena", "S32", (MAX_PUBS,)),
         ("pub_depth", "u4", (MAX_PUBS,)),
         ("pub_next_seq", "u8", (MAX_PUBS,)),
@@ -347,6 +363,7 @@ class Registry:
                     with self._Txn(self, tidx, topic=True):
                         t["pub_pids"][p] = pid
                         t["pub_alive"][p] = 1
+                        t["pub_waiters"][p] = 0
                         t["pub_arena"][p] = arena_name.encode()
                         t["pub_depth"][p] = depth
                         t["pub_next_seq"][p] = 1
@@ -365,6 +382,7 @@ class Registry:
                     with self._Txn(self, tidx, topic=True):
                         t["sub_pids"][s] = pid
                         t["sub_alive"] = np.uint64(alive | (1 << s))
+                        t["sub_lease_ns"][s] = time.monotonic_ns()
                     return s
             raise RegistryError("subscriber table full")
 
@@ -400,7 +418,19 @@ class Registry:
         Best-effort and non-blocking: no reader (publisher gone, or created
         before this feature) means no wakeup is needed; a full pipe means
         wakeups are already pending and will coalesce on drain.
+
+        Skipped entirely unless the owner's waiter flag is set: a release
+        with no blocked publisher is the common case, and the flag check is
+        one shared-memory load instead of an ``os.write`` syscall.  The
+        waiter sets the flag *before* re-checking ``can_publish`` and both
+        sides cross the flock, so a releaser that misses the flag is always
+        ordered before a re-check that sees its freed slot.
         """
+        try:
+            if not self.topics[tidx]["pub_waiters"][pidx]:
+                return
+        except TypeError:  # registry torn down concurrently
+            return
         key = (tidx, pidx)
         with self._pub_fds_mu:  # fd cache shared by executor worker threads
             fd = self._pub_fds.get(key)
@@ -421,6 +451,44 @@ class Registry:
                 except OSError:
                     pass
                 self._pub_fds.pop(key, None)
+
+    def set_pub_waiter(self, tidx: int, pidx: int, waiting: bool) -> None:
+        """Raise/clear the owner's "blocked on a full ring" flag.
+
+        A single shared-memory byte store: no lock is needed because the
+        only reader (``_notify_owner``) tolerates both races — a spurious
+        set costs one redundant FIFO write, and a clear-vs-release race is
+        resolved by the waiter's post-set ``can_publish`` re-check."""
+        self.topics[tidx]["pub_waiters"][pidx] = 1 if waiting else 0
+
+    def pub_waiter(self, tidx: int, pidx: int) -> bool:
+        """Current waiter-flag state (owners save/restore around nested
+        waits: a transient ``wait_for_slot`` must not clear a flag an
+        executor handle armed for its whole lifetime)."""
+        return bool(self.topics[tidx]["pub_waiters"][pidx])
+
+    # -- subscriber liveness leases -------------------------------------------
+
+    def refresh_lease(self, tidx: int, sidx: int) -> None:
+        """Stamp subscriber ``sidx``'s lease now (idle replicas heartbeat
+        through this; busy ones are stamped by every ``take``)."""
+        self.topics[tidx]["sub_lease_ns"][sidx] = time.monotonic_ns()
+
+    def lease_ages(self, tidx: int) -> dict[int, float]:
+        """Seconds since each *live* subscriber of ``tidx`` last took or
+        heartbeat — the wedged-consumer detector (PID liveness only catches
+        dead ones).  Lock-free monitoring read: the poller runs on a timer,
+        so a torn race costs one stale sample, never a wrong decision —
+        keeping it off the flock matters because liveness polls must not
+        bid against the data plane's hot path."""
+        now = time.monotonic_ns()
+        t = self.topics[tidx]
+        alive = int(t["sub_alive"])
+        return {
+            s: (now - int(t["sub_lease_ns"][s])) / 1e9
+            for s in range(MAX_SUBS)
+            if (alive >> s) & 1
+        }
 
     def publishers(self, tidx: int) -> list[tuple[int, str]]:
         with self._lock:
@@ -513,6 +581,9 @@ class Registry:
         bit = np.uint64(1 << sidx)
         with self._lock:
             self._recover()
+            # lease refresh on take: an actively-consuming subscriber never
+            # needs a separate heartbeat (repro.serving replica liveness)
+            self.topics[tidx]["sub_lease_ns"][sidx] = time.monotonic_ns()
             cands: list[tuple[int, int, int]] = []
             for pidx in range(MAX_PUBS):
                 ring = self.entries[tidx, pidx]

@@ -60,7 +60,12 @@ Backpressure FIFO protocol (event-driven end to end, no sleep-polling):
 
 Copy-in is abort-safe: if deserialization or field copy-in raises
 mid-fill, the borrowed loan's arena blocks are returned (``dealloc``) —
-a malformed frame can never leak publisher arena memory.
+a malformed frame can never leak publisher arena memory.  Arena pressure
+(``OutOfArenaMemory``) is not a silent drop: the bridge counts it, waits
+once (bounded) on the endpoint publisher's slot-freed FIFO — a freed
+reference is what lets ``reclaim()`` return bytes to the arena — and
+retries before giving up; the frame's dedup key is released on the final
+drop so another route can still deliver it.
 """
 
 from __future__ import annotations
@@ -75,6 +80,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+from .arena import OutOfArenaMemory
 from .messages import MessageType, Ragged, deserialize, serialize
 from .registry import ORIGIN_BRIDGE, AgnocastQueueFull
 from .topic import Domain, Publisher, Subscription
@@ -85,6 +91,7 @@ __all__ = ["RoutingRule", "RoutingTable", "DomainBridge", "Router",
 
 DEFAULT_MAX_HOPS = 8
 _SEEN_LIMIT = 8192
+OOM_RETRY_WAIT_S = 0.05  # one bounded slot-freed wait before dropping on OOM
 
 
 def domain_tag(name: str) -> int:
@@ -256,6 +263,8 @@ class DomainBridge:
         self.dropped_loops = 0     # src_tag == own tag, or hop cap
         self.dropped_dups = 0      # (src_tag, route_seq) already admitted
         self.copy_errors = 0       # aborted copy-ins (loan returned)
+        self.oom_retries = 0       # copy-ins that hit arena pressure once
+        self.dropped_oom = 0       # frames dropped after the bounded retry
 
     # -- federation surface ---------------------------------------------------
 
@@ -372,9 +381,10 @@ class DomainBridge:
         else:  # conventional publisher: this domain adopts the message
             src, rseq = self.tag, self._next_rseq()
         try:
-            self._copy_in(ep, fr, src, rseq)
-        except Exception:
-            self.copy_errors += 1  # malformed frame: dropped, nothing leaked
+            self._copy_in_bounded(ep, fr, src, rseq)
+        except Exception as e:
+            if not isinstance(e, OutOfArenaMemory):
+                self.copy_errors += 1  # malformed frame: dropped, no leak
             if fr.origin == 1:
                 # the message was NOT delivered: release its dedup key so a
                 # copy arriving over another path still can be (transient
@@ -382,6 +392,36 @@ class DomainBridge:
                 self._forget(src, rseq)
             return 0
         return 1
+
+    def _copy_in_bounded(self, ep: _Endpoint, fr: Frame, src: int,
+                         rseq: int) -> None:
+        """Copy-in with one bounded arena-pressure retry.
+
+        Cross-topic arena exhaustion has no dedicated wakeup path, but a
+        freed *reference* is exactly what lets ``reclaim()`` return payload
+        bytes to this endpoint's arena — so on ``OutOfArenaMemory`` wait
+        once on the endpoint publisher's slot-freed FIFO (waiter flag up so
+        releasers actually write it), reclaim, and retry before giving up.
+        A second failure counts in ``dropped_oom`` and propagates; the
+        caller releases the frame's dedup key on the final drop."""
+        try:
+            self._copy_in(ep, fr, src, rseq)
+            return
+        except OutOfArenaMemory:
+            self.oom_retries += 1
+        ep.pub.set_waiting(True)
+        try:
+            r, _, _ = select.select([ep.pub], [], [], OOM_RETRY_WAIT_S)
+            if r:
+                ep.pub.drain_slot_wakeups()
+        finally:
+            ep.pub.set_waiting(False)
+        ep.pub.reclaim()
+        try:
+            self._copy_in(ep, fr, src, rseq)
+        except OutOfArenaMemory:
+            self.dropped_oom += 1
+            raise
 
     def _copy_in(self, ep: _Endpoint, fr: Frame, src: int, rseq: int) -> None:
         fields = deserialize(fr.payload)
@@ -409,8 +449,15 @@ class DomainBridge:
             self.relayed_in += 1
         except AgnocastQueueFull:
             # park: the loan stays valid; the blocked publisher's slot-freed
-            # FIFO is the wakeup source (executor-multiplexed or select()ed)
+            # FIFO is the wakeup source (executor-multiplexed or select()ed).
+            # Waiter flag up so releasers write that FIFO at all.
             self._pending = _Pending(ep, loan, hops, src, rseq)
+            ep.pub.set_waiting(True)
+            # lost-wakeup guard (same rule as wait_for_slot): a release that
+            # landed between the failed publish and the flag store produced
+            # no FIFO byte — re-check under the flock and retry immediately
+            if self.dom.registry.can_publish(ep.pub.tidx, ep.pub.pidx):
+                self.retry_pending()
         except Exception:
             loan.dealloc()  # any other failure: return the arena blocks
             raise
@@ -431,12 +478,14 @@ class DomainBridge:
             self._pending = None  # poisoned: drop the frame, free the loan
             self.copy_errors += 1
             loan.dealloc()
+            ep.pub.set_waiting(False)
             # undelivered: release its dedup key so another route can still
             # deliver (no-op for adopted ids — they are never re-admitted)
             self._forget(src, rseq)
             raise
         self._pending = None
         self.relayed_in += 1
+        ep.pub.set_waiting(False)
         return True
 
     @property
@@ -473,10 +522,27 @@ class DomainBridge:
         slot-freed FIFO are multiplexed into the loop."""
         return executor.add_bridge(self, group=group)
 
+    def stats(self) -> dict:
+        """Observability snapshot (CI artifacts + the OOM regression gate)."""
+        return {
+            "relayed_out": self.relayed_out,
+            "relayed_in": self.relayed_in,
+            "dropped_loops": self.dropped_loops,
+            "dropped_dups": self.dropped_dups,
+            "copy_errors": self.copy_errors,
+            "oom_retries": self.oom_retries,
+            "dropped_oom": self.dropped_oom,
+            "parked": self._pending is not None,
+        }
+
     def close(self) -> None:
         if self._pending is not None:
             try:
                 self._pending.loan.dealloc()  # return the parked loan's arena
+            except Exception:
+                pass
+            try:
+                self._pending.ep.pub.set_waiting(False)
             except Exception:
                 pass
             # the parked frame was admitted but never delivered: release its

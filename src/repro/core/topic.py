@@ -220,6 +220,17 @@ class Publisher:
         :meth:`drain_slot_wakeups`."""
         return self._slot_fifo
 
+    def set_waiting(self, waiting: bool) -> None:
+        """Publish this publisher's "blocked" state to releasers.
+
+        Releasers skip the slot-freed FIFO write when the flag is clear, so
+        anything that waits on :meth:`fileno` outside :meth:`wait_for_slot`
+        (executor ``add_publisher`` handles, a parked bridge copy-in) must
+        raise the flag for the wait's duration.  Always set the flag
+        *before* re-checking ``can_publish`` — the flock orders the two
+        sides, which makes the protocol lost-wakeup-free."""
+        self.dom.registry.set_pub_waiter(self.tidx, self.pidx, waiting)
+
     def drain_slot_wakeups(self) -> int:
         """Consume pending slot-freed tokens without blocking."""
         n = 0
@@ -242,18 +253,26 @@ class Publisher:
         Returns ``True`` when a slot is available, ``False`` on timeout.
         Reclaims fully-released payloads as a side effect."""
         deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            self.reclaim()
-            if self.dom.registry.can_publish(self.tidx, self.pidx):
-                return True
-            left = None
-            if deadline is not None:
-                left = deadline - time.monotonic()
-                if left <= 0:
-                    return False
-            r, _, _ = select.select([self._slot_fifo], [], [], left)
-            if r:
-                self.drain_slot_wakeups()
+        # save/restore, not set/clear: an executor _PublisherHandle may have
+        # armed the flag for its whole registration — a transient wait here
+        # must not strip that handle of its wakeups
+        prior = self.dom.registry.pub_waiter(self.tidx, self.pidx)
+        self.set_waiting(True)  # before can_publish: releasers must see us
+        try:
+            while True:
+                self.reclaim()
+                if self.dom.registry.can_publish(self.tidx, self.pidx):
+                    return True
+                left = None
+                if deadline is not None:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        return False
+                r, _, _ = select.select([self._slot_fifo], [], [], left)
+                if r:
+                    self.drain_slot_wakeups()
+        finally:
+            self.set_waiting(prior)
 
     def publish_blocking(self, loan: LoanedMessage, *,
                          timeout: float | None = None, should_stop=None,
@@ -308,6 +327,10 @@ class Publisher:
             s += 1
 
     def close(self) -> None:
+        try:  # a handle may still have us armed as a waiter
+            self.set_waiting(False)
+        except Exception:
+            pass  # registry already torn down
         for fd in self._fifo_fds.values():
             try:
                 os.close(fd)

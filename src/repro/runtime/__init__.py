@@ -12,11 +12,11 @@ from .fault_tolerance import (
     StragglerMonitor,
     plan_remesh,
 )
-from .server import InferenceServer, Request, Result
+from .server import InferenceServer, Request, Result, attach_serving_executor
 from .trainer import Trainer, TrainerConfig
 
 __all__ = [
     "Trainer", "TrainerConfig",
-    "InferenceServer", "Request", "Result",
+    "InferenceServer", "Request", "Result", "attach_serving_executor",
     "FailureDetector", "StragglerMonitor", "RemeshPlan", "plan_remesh",
 ]

@@ -21,6 +21,19 @@ registers a ``TOKEN_BATCH`` subscription's wakeup FIFO plus a decode-round
 timer on an :class:`repro.core.executor.EventExecutor` (one mutually-
 exclusive group, so ingest callbacks and decode rounds never interleave on
 the server's mutable state), replacing any need to busy-poll the queue.
+
+The sharded serving plane (:mod:`repro.serving`) runs this server as ONE
+of K replicas: ``ingest_serve_message`` consumes rows that carry explicit
+router-assigned ``(rid, generation)`` pairs — a higher generation
+supersedes any queued/active copy (replay after replica loss), stale ones
+are ignored, so a replayed rid decodes exactly once per generation — and
+``stream_sink`` emits per-rid token chunks ``(rid, gen, seq, tokens,
+eos)`` that the replica republished on the results topic for the
+collector's windowed reassembly.  ``attach_serving_executor`` is the
+shard-aware attach: the same arm-only-while-busy round timer, with a
+pluggable ingest and an end-of-round flush hook, shared by the real
+server and by jax-free test doubles (duck-typed on ``queue`` /
+``_active`` / ``step_rounds``).
 """
 
 from __future__ import annotations
@@ -36,7 +49,7 @@ import numpy as np
 from repro.core.device_arena import DevicePagePool
 from repro.models import Model
 
-__all__ = ["Request", "Result", "InferenceServer"]
+__all__ = ["Request", "Result", "InferenceServer", "attach_serving_executor"]
 
 
 @dataclass
@@ -74,6 +87,12 @@ class InferenceServer:
         self._decode = None
         self.steps = 0
         self._ingest_seq = 0  # server-wide: message seqs are per-publisher
+        # -- sharded-serving surface (repro.serving) --------------------------
+        from repro.serving.messages import GenerationGate
+
+        self.stream_sink = None       # callable(rid, gen, seq, tokens, eos)
+        self.keep_results = True      # replicas stream instead of accumulating
+        self._gate = GenerationGate()  # the shared SERVE_REQ replay rule
 
     # -- setup ---------------------------------------------------------------
 
@@ -102,6 +121,7 @@ class InferenceServer:
 
     def cancel(self, rid: str) -> bool:
         """Consumer vanishes mid-decode: the janitor path frees its pages."""
+        self._gate.drop(rid)
         for slot, st in list(self._active.items()):
             if st["req"].rid == rid:
                 self.pool.expire_consumer(f"decode/{rid}")
@@ -128,19 +148,34 @@ class InferenceServer:
             # splice the request's KV into its slot of the batched cache
             self._cache = _splice_cache(self._cache, cache1, slot,
                                         len(req.tokens))
-            self._active[slot] = {
+            st = {
                 "req": req, "key": key, "generated": [first],
                 "t0": t0, "ttft": time.monotonic() - t0,
+                "gen": self._gate.current(req.rid), "chunk_seq": 0,
             }
+            self._active[slot] = st
+            self._emit(st, [first], False)
+
+    def _emit(self, st: dict, tokens: list[int], eos: bool) -> None:
+        """Stream one per-rid chunk to the sink (the replica's results
+        publisher): monotone chunk seq per (rid, generation)."""
+        if self.stream_sink is None:
+            return
+        self.stream_sink(st["req"].rid, st["gen"], st["chunk_seq"],
+                         tokens, eos)
+        st["chunk_seq"] += 1
 
     def _retire(self, slot: int, *, finished: bool = True) -> None:
         st = self._active.pop(slot)
+        rid = st["req"].rid
         if finished:
-            self.pool.release(st["key"], f"decode/{st['req'].rid}")
-            self.results[st["req"].rid] = Result(
-                rid=st["req"].rid, tokens=st["generated"],
-                prompt_len=len(st["req"].tokens), ttft=st["ttft"],
-                latency=time.monotonic() - st["req"].stamp)
+            self.pool.release(st["key"], f"decode/{rid}")
+            self._gate.finish(rid)  # late replays of <= gen ignored
+            if self.keep_results:
+                self.results[rid] = Result(
+                    rid=rid, tokens=st["generated"],
+                    prompt_len=len(st["req"].tokens), ttft=st["ttft"],
+                    latency=time.monotonic() - st["req"].stamp)
         # zero the slot length so decode ignores it
         self._cache["len"] = self._cache["len"].at[slot].set(0)
         self._free_slots.append(slot)
@@ -157,10 +192,12 @@ class InferenceServer:
         self.steps += 1
         for slot in list(self._active):
             st = self._active[slot]
-            st["generated"].append(int(nxt[slot]))
+            tok = int(nxt[slot])
+            st["generated"].append(tok)
             done = (len(st["generated"]) >= st["req"].max_new
                     or len(st["req"].tokens) + len(st["generated"])
                     >= self.max_seq - 1)
+            self._emit(st, [tok], done)
             if done:
                 self._retire(slot)
 
@@ -197,41 +234,54 @@ class InferenceServer:
             off += n
         return len(lens)
 
+    def ingest_serve_message(self, ptr, *, max_new: int = 16) -> int:
+        """Shard-plane ingest (:mod:`repro.serving`): each ragged row carries
+        an explicit router-assigned ``(rid, generation)``.  A row whose
+        generation supersedes a queued/active copy of the same rid replaces
+        it (replay after replica loss or a lost result); a stale or
+        duplicate generation — including one already *completed* — is
+        dropped, so each rid decodes exactly once per generation."""
+        from repro.serving.messages import iter_requests
+
+        stamp = float(ptr.get("stamp"))
+        mnew = int(ptr.get("max_new")) or max_new
+        admitted = 0
+        for row in iter_requests(ptr):  # copies each row's tokens out
+            rid = str(row.rid)
+            if not self._admit_generation(rid, row.gen):
+                continue
+            req = Request(rid=rid, tokens=row.tokens, max_new=mnew)
+            if stamp > 0:
+                req.stamp = stamp
+            self.submit(req)
+            admitted += 1
+        return admitted
+
+    def _admit_generation(self, rid: str, gen: int) -> bool:
+        """The shared replay rule (:class:`repro.serving.messages.
+        GenerationGate`): True iff this (rid, gen) should be admitted,
+        superseding (cancelling) any older live copy."""
+
+        def supersede(r):
+            self.cancel(r)  # an active copy: the janitor frees its pages
+            self.queue = deque(q for q in self.queue if q.rid != r)
+
+        return self._gate.admit(rid, gen, supersede=supersede)
+
     def step_rounds(self) -> None:
         """One admission + decode round (the executor timer's callback)."""
         self._admit()
         self._decode_round()
 
     def attach_executor(self, executor, sub, *, group=None, max_new: int = 16,
-                        round_period_s: float = 0.0005):
-        """Run this server on an :class:`~repro.core.executor.EventExecutor`:
-        request messages arriving on ``sub`` are admitted by the subscription
-        callback; a oneshot round timer is armed only while work is pending
-        (an idle server sleeps on epoll instead of ticking at 1/period).
-        Everything shares one mutually-exclusive callback group so server
-        state is never mutated concurrently.  Returns the subscription
-        handle."""
-        from repro.core.executor import CallbackGroup
-
-        g = group or CallbackGroup(name=f"server-{id(self):x}")
-        armed = [False]
-
-        def _arm_if_busy():
-            if not armed[0] and (self.queue or self._active):
-                armed[0] = True
-                executor.add_timer(round_period_s, _round, group=g,
-                                   oneshot=True)
-
-        def _round():
-            armed[0] = False
-            self.step_rounds()
-            _arm_if_busy()
-
-        def _on_request(ptr):
-            self.ingest_message(ptr, max_new=max_new)
-            _arm_if_busy()
-
-        return executor.add_subscription(sub, _on_request, group=g)
+                        round_period_s: float = 0.0005, ingest=None,
+                        on_round_end=None):
+        """Run this server on an :class:`~repro.core.executor.EventExecutor`
+        (see :func:`attach_serving_executor` for the semantics)."""
+        return attach_serving_executor(
+            self, executor, sub, group=group, max_new=max_new,
+            round_period_s=round_period_s, ingest=ingest,
+            on_round_end=on_round_end)
 
     @property
     def idle(self) -> bool:
@@ -248,6 +298,42 @@ class InferenceServer:
             "queued": len(self.queue),
             "decode_steps": self.steps,
         }
+
+
+def attach_serving_executor(server, executor, sub, *, group=None,
+                            max_new: int = 16, round_period_s: float = 0.0005,
+                            ingest=None, on_round_end=None):
+    """Wire a continuous-batching server onto an ``EventExecutor``.
+
+    Request messages arriving on ``sub`` are admitted by the subscription
+    callback; a oneshot round timer is armed only while work is pending (an
+    idle server sleeps on epoll instead of ticking at 1/period).  Everything
+    shares one mutually-exclusive callback group so server state is never
+    mutated concurrently.
+
+    The shard-aware knobs (used by :mod:`repro.serving` replicas):
+
+    * ``ingest`` — alternative message decoder (e.g. the bound
+      ``server.ingest_serve_message`` for rows with router-assigned rids);
+      defaults to ``server.ingest_message``.
+    * ``on_round_end`` — called after every decode round, in the same
+      group: the replica's hook to flush its streamed token chunks as one
+      results-topic publish per round.
+    * ``round_period_s`` — the continuous-batching tick.  On an
+      accelerator-bound replica the tick models the device's round latency
+      (host sleeps while the device decodes), which is what lets K replicas
+      on one box multiply slot-rounds per second.
+
+    ``server`` is duck-typed (``queue`` / ``_active`` / ``step_rounds`` /
+    ``ingest_message``) so jax-free doubles can ride the same wiring — the
+    one implementation lives in :mod:`repro.serving.attach` (jax-free, so
+    echo replicas share it).  Returns the subscription handle."""
+    from repro.serving.attach import attach_server_executor
+
+    return attach_server_executor(
+        server, executor, sub, group=group, max_new=max_new,
+        round_period_s=round_period_s, ingest=ingest,
+        on_round_end=on_round_end)
 
 
 def _splice_cache(batched, single, slot: int, length: int):

@@ -1,0 +1,57 @@
+"""Sharded serving plane: rid-hash routing, replica pool, reassembly.
+
+The first subsystem composed *on top of* the agnocast core rather than
+inside it: the Fig. 13 pipeline shape (many nodes, large messages,
+selective zero-copy paths) applied to production-style serving.  K server
+replicas each own one request shard topic; payloads stay in shared memory
+from router to replica to collector.
+
+    router (head)            replicas (K procs)          collector (head)
+    ShardRouter ──serve/req/k──▶ EchoServer /      ──serve/res──▶ ResultsCollector
+      consistent hash on rid     InferenceServer               seq window +
+      publish_blocking/shard     one EventExecutor each        gap detection +
+      replay gen+1 on loss       lease heartbeats              gen supersede
+
+* :mod:`repro.serving.hashring` — consistent rid→shard assignment: only
+  ~1/K of rids move when the replica set changes;
+* :mod:`repro.serving.messages` — ``SERVE_REQ``/``SERVE_RES`` unsized
+  schemas (ragged token rows + per-row rid/gen/seq/eos metadata);
+* :mod:`repro.serving.router` — ``ShardRouter``: per-shard batched
+  publishes with event-driven backpressure, in-flight tracking, replay
+  (generation+1) on replica loss or stalled streams, optional load-aware
+  tie-breaking off the collector's per-shard snapshot;
+* :mod:`repro.serving.replica` — the replica process entrypoint (real
+  ``InferenceServer`` or the jax-free ``EchoServer``), streaming each
+  decode round's tokens as one results publish;
+* :mod:`repro.serving.collector` — ``ResultsCollector``: windowed
+  in-order per-rid reassembly, exactly-once completion, per-shard
+  depth/latency stats;
+* :mod:`repro.serving.pool` — ``ReplicaPool``: spawn/own the replicas,
+  detect loss by PID death *and* registry subscriber leases, drive the
+  re-hash + replay.
+"""
+
+from .attach import attach_server_executor
+from .collector import ResultsCollector
+from .hashring import HashRing
+from .messages import (
+    SERVE_REQ,
+    SERVE_RES,
+    ReqRow,
+    ResRow,
+    iter_requests,
+    iter_results,
+    pack_requests,
+    pack_results,
+)
+from .pool import ReplicaPool
+from .replica import EchoServer, replica_main
+from .router import InFlight, ShardRouter
+
+__all__ = [
+    "SERVE_REQ", "SERVE_RES", "ReqRow", "ResRow",
+    "pack_requests", "iter_requests", "pack_results", "iter_results",
+    "HashRing", "ShardRouter", "InFlight",
+    "ResultsCollector", "ReplicaPool", "EchoServer", "replica_main",
+    "attach_server_executor",
+]

@@ -1,0 +1,221 @@
+"""Results reassembly: one subscription, per-rid ordered token streams.
+
+Every replica publishes its decode rounds' token chunks on a single
+``SERVE_RES`` topic (zero-copy; the collector reads chunk rows straight
+out of each replica's arena).  The collector turns that interleaved,
+possibly out-of-order, possibly replayed firehose back into per-rid
+in-order token streams:
+
+* **seq window** — chunks carry a per-(rid, generation) sequence number;
+  in-order chunks append directly, early ones wait in a bounded window
+  and drain the moment the gap fills;
+* **gap detection** — a chunk that opens a gap bumps ``gaps`` (and the
+  stream's stall clock stops advancing, which is what the router's
+  ``stalled``/``replay`` keys off);
+* **generation supersede** — a chunk with a *newer* generation (the
+  router replayed the rid after replica loss) discards the partial old
+  stream and restarts reassembly; older-generation and duplicate-seq
+  chunks are dropped and counted, so the assembled output is exactly
+  once per rid;
+* **per-shard snapshot** — each result message carries the publishing
+  replica's queue depth and publish stamp; ``shard_stats``/
+  ``shard_depths`` expose depth + delivery-latency quantiles for the
+  router's load-aware tie-breaking.
+
+Two consumption surfaces: callbacks (``on_complete``/``on_progress``,
+wired to the router) and an iterator — ``pop_completed`` / iterating the
+collector yields finished ``(rid, tokens)`` pairs exactly once.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+
+import numpy as np
+
+from repro.core.topic import Domain
+
+from .messages import SERVE_RES, ResRow, iter_results
+
+__all__ = ["ResultsCollector"]
+
+_LAT_WINDOW = 64  # per-shard delivery-latency samples kept for the snapshot
+_DONE_RID_LIMIT = 4096  # completed rids remembered for late-dup detection
+
+
+class _Stream:
+    __slots__ = ("gen", "next_seq", "window", "tokens", "had_gap")
+
+    def __init__(self, gen: int):
+        self.gen = gen
+        self.next_seq = 0
+        self.window: dict[int, ResRow] = {}
+        self.tokens: list[int] = []
+        self.had_gap = False
+
+
+class ResultsCollector:
+    def __init__(self, dom: Domain, topic: str = "serve/res", *,
+                 on_complete=None, on_progress=None, window_limit: int = 256):
+        self.dom = dom
+        self.topic = topic
+        self.sub = dom.create_subscription(SERVE_RES, topic)
+        self.on_complete = on_complete      # callable(rid, tokens)
+        self.on_progress = on_progress      # callable(rid)
+        self.window_limit = window_limit
+        self._streams: dict[int, _Stream] = {}
+        self._completed: OrderedDict[int, list[int]] = OrderedDict()
+        self._done_rids: OrderedDict[int, bool] = OrderedDict()  # bounded
+        self._shard: dict[int, dict] = {}
+        # counters (observability + tests)
+        self.chunks = 0
+        self.duplicates = 0
+        self.gaps = 0
+        self.superseded = 0
+        self.stale_gen = 0
+        self.dropped_window = 0
+        self.n_completed = 0
+
+    # -- ingestion ------------------------------------------------------------
+
+    def attach_executor(self, executor, *, group=None):
+        """Multiplex the results subscription into an EventExecutor loop."""
+        return executor.add_subscription(self.sub, self._on_msg, group=group)
+
+    def pump(self, timeout: float = 0.05) -> int:
+        """Standalone take loop (tests / executor-less heads)."""
+        n = 0
+        ptrs = self.sub.take_all()
+        if not ptrs and self.sub.wait(timeout):
+            ptrs = self.sub.take_all()
+        for ptr in ptrs:
+            try:
+                self._on_msg(ptr)  # copies every row's tokens out
+            finally:
+                ptr.release()  # the executor path releases after callbacks;
+                n += 1         # standalone must too, or rings fill forever
+        return n
+
+    def _on_msg(self, ptr) -> None:
+        shard = int(ptr.get("shard"))
+        stamp = float(ptr.get("stamp"))
+        self._note_shard(shard, int(ptr.get("depth")), stamp)
+        for row in iter_results(ptr):
+            self.ingest(row)
+        # the executor releases the ptr after the callback (tokens copied)
+
+    def _note_shard(self, shard: int, depth: int, stamp: float) -> None:
+        rec = self._shard.setdefault(
+            shard, {"depth": 0, "lat": deque(maxlen=_LAT_WINDOW),
+                    "chunks": 0, "last_seen": 0.0})
+        now = time.monotonic()
+        rec["depth"] = depth
+        rec["last_seen"] = now
+        if stamp > 0:
+            rec["lat"].append(now - stamp)
+        rec["chunks"] += 1
+
+    def ingest(self, row: ResRow) -> None:
+        """Feed one chunk row through the window/generation state machine."""
+        self.chunks += 1
+        if row.rid in self._done_rids:
+            self.duplicates += 1  # late chunk of an already-assembled rid
+            return
+        st = self._streams.get(row.rid)
+        if st is None:
+            st = self._streams[row.rid] = _Stream(row.gen)
+        elif row.gen > st.gen:
+            # router replayed the rid: the fresh generation supersedes the
+            # partial old stream wholesale (decode restarted from scratch)
+            self.superseded += 1
+            st = self._streams[row.rid] = _Stream(row.gen)
+        elif row.gen < st.gen:
+            self.stale_gen += 1
+            return
+        if row.seq < st.next_seq or row.seq in st.window:
+            self.duplicates += 1
+            return
+        if row.seq > st.next_seq:
+            if not st.had_gap:
+                st.had_gap = True
+                self.gaps += 1
+            if len(st.window) >= self.window_limit:
+                # pathological stream: stop buffering, await replay — but
+                # never drop silently (same rule as the bridge's OOM path)
+                self.dropped_window += 1
+                return
+            st.window[row.seq] = row
+            return
+        self._advance(row.rid, st, row)
+
+    def _advance(self, rid: int, st: _Stream, row: ResRow) -> None:
+        while True:
+            st.tokens.extend(int(t) for t in np.asarray(row.tokens))
+            st.next_seq += 1
+            st.had_gap = False
+            if row.eos:
+                del self._streams[rid]
+                self._completed[rid] = st.tokens
+                self._done_rids[rid] = True  # late-duplicate detection
+                while len(self._done_rids) > _DONE_RID_LIMIT:
+                    self._done_rids.popitem(last=False)
+                self.n_completed += 1
+                if self.on_complete is not None:
+                    self.on_complete(rid, st.tokens)
+                return
+            if self.on_progress is not None:
+                self.on_progress(rid)
+            nxt = st.window.pop(st.next_seq, None)
+            if nxt is None:
+                return
+            row = nxt
+
+    # -- consumption ----------------------------------------------------------
+
+    def pop_completed(self) -> list[tuple[int, list[int]]]:
+        """Finished streams accumulated since the last pop — each rid is
+        yielded exactly once across all pops (late duplicate chunks are
+        still recognized through the bounded ``_done_rids`` record)."""
+        out = list(self._completed.items())
+        self._completed.clear()
+        return out
+
+    def __iter__(self):
+        return iter(self.pop_completed())
+
+    def result(self, rid: int) -> list[int] | None:
+        return self._completed.get(rid)
+
+    # -- per-shard snapshot (router tie-breaking + benchmark reporting) --------
+
+    def shard_depths(self) -> dict[int, int]:
+        return {k: rec["depth"] for k, rec in self._shard.items()}
+
+    def shard_stats(self) -> dict[int, dict]:
+        out: dict[int, dict] = {}
+        for k, rec in self._shard.items():
+            lat = sorted(rec["lat"])
+            out[k] = {
+                "depth": rec["depth"],
+                "chunks": rec["chunks"],
+                "last_seen": rec["last_seen"],
+                "lat_p50": lat[len(lat) // 2] if lat else None,
+                "lat_max": lat[-1] if lat else None,
+            }
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "chunks": self.chunks,
+            "completed": self.n_completed,
+            "open_streams": len(self._streams),
+            "duplicates": self.duplicates,
+            "gaps": self.gaps,
+            "superseded": self.superseded,
+            "stale_gen": self.stale_gen,
+            "dropped_window": self.dropped_window,
+        }
+
+    def close(self) -> None:
+        self.sub.close()

@@ -1,0 +1,164 @@
+"""Replica pool: spawn/own K server replicas, detect loss, drive replay.
+
+Each replica is one child process running
+:func:`repro.serving.replica.replica_main`: its own ``EventExecutor``,
+its own request-shard subscription (``<prefix>/<k>``), its own results
+publisher.  The pool is the head-side owner:
+
+* **spawn/stop** — replicas signal readiness (model loaded, subscribed)
+  and stop on a shared event with a drain (clean shutdown: in-flight
+  callbacks finish, buffered result chunks flush);
+* **liveness** — two detectors, both required by the re-hash story:
+  PID death (``Process.is_alive``) for crashed/killed replicas, and the
+  registry's *subscriber lease* (stamped by every ``take`` and by the
+  replica's heartbeat timer) for wedged ones — alive but no longer
+  consuming.  ``poll()`` reports newly-dead shards exactly once; the
+  caller removes them from the router's ring (re-hashing their in-flight
+  rids onto survivors) and sweeps the registry so the dead subscriber's
+  refs/slots are released.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import time
+
+from repro.core.topic import Domain
+
+from .replica import replica_main
+
+__all__ = ["ReplicaPool"]
+
+
+class ReplicaPool:
+    def __init__(self, dom: Domain, shards, *, req_prefix: str = "serve/req",
+                 res_topic: str = "serve/res", model: str = "echo",
+                 model_kwargs: dict | None = None, slots: int = 4,
+                 max_seq: int = 256, depth: int = 16, arena_mb: int = 32,
+                 round_period_s: float = 0.002, lease_period_s: float = 0.25,
+                 lease_timeout_s: float = 10.0, flush_every: int = 4):
+        self.dom = dom
+        self.req_prefix = req_prefix
+        self.res_topic = res_topic
+        self.model = model
+        self.model_kwargs = model_kwargs
+        self.slots = slots
+        self.max_seq = max_seq
+        self.depth = depth
+        self.arena_mb = arena_mb
+        self.round_period_s = round_period_s
+        self.lease_period_s = lease_period_s
+        self.lease_timeout_s = lease_timeout_s
+        self.flush_every = flush_every
+        self._tidx: dict[int, int] = {}  # shard -> request-topic index cache
+        self._ctx = mp.get_context("spawn")
+        self._stop = self._ctx.Event()
+        self._procs: dict[int, mp.Process] = {}
+        self._ready: dict[int, mp.Event] = {}
+        self._alive: set[int] = set()
+        self._dead: set[int] = set()
+        for k in shards:
+            self._spawn(int(k))
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def _spawn(self, shard: int) -> None:
+        ready = self._ctx.Event()
+        proc = self._ctx.Process(
+            target=replica_main,
+            args=(self.dom.name, shard, f"{self.req_prefix}/{shard}",
+                  self.res_topic),
+            kwargs=dict(model=self.model, model_kwargs=self.model_kwargs,
+                        slots=self.slots, max_seq=self.max_seq,
+                        depth=self.depth, arena_mb=self.arena_mb,
+                        round_period_s=self.round_period_s,
+                        lease_period_s=self.lease_period_s,
+                        flush_every=self.flush_every,
+                        stop_event=self._stop, ready_event=ready),
+            daemon=True,
+        )
+        proc.start()
+        self._procs[shard] = proc
+        self._ready[shard] = ready
+        self._alive.add(shard)
+
+    def wait_ready(self, timeout: float = 120.0) -> None:
+        """Block until every replica subscribed + loaded its model."""
+        deadline = time.monotonic() + timeout
+        for shard, ev in self._ready.items():
+            left = deadline - time.monotonic()
+            if left <= 0 or not ev.wait(left):
+                raise TimeoutError(f"replica {shard} not ready in {timeout}s")
+
+    @property
+    def shards(self) -> list[int]:
+        return sorted(self._alive)
+
+    def is_alive(self, shard: int) -> bool:
+        return shard in self._alive
+
+    # -- chaos hook (tests / benchmark kill-one) -------------------------------
+
+    def kill(self, shard: int) -> None:
+        """SIGKILL a replica mid-run (no cleanup, no atexit): the crash the
+        re-hash + replay path exists for."""
+        proc = self._procs[shard]
+        if proc.pid is not None and proc.is_alive():
+            os.kill(proc.pid, signal.SIGKILL)
+        proc.join(timeout=10)
+
+    # -- liveness -------------------------------------------------------------
+
+    def _lease_stale(self, shard: int) -> bool:
+        """True when the replica's request-topic subscriber lease (stamped
+        on every take and by its heartbeat timer) is past the timeout —
+        the wedged-replica detector."""
+        tidx = self._tidx.get(shard)
+        if tidx is None:
+            try:
+                tidx = self.dom.registry.topic_index(
+                    f"{self.req_prefix}/{shard}", create=False)
+            except Exception:
+                return False  # replica has not subscribed yet
+            self._tidx[shard] = tidx
+        ages = self.dom.registry.lease_ages(tidx)
+        if not ages:
+            return False
+        return min(ages.values()) > self.lease_timeout_s
+
+    def poll(self) -> list[int]:
+        """Newly-dead shards (reported exactly once): PID death or a stale
+        lease.  Sweeps the registry when anything died so the dead
+        subscriber's held refs and publisher slots are released."""
+        dead: list[int] = []
+        for shard in sorted(self._alive):
+            proc = self._procs[shard]
+            if not proc.is_alive() or self._lease_stale(shard):
+                dead.append(shard)
+        if dead:
+            for shard in dead:
+                self._alive.discard(shard)
+                self._dead.add(shard)
+            self.dom.registry.sweep()
+        return dead
+
+    # -- teardown -------------------------------------------------------------
+
+    def stop(self, timeout: float = 30.0) -> None:
+        self._stop.set()
+        deadline = time.monotonic() + timeout
+        for proc in self._procs.values():
+            proc.join(timeout=max(0.1, deadline - time.monotonic()))
+        for proc in self._procs.values():
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5)
+        self.dom.registry.sweep()
+
+    def __enter__(self) -> "ReplicaPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

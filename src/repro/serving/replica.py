@@ -1,0 +1,306 @@
+"""Replica process: one shard's server behind one EventExecutor.
+
+``replica_main`` is the spawn-safe entrypoint the pool launches: join the
+domain, subscribe to this shard's request topic, publish token chunks on
+the shared results topic, and run one continuous-batching server on one
+event loop.  Two server flavours behind the same wiring:
+
+* ``model="echo"`` — :class:`EchoServer`, a jax-free stand-in that emits
+  one deterministic token per rid per round (tests, fast demos: spawn
+  cost is numpy + repro.core only);
+* anything else — the real :class:`repro.runtime.InferenceServer`
+  (prefill/decode through the existing kernels), built from
+  ``model_kwargs`` inside the child so the spawn args stay primitives.
+
+Both implement the replica discipline:
+
+* requests enter through ``ingest_serve_message`` — the generation gate
+  makes replayed rids decode exactly once per generation;
+* every decode round's new tokens flush as ONE ``SERVE_RES`` publish
+  (``on_round_end``), with event-driven backpressure toward the
+  collector;
+* a heartbeat timer refreshes the subscriber lease while idle (busy
+  replicas are stamped by every take), so the pool can tell wedged from
+  quiet;
+* shutdown is drain-then-exit: pending callbacks finish, in-flight
+  requests run to completion (bounded), buffered chunks flush.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.executor import EventExecutor
+from repro.core.registry import AgnocastQueueFull
+from repro.core.topic import Domain
+
+from .messages import (
+    SERVE_REQ,
+    SERVE_RES,
+    GenerationGate,
+    ResRow,
+    iter_requests,
+    pack_results,
+)
+
+__all__ = ["EchoServer", "replica_main"]
+
+
+class EchoServer:
+    """jax-free continuous-batching stand-in.
+
+    One token per active rid per ``step_rounds`` call, deterministic in
+    (prompt, position) — a replayed rid reproduces the identical stream on
+    any replica, which is what lets the exactly-once tests compare replayed
+    output bit-for-bit.  Mirrors the ``InferenceServer`` serving surface
+    (``queue``/``_active``/``step_rounds``/``ingest_serve_message``/
+    ``stream_sink``/``idle``) so the same executor wiring drives both.
+    """
+
+    def __init__(self, *, slots: int = 4, vocab: int = 50021):
+        self.slots = slots
+        self.vocab = vocab
+        self.queue: deque[dict] = deque()
+        self._active: dict[int, dict] = {}
+        self.stream_sink = None           # callable(rid, gen, seq, tokens, eos)
+        self.steps = 0
+        self._gate = GenerationGate()
+
+    # -- deterministic "decode" ------------------------------------------------
+
+    def _token(self, st: dict, i: int) -> int:
+        return int((st["base"] + 131 * i + 7) % self.vocab)
+
+    # -- ingest (the shared SERVE_REQ generation gate) -------------------------
+
+    def ingest_serve_message(self, ptr, *, max_new: int = 16) -> int:
+        mnew = int(ptr.get("max_new")) or max_new
+        admitted = 0
+        for row in iter_requests(ptr):
+            if not self._gate.admit(row.rid, row.gen, supersede=self.cancel):
+                continue
+            self.queue.append({
+                "rid": row.rid, "gen": row.gen, "max_new": mnew,
+                "base": int(np.asarray(row.tokens, np.int64).sum()),
+                "emitted": 0,
+            })
+            admitted += 1
+        return admitted
+
+    def cancel(self, rid: int) -> bool:
+        self._gate.drop(rid)
+        if rid in self._active:
+            del self._active[rid]
+            return True
+        n = len(self.queue)
+        self.queue = deque(st for st in self.queue if st["rid"] != rid)
+        return len(self.queue) != n
+
+    # -- rounds ----------------------------------------------------------------
+
+    def _emit(self, st: dict, eos: bool) -> None:
+        i = st["emitted"]
+        if self.stream_sink is not None:
+            self.stream_sink(st["rid"], st["gen"], i, [self._token(st, i)],
+                             eos)
+        st["emitted"] = i + 1
+
+    def _finish(self, rid: int) -> None:
+        self._active.pop(rid, None)
+        self._gate.finish(rid)
+
+    def step_rounds(self) -> None:
+        while self.queue and len(self._active) < self.slots:
+            st = self.queue.popleft()
+            self._emit(st, st["max_new"] <= 1)  # "prefill": first token
+            if st["max_new"] <= 1:
+                self._finish(st["rid"])
+            else:
+                self._active[st["rid"]] = st
+        for rid in list(self._active):
+            st = self._active[rid]
+            eos = st["emitted"] + 1 >= st["max_new"]
+            self._emit(st, eos)
+            if eos:
+                self._finish(rid)
+        self.steps += 1
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self._active
+
+    def attach_executor(self, executor, sub, *, group=None, max_new: int = 16,
+                        round_period_s: float = 0.002, on_round_end=None):
+        """The shared arm-only-while-busy wiring
+        (:func:`repro.serving.attach.attach_server_executor`), with the
+        serve-row ingest bound in."""
+        from .attach import attach_server_executor
+
+        return attach_server_executor(
+            self, executor, sub, group=group, max_new=max_new,
+            round_period_s=round_period_s,
+            ingest=lambda ptr: self.ingest_serve_message(ptr,
+                                                         max_new=max_new),
+            on_round_end=on_round_end)
+
+
+def _build_jax_server(model: str, model_kwargs: dict | None, *, slots: int,
+                      max_seq: int, shard: int):
+    """Real replica: the existing InferenceServer (decode through the
+    paged attention kernels), built inside the child process."""
+    import os
+
+    # one replica = one core's worth of XLA: K sibling runtimes each
+    # spinning a full-width eigen thread pool just thrash the box — the
+    # fleet's parallelism comes from processes, not intra-op threads.
+    # Must be set before the child's first jax import (spawn start method
+    # guarantees this function runs pre-import).
+    os.environ.setdefault("OMP_NUM_THREADS", "1")
+    os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "intra_op_parallelism_threads" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_cpu_multi_thread_eigen=false "
+            "intra_op_parallelism_threads=1").strip()
+
+    import jax
+
+    from repro.launch.train import model_100m
+    from repro.models import Model
+    from repro.runtime.server import InferenceServer
+
+    kw = dict(model_kwargs or {})
+    arch = kw.pop("arch", model if model != "jax" else "qwen2-1.5b")
+    cfg = model_100m(arch)
+    if kw:
+        cfg = cfg.scaled(**kw)
+    m = Model(cfg)
+    server = InferenceServer(m, slots=slots, max_seq=max_seq)
+    server.load(m.init(jax.random.PRNGKey(0)))  # every replica: same weights
+    # jit prewarm BEFORE ready: the decode-step compile (~seconds under a
+    # contended fleet spin-up) must not happen inside the first request's
+    # callback, where it would starve the lease heartbeat long enough for
+    # the pool to declare a perfectly healthy replica wedged
+    import numpy as np
+
+    from repro.runtime.server import Request
+
+    server.submit(Request(rid="__prewarm__",
+                          tokens=np.arange(8, dtype=np.int32), max_new=2))
+    while not server.idle:
+        server.step_rounds()
+    server.results.pop("__prewarm__", None)
+    return server
+
+
+def replica_main(dom_name: str, shard: int, req_topic: str, res_topic: str, *,
+                 model: str = "echo", model_kwargs: dict | None = None,
+                 slots: int = 4, max_seq: int = 256, max_new: int = 16,
+                 depth: int = 16, arena_mb: int = 32,
+                 round_period_s: float = 0.002, lease_period_s: float = 0.25,
+                 flush_every: int = 4,
+                 stop_event=None, ready_event=None) -> None:
+    """Entry point for one replica process (spawn-safe).
+
+    ``flush_every`` batches result publishes across decode rounds: the
+    registry's flock is ONE lock per domain, so per-round publishes make
+    total metadata-plane traffic constant in K (every added replica just
+    bids on the same lock) — chunk batching is what lets aggregate
+    throughput actually scale with the replica count.  A round that
+    produced an ``eos`` chunk flushes immediately (completion latency is
+    never deferred)."""
+    dom = Domain.join(dom_name, arena_capacity=arena_mb << 20)
+    if model == "echo":
+        server = EchoServer(slots=slots)
+    else:
+        server = _build_jax_server(model, model_kwargs, slots=slots,
+                                   max_seq=max_seq, shard=shard)
+        server.keep_results = False  # we stream; never accumulate
+    # subscribe only once the server can actually consume: the subscriber
+    # lease doubles as the liveness signal, and it must not start ticking
+    # while a slow (fleet-contended) model build is still in progress
+    sub = dom.create_subscription(SERVE_REQ, req_topic)
+    res_pub = dom.create_publisher(SERVE_RES, res_topic, depth=depth)
+
+    should_stop = stop_event.is_set if stop_event is not None else None
+    rows: list[ResRow] = []
+    eos_pending = [False]
+    rounds_unflushed = [0]
+
+    def sink(rid, gen, seq, tokens, eos):
+        rows.append(ResRow(int(rid), gen, seq,
+                           np.asarray(tokens, np.int32), eos))
+        eos_pending[0] |= eos
+
+    server.stream_sink = sink
+
+    def publish_rows():
+        loan = res_pub.borrow_loaded_message()
+        pack_results(loan, rows, shard=shard,
+                     depth=len(server.queue) + len(server._active),
+                     stamp=time.monotonic())
+        try:
+            got = res_pub.publish_blocking(loan, timeout=30.0,
+                                           should_stop=should_stop)
+        except AgnocastQueueFull:
+            got = None  # collector stalled past the timeout
+        if got is None:
+            # stopping or saturated: return the loan, KEEP the rows — the
+            # next round's flush retries, and backpressure toward a wedged
+            # collector must never crash the replica (mirrors
+            # ShardRouter.flush on the request side)
+            loan.dealloc()
+            return
+        rows.clear()
+        eos_pending[0] = False
+        rounds_unflushed[0] = 0
+
+    def flush(force: bool = True):
+        """Publish accumulated chunk rows as one unsized message (event-
+        driven backpressure).  The per-round path (``force=False``) defers
+        until ``flush_every`` rounds accumulated or a stream completed."""
+        if not rows:
+            rounds_unflushed[0] = 0
+            return
+        rounds_unflushed[0] += 1
+        if force or eos_pending[0] or rounds_unflushed[0] >= flush_every:
+            publish_rows()
+
+    def round_flush():
+        flush(force=False)
+
+    ex = EventExecutor(name=f"replica-{shard}")
+    if model == "echo":
+        server.attach_executor(ex, sub, max_new=max_new,
+                               round_period_s=round_period_s,
+                               on_round_end=round_flush)
+    else:
+        from repro.runtime.server import attach_serving_executor
+
+        attach_serving_executor(
+            server, ex, sub, max_new=max_new, round_period_s=round_period_s,
+            ingest=lambda ptr: server.ingest_serve_message(ptr,
+                                                           max_new=max_new),
+            on_round_end=round_flush)
+    # idle heartbeat: take() stamps the lease while busy; this covers quiet
+    ex.add_timer(lease_period_s,
+                 lambda: dom.registry.refresh_lease(sub.tidx, sub.sidx))
+    if ready_event is not None:
+        ready_event.set()
+    try:
+        ex.spin(until=should_stop)
+        # clean shutdown: finish queued callbacks, run in-flight requests to
+        # completion (bounded), flush the last chunks
+        ex.drain(2.0)
+        deadline = time.monotonic() + 10.0
+        while not server.idle and time.monotonic() < deadline:
+            server.step_rounds()
+            flush()
+        flush()
+    finally:
+        ex.shutdown()
+        res_pub.reclaim()
+        dom.close()

@@ -1,0 +1,248 @@
+"""rid-hash router: the serving plane's ingest sharder.
+
+One ``ShardRouter`` owns a publisher per request shard topic
+(``<prefix>/<k>``) and consistent-hashes every request id onto the live
+replica set (:class:`~repro.serving.hashring.HashRing`).  Submissions are
+buffered per shard and flushed as ONE unsized ``SERVE_REQ`` message per
+shard (`flush`), published with ``publish_blocking`` — per-shard
+backpressure is therefore event-driven end to end: a slow replica blocks
+only its own shard's flush on the slot-freed FIFO, never the others.
+
+The router is also the replay authority.  It records every in-flight rid
+(prompt bytes included) until the collector confirms completion, so:
+
+* a dead replica (``remove_shard``) re-hashes exactly its shard's
+  in-flight rids onto the survivors, each with ``generation+1`` — the
+  replica-side generation gate and the collector's supersede rule turn
+  "at least once" into "exactly once";
+* a rid whose stream stalls (lost result chunks, e.g. a QoS drop under
+  extreme collector lag) can be replayed individually (``replay``) after
+  ``stalled`` flags it.
+
+Load-aware tie-breaking (optional): with ``load_aware=True`` a new rid
+may take the ring's *second* candidate when the primary is deeper than
+the candidate by more than ``load_slack``.  Depth is the router's own
+in-flight count per shard — exact and instantaneous, so even a blind
+initial burst spreads — plus, when a ``stats_fn`` is wired (the
+collector's ``shard_depths``), the replicas' self-reported queue depths.
+Only ring candidates are ever considered, so assignment stays
+hash-affine: every key whose primary is not overloaded keeps its
+consistent-hash shard, and stability properties are untouched when
+``load_aware`` is off (the default).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.registry import AgnocastQueueFull
+from repro.core.topic import Domain, Publisher
+
+from .hashring import HashRing
+from .messages import SERVE_REQ, ReqRow, pack_requests
+
+__all__ = ["ShardRouter", "InFlight"]
+
+
+@dataclass
+class InFlight:
+    """One routed-but-not-yet-completed request (the replay record)."""
+
+    rid: int
+    shard: int
+    gen: int
+    tokens: np.ndarray
+    stamp: float                      # first submit (latency measurements)
+    last_progress: float = field(default=0.0)  # last in-order chunk advance
+
+
+class ShardRouter:
+    def __init__(self, dom: Domain, shards, *, prefix: str = "serve/req",
+                 depth: int = 8, max_new: int = 16, vnodes: int = 64,
+                 load_aware: bool = False, load_slack: int = 4,
+                 stats_fn=None):
+        self.dom = dom
+        self.prefix = prefix
+        self.max_new = max_new
+        self.load_aware = load_aware
+        self.load_slack = load_slack
+        self.stats_fn = stats_fn
+        self.ring = HashRing(shards, vnodes=vnodes)
+        self.pubs: dict[int, Publisher] = {
+            k: dom.create_publisher(SERVE_REQ, self.topic(k), depth=depth)
+            for k in self.ring.shards
+        }
+        self.inflight: dict[int, InFlight] = {}
+        self._pending: dict[int, list[ReqRow]] = {}
+        self._shard_load: dict[int, int] = {k: 0 for k in self.ring.shards}
+        self._rid_counter = itertools.count(1)
+        # counters (observability + tests)
+        self.routed = 0
+        self.replays = 0
+        self.completions = 0
+        self.tie_breaks = 0
+        self.flush_stalls = 0
+
+    # -- assignment -----------------------------------------------------------
+
+    def topic(self, shard: int) -> str:
+        return f"{self.prefix}/{shard}"
+
+    def next_rid(self) -> int:
+        return next(self._rid_counter)
+
+    def route(self, rid: int) -> int:
+        """The shard for ``rid``: consistent hash, with an optional
+        load-aware hop to the ring's second candidate."""
+        if not self.load_aware or len(self.ring) < 2:
+            return self.ring.lookup(rid)
+        primary, alt = self.ring.candidates(rid, 2)
+        ext = (self.stats_fn() or {}) if self.stats_fn is not None else {}
+        dp = self._shard_load.get(primary, 0) + ext.get(primary, 0)
+        da = self._shard_load.get(alt, 0) + ext.get(alt, 0)
+        if dp > da + self.load_slack:
+            self.tie_breaks += 1
+            return alt
+        return primary
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, tokens, *, rid: int | None = None,
+               shard: int | None = None) -> int:
+        """Buffer one request for its hashed shard (``flush`` publishes).
+        ``shard`` pins the assignment (warmup / tests)."""
+        rid = self.next_rid() if rid is None else int(rid)
+        if rid in self.inflight:
+            raise ValueError(f"rid {rid} is already in flight")
+        shard = self.route(rid) if shard is None else shard
+        toks = np.asarray(tokens, np.int32).copy()
+        now = time.monotonic()
+        self.inflight[rid] = InFlight(rid, shard, 0, toks, now, now)
+        self._pending.setdefault(shard, []).append(ReqRow(rid, 0, toks))
+        self._shard_load[shard] = self._shard_load.get(shard, 0) + 1
+        self.routed += 1
+        return rid
+
+    def flush(self, *, timeout: float | None = 30.0, should_stop=None) -> int:
+        """Publish every buffered row: one ``SERVE_REQ`` per shard, with
+        event-driven per-shard backpressure (``publish_blocking``)."""
+        pending, self._pending = self._pending, {}
+        published = 0
+        for shard, rows in pending.items():
+            pub = self.pubs.get(shard)
+            if pub is None or shard not in self.ring:
+                # shard died between buffering and flush: re-hash the rows
+                for r in rows:
+                    rec = self.inflight.get(r.rid)
+                    if rec is not None:
+                        self._replay_locked(rec)
+                continue
+            loan = pub.borrow_loaded_message()
+            pack_requests(loan, rows, stamp=time.monotonic(),
+                          max_new=self.max_new)
+            # no explicit reclaim: publish() itself prunes freed ring slots
+            try:
+                got = pub.publish_blocking(loan, timeout=timeout,
+                                           should_stop=should_stop)
+            except AgnocastQueueFull:
+                got = None
+            if got is None:
+                # shard saturated for the whole timeout (or caller stopping):
+                # return the loan and re-buffer — a periodic flush (the head
+                # janitor) retries, and the stall-replay path re-hashes rids
+                # that stay stuck.  Never let shard backpressure crash the
+                # head's event loop.
+                loan.dealloc()
+                self._pending.setdefault(shard, []).extend(rows)
+                self.flush_stalls += 1
+                continue
+            published += len(rows)
+        return published
+
+    # -- completion / replay --------------------------------------------------
+
+    def touch(self, rid: int) -> None:
+        """Progress report from the collector (an in-order chunk landed)."""
+        rec = self.inflight.get(rid)
+        if rec is not None:
+            rec.last_progress = time.monotonic()
+
+    def complete(self, rid: int) -> None:
+        """The collector assembled this rid's full stream: drop the replay
+        record (its prompt bytes are no longer needed)."""
+        rec = self.inflight.pop(rid, None)
+        if rec is not None:
+            self.completions += 1
+            self._shard_load[rec.shard] = max(
+                0, self._shard_load.get(rec.shard, 0) - 1)
+
+    def _replay_locked(self, rec: InFlight) -> int:
+        rec.gen += 1
+        old = rec.shard
+        rec.shard = self.route(rec.rid)
+        rec.last_progress = time.monotonic()
+        self._pending.setdefault(rec.shard, []).append(
+            ReqRow(rec.rid, rec.gen, rec.tokens))
+        self._shard_load[old] = max(0, self._shard_load.get(old, 0) - 1)
+        self._shard_load[rec.shard] = self._shard_load.get(rec.shard, 0) + 1
+        self.replays += 1
+        return rec.shard
+
+    def replay(self, rid: int) -> int | None:
+        """Re-hash and re-buffer one in-flight rid with generation+1
+        (stalled stream, lost chunks).  Returns the new shard, or ``None``
+        if the rid is unknown/already complete.  Caller flushes."""
+        rec = self.inflight.get(rid)
+        return None if rec is None else self._replay_locked(rec)
+
+    def remove_shard(self, shard: int) -> list[int]:
+        """A replica died: shrink the ring and replay exactly its in-flight
+        rids onto the survivors (generation+1 each).  Returns the replayed
+        rids.  Caller flushes."""
+        self.ring.remove(shard)
+        if not len(self.ring):
+            raise RuntimeError("no live shard left to replay onto")
+        # release the dead shard's publisher now (fds + notify cache) — a
+        # long-lived head sees many replica deaths; its registry pub slot
+        # itself frees only with this process (no remove-publisher ioctl)
+        pub = self.pubs.pop(shard, None)
+        if pub is not None:
+            pub.close()
+        self._shard_load.pop(shard, None)
+        replayed = [rec.rid for rec in self.inflight.values()
+                    if rec.shard == shard]
+        # rows still buffered for the dead shard re-hash at flush time; the
+        # in-flight replay below covers them too, so drop the stale buffer
+        self._pending.pop(shard, None)
+        for rid in replayed:
+            self._replay_locked(self.inflight[rid])
+        return replayed
+
+    def stalled(self, older_than_s: float) -> list[int]:
+        """In-flight rids with no in-order progress for ``older_than_s``
+        seconds — replay candidates (collector gap that will never fill)."""
+        cut = time.monotonic() - older_than_s
+        return [rec.rid for rec in self.inflight.values()
+                if rec.last_progress < cut]
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "inflight": len(self.inflight),
+            "routed": self.routed,
+            "replays": self.replays,
+            "completions": self.completions,
+            "tie_breaks": self.tie_breaks,
+            "flush_stalls": self.flush_stalls,
+            "shards": list(self.ring.shards),
+        }
+
+    def close(self) -> None:
+        for pub in self.pubs.values():
+            pub.close()
+        self.pubs = {}

@@ -524,3 +524,106 @@ def test_wal_replay_converges_to_janitor_state(ops, crash_slot):
         j = ring = None  # drop shm views so close() can release the mapping
         reg.close()
         reg.unlink()
+
+
+# ---------------------------------------------------------------------------
+# waiter flag: releasers skip the FIFO syscall when nobody is blocked
+# ---------------------------------------------------------------------------
+
+
+def test_release_skips_fifo_write_without_waiter(dom):
+    """A release with no blocked publisher must NOT write the slot-freed
+    FIFO (the hot-path syscall the waiter flag removes); with the flag up
+    the very same release must."""
+    import select as _select
+
+    pub = dom.create_publisher(POINT_CLOUD2, "w", depth=2)
+    sub = dom.create_subscription(POINT_CLOUD2, "w")
+    _publish(pub, np.ones(8, np.uint8))
+    _publish(pub, np.ones(8, np.uint8))
+    held = sub.take()
+    assert len(held) == 2
+    held[0].release()                       # waiter flag is clear
+    r, _, _ = _select.select([pub.fileno()], [], [], 0.1)
+    assert not r                            # no wakeup byte was written
+    pub.set_waiting(True)                   # now we are "blocked"
+    held[1].release()
+    r, _, _ = _select.select([pub.fileno()], [], [], 2.0)
+    assert r                                # the release woke us
+    pub.set_waiting(False)
+    pub.drain_slot_wakeups()
+    pub.reclaim()
+
+
+def test_wait_for_slot_toggles_waiter_flag(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "w2", depth=2)
+    flag = lambda: int(dom.registry.topics[pub.tidx]["pub_waiters"][pub.pidx])
+    assert flag() == 0
+    assert pub.wait_for_slot(timeout=0.01)  # ring empty: returns at once
+    assert flag() == 0                      # cleared on the way out
+    sub = dom.create_subscription(POINT_CLOUD2, "w2")
+    _publish(pub, np.ones(4, np.uint8))
+    _publish(pub, np.ones(4, np.uint8))
+    held = sub.take()
+    assert not pub.wait_for_slot(timeout=0.05)   # blocked: times out...
+    assert flag() == 0                           # ...and still cleared
+    for p in held:
+        p.release()
+    pub.reclaim()
+
+
+def test_add_publisher_arms_waiter_flag_for_handle_lifetime(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "w3", depth=2)
+    flag = lambda: int(dom.registry.topics[pub.tidx]["pub_waiters"][pub.pidx])
+    ex = EventExecutor()
+    h = ex.add_publisher(pub, lambda p: None)
+    assert flag() == 1                      # handle waits on our behalf
+    ex.unregister(h)
+    assert flag() == 0                      # detach cleared it
+    h2 = ex.add_publisher(pub, lambda p: None)
+    assert flag() == 1
+    ex.shutdown()                           # shutdown also detaches
+    assert flag() == 0
+
+
+# ---------------------------------------------------------------------------
+# drain(): clean-shutdown hook (pending work runs, nothing new is awaited)
+# ---------------------------------------------------------------------------
+
+
+def test_drain_runs_pending_work_then_returns(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "d", depth=8)
+    sub = dom.create_subscription(POINT_CLOUD2, "d")
+    got = []
+    ex = EventExecutor()
+    ex.add_subscription(sub, lambda ptr: got.append(ptr.seq))
+    for n in range(3):
+        _publish(pub, np.full(4, n, np.uint8))
+    assert ex.drain(5.0)                    # no spin(): drain alone delivers
+    assert got == [1, 2, 3]
+    # idle executor: drain is an immediate no-op
+    t0 = time.monotonic()
+    assert ex.drain(5.0)
+    assert time.monotonic() - t0 < 1.0
+    ex.shutdown()
+    pub.reclaim()
+    assert dom.arena.live_bytes == 0
+
+
+def test_drain_threaded_waits_for_workers(dom):
+    pub = dom.create_publisher(POINT_CLOUD2, "dt", depth=8)
+    sub = dom.create_subscription(POINT_CLOUD2, "dt")
+    done = []
+
+    def slow(ptr):
+        time.sleep(0.05)
+        done.append(ptr.seq)
+
+    ex = EventExecutor(threads=2)
+    ex.add_subscription(sub, slow)
+    for n in range(4):
+        _publish(pub, np.full(4, n, np.uint8))
+    assert ex.drain(10.0)
+    assert sorted(done) == [1, 2, 3, 4]     # workers finished before return
+    ex.shutdown()
+    pub.reclaim()

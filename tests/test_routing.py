@@ -434,3 +434,101 @@ def test_no_sleep_backpressure_on_publish_paths():
     for mod in (topic, routing, executor):
         src = inspect.getsource(mod)
         assert re.search(r"\btime\.sleep\(", src) is None, mod.__name__
+
+
+# ---------------------------------------------------------------------------
+# arena pressure (OutOfArenaMemory): bounded retry, counted drop, dedup release
+# ---------------------------------------------------------------------------
+
+
+def _oom_frame(remote, topic, nbytes, route_seq):
+    from repro.core import POINT_CLOUD2
+
+    pm = POINT_CLOUD2.plain()
+    pm.data = np.zeros(nbytes, np.uint8)
+    remote.publish(topic, serialize(pm), origin=1, hops=1,
+                   src_tag=777_000, route_seq=route_seq)
+
+
+def test_bridge_oom_copy_in_recovers_after_one_retry():
+    """Arena pressure during copy-in is retried once after a bounded wait:
+    when the pressure clears in that window the frame IS delivered (no
+    silent drop), and the retry is counted."""
+    import threading
+
+    from repro.core import POINT_CLOUD2, Bus, BusClient
+
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=1 << 20)  # small: easy to exhaust
+    try:
+        br = DomainBridge(dom, bus.path, name="oomr")
+        br.attach(POINT_CLOUD2, "oomt")
+        remote = BusClient(bus.path)
+        time.sleep(0.2)
+        hog = dom.arena.alloc(dom.arena.capacity - (192 << 10))
+
+        def releaser():  # free the hog only once the first attempt OOMed
+            deadline = time.monotonic() + 5
+            while br.oom_retries < 1 and time.monotonic() < deadline:
+                time.sleep(0.002)
+            dom.arena.free(hog)
+
+        th = threading.Thread(target=releaser)
+        th.start()
+        _oom_frame(remote, "oomt", 256 << 10, route_seq=41)
+        deadline = time.monotonic() + 10
+        drops_seen = 0
+        while br.relayed_in < 1 and time.monotonic() < deadline:
+            br.pump_bus(0.2)
+            if br.dropped_oom > drops_seen:
+                # a scheduler stall ate the whole retry window: the dedup
+                # key was released, so simply offer the frame again
+                drops_seen = br.dropped_oom
+                _oom_frame(remote, "oomt", 256 << 10, route_seq=41)
+        th.join()
+        assert br.relayed_in == 1
+        assert br.oom_retries >= 1
+        assert br.stats()["copy_errors"] == 0
+        remote.close()
+        br.close()
+    finally:
+        dom.close()
+        bus.stop()
+
+
+def test_bridge_oom_final_drop_releases_dedup_key():
+    """If the retry ALSO hits arena pressure the frame is dropped — but
+    counted (dropped_oom, not copy_errors) and its dedup key is released,
+    so the same routed message delivered later is not treated as a dup."""
+    from repro.core import POINT_CLOUD2, Bus, BusClient
+
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=1 << 20)
+    try:
+        br = DomainBridge(dom, bus.path, name="oomd")
+        br.attach(POINT_CLOUD2, "oomt")
+        remote = BusClient(bus.path)
+        time.sleep(0.2)
+        hog = dom.arena.alloc(dom.arena.capacity - (192 << 10))
+        live_before = dom.arena.live_bytes
+        _oom_frame(remote, "oomt", 256 << 10, route_seq=42)
+        deadline = time.monotonic() + 5
+        while br.dropped_oom < 1 and time.monotonic() < deadline:
+            br.pump_bus(0.2)
+        assert br.dropped_oom == 1 and br.relayed_in == 0
+        assert br.copy_errors == 0          # pressure is not "malformed"
+        # abort-safe: every block the failed borrows allocated was returned
+        assert dom.arena.live_bytes == live_before
+        dom.arena.free(hog)
+        # same (src_tag, route_seq) again: dedup key was released on the
+        # final drop, so this copy must be admitted and delivered
+        _oom_frame(remote, "oomt", 256 << 10, route_seq=42)
+        deadline = time.monotonic() + 5
+        while br.relayed_in < 1 and time.monotonic() < deadline:
+            br.pump_bus(0.2)
+        assert br.relayed_in == 1 and br.dropped_dups == 0
+        remote.close()
+        br.close()
+    finally:
+        dom.close()
+        bus.stop()

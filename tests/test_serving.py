@@ -1,0 +1,392 @@
+"""Sharded serving plane: hash-ring stability, windowed reassembly,
+router replay, pool liveness — and the cross-process kill → re-hash →
+exactly-once replay path."""
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Domain, EventExecutor
+from repro.serving import (
+    SERVE_REQ,
+    SERVE_RES,
+    EchoServer,
+    HashRing,
+    ReplicaPool,
+    ResRow,
+    ResultsCollector,
+    ShardRouter,
+    iter_requests,
+    pack_results,
+)
+
+
+@pytest.fixture()
+def dom():
+    d = Domain.create(arena_capacity=32 << 20)
+    yield d
+    d.close()
+
+
+def echo_tokens(prompt, max_new, vocab=50021):
+    """The EchoServer's deterministic stream (replay must reproduce it)."""
+    base = int(np.asarray(prompt, np.int64).sum())
+    return [(base + 131 * i + 7) % vocab for i in range(max_new)]
+
+
+# ---------------------------------------------------------------------------
+# consistent-hash ring
+# ---------------------------------------------------------------------------
+
+
+def test_ring_lookup_deterministic_across_instances():
+    a = HashRing(range(4))
+    b = HashRing([3, 1, 0, 2])       # insertion order must not matter
+    for rid in range(500):
+        assert a.lookup(rid) == b.lookup(rid)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_ring_grow_moves_only_to_new_shard(k, seed):
+    """K -> K+1: every key either keeps its shard or moves TO the new one,
+    and only ~1/(K+1) of keys move (consistent hashing's contract)."""
+    rids = [seed * 10_000 + i for i in range(600)]
+    ring = HashRing(range(k))
+    before = {r: ring.lookup(r) for r in rids}
+    ring.add(k)                       # the new replica
+    moved = 0
+    for r in rids:
+        after = ring.lookup(r)
+        if after != before[r]:
+            assert after == k         # moves land on the new shard only
+            moved += 1
+    assert moved / len(rids) <= 2.5 / (k + 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 8), victim=st.integers(0, 7))
+def test_ring_shrink_moves_only_victims_keys(k, victim):
+    victim %= k
+    rids = list(range(400))
+    ring = HashRing(range(k))
+    before = {r: ring.lookup(r) for r in rids}
+    ring.remove(victim)
+    for r in rids:
+        after = ring.lookup(r)
+        if before[r] != victim:
+            assert after == before[r]  # survivors' keys never move
+        else:
+            assert after != victim
+
+
+def test_ring_candidates_distinct_and_primary_first():
+    ring = HashRing(range(4))
+    for rid in range(50):
+        c = ring.candidates(rid, 3)
+        assert len(c) == 3 and len(set(c)) == 3
+        assert c[0] == ring.lookup(rid)
+
+
+# ---------------------------------------------------------------------------
+# collector reassembly (seq window, gaps, generations)
+# ---------------------------------------------------------------------------
+
+
+def row(rid, gen, seq, toks, eos=False):
+    return ResRow(rid, gen, seq, np.asarray(toks, np.int32), eos)
+
+
+def test_collector_reorders_within_window(dom):
+    c = ResultsCollector(dom)
+    try:
+        c.ingest(row(7, 0, 2, [30]))
+        c.ingest(row(7, 0, 0, [10]))
+        assert c.gaps == 1            # seq 2 arrived while expecting 0
+        c.ingest(row(7, 0, 3, [40], eos=True))
+        c.ingest(row(7, 0, 1, [20]))  # fills the gap: drains the window
+        assert dict(c.pop_completed()) == {7: [10, 20, 30, 40]}
+        assert c.stats()["open_streams"] == 0
+    finally:
+        c.close()
+
+
+def test_collector_drops_duplicates_and_late_chunks(dom):
+    c = ResultsCollector(dom)
+    try:
+        c.ingest(row(1, 0, 0, [1]))
+        c.ingest(row(1, 0, 0, [1]))   # dup of an in-order chunk
+        c.ingest(row(1, 0, 2, [3]))
+        c.ingest(row(1, 0, 2, [3]))   # dup inside the window
+        c.ingest(row(1, 0, 1, [2]))
+        c.ingest(row(1, 0, 3, [4], eos=True))
+        c.ingest(row(1, 0, 1, [2]))   # after completion
+        assert dict(c.pop_completed()) == {1: [1, 2, 3, 4]}
+        assert c.duplicates == 3
+        assert c.n_completed == 1     # completion fired exactly once
+    finally:
+        c.close()
+
+
+def test_collector_generation_supersede(dom):
+    done = []
+    c = ResultsCollector(dom, on_complete=lambda rid, t: done.append((rid, t)))
+    try:
+        c.ingest(row(5, 0, 0, [1]))
+        c.ingest(row(5, 0, 1, [2]))   # partial gen-0 stream...
+        c.ingest(row(5, 1, 0, [10]))  # ...superseded by the replay
+        c.ingest(row(5, 0, 2, [3]))   # stale generation: ignored
+        c.ingest(row(5, 1, 1, [20], eos=True))
+        assert c.superseded == 1 and c.stale_gen == 1
+        assert done == [(5, [10, 20])]
+        assert dict(c.pop_completed()) == {5: [10, 20]}
+    finally:
+        c.close()
+
+
+def test_collector_shard_snapshot_over_messages(dom):
+    """End-to-end message path: chunks arrive via a real SERVE_RES topic and
+    the per-shard depth/latency snapshot reflects the publisher's report."""
+    pub = dom.create_publisher(SERVE_RES, "serve/res", depth=8)
+    c = ResultsCollector(dom, topic="serve/res")
+    try:
+        loan = pub.borrow_loaded_message()
+        pack_results(loan, [row(3, 0, 0, [5, 6]),
+                            row(3, 0, 1, [7], eos=True)],
+                     shard=2, depth=11, stamp=time.monotonic())
+        pub.publish(loan)
+        deadline = time.monotonic() + 5
+        while c.n_completed < 1 and time.monotonic() < deadline:
+            c.pump(0.05)
+        assert dict(c.pop_completed()) == {3: [5, 6, 7]}
+        assert c.shard_depths() == {2: 11}
+        st_ = c.shard_stats()[2]
+        assert st_["chunks"] == 1 and st_["lat_p50"] is not None
+        pub.reclaim()
+    finally:
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# router: hashing, replay, load-aware tie-breaking
+# ---------------------------------------------------------------------------
+
+
+def test_router_routes_match_ring_and_flush_delivers(dom):
+    router = ShardRouter(dom, range(3), max_new=4)
+    subs = {k: dom.create_subscription(SERVE_REQ, router.topic(k))
+            for k in range(3)}
+    rids = [router.submit([i, i + 1]) for i in range(12)]
+    assert router.flush() == 12
+    got = {}
+    for k, sub in subs.items():
+        for ptr in sub.take():
+            for r in iter_requests(ptr):
+                got[r.rid] = (k, r.gen)
+            ptr.release()
+    assert sorted(got) == sorted(rids)
+    for rid, (k, gen) in got.items():
+        assert k == router.ring.lookup(rid) and gen == 0
+    router.close()
+
+
+def test_router_remove_shard_replays_exactly_dead_rids(dom):
+    router = ShardRouter(dom, range(3), max_new=4)
+    subs = {k: dom.create_subscription(SERVE_REQ, router.topic(k))
+            for k in range(3)}
+    rids = [router.submit([i]) for i in range(30)]
+    router.flush()
+    for sub in subs.values():          # drain the first wave
+        for ptr in sub.take():
+            ptr.release()
+    victim = 1
+    dead_rids = {r for r in rids if router.inflight[r].shard == victim}
+    survivors_rids = set(rids) - dead_rids
+    replayed = set(router.remove_shard(victim))
+    assert replayed == dead_rids       # exactly the dead shard's rids
+    router.flush()
+    regot = {}
+    for k, sub in subs.items():
+        for ptr in sub.take():
+            for r in iter_requests(ptr):
+                regot[r.rid] = (k, r.gen)
+            ptr.release()
+    assert set(regot) == dead_rids
+    for rid, (k, gen) in regot.items():
+        assert k != victim and gen == 1
+        assert router.inflight[rid].shard == k
+    for rid in survivors_rids:         # untouched by the re-hash
+        assert router.inflight[rid].gen == 0
+    router.close()
+
+
+def test_router_load_aware_tie_break(dom):
+    depths = {}
+    router = ShardRouter(dom, range(2), load_aware=True, load_slack=2,
+                         stats_fn=lambda: depths)
+    rid = 12345
+    primary, alt = router.ring.candidates(rid, 2)
+    depths.update({primary: 0, alt: 0})
+    assert router.route(rid) == primary
+    depths[primary] = 10               # overloaded: hop to the candidate
+    assert router.route(rid) == alt
+    assert router.tie_breaks == 1
+    router.close()
+
+
+def test_router_complete_drops_replay_record(dom):
+    router = ShardRouter(dom, range(2))
+    rid = router.submit([1, 2, 3])
+    router.flush()
+    assert rid in router.inflight
+    router.complete(rid)
+    assert rid not in router.inflight
+    assert router.replay(rid) is None  # nothing to replay after completion
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (in-process echo replicas)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_end_to_end_in_process(dom):
+    from repro.serving.messages import pack_results as pack
+
+    K, N, MAX_NEW = 2, 16, 5
+    router = ShardRouter(dom, range(K), max_new=MAX_NEW)
+    collector = ResultsCollector(
+        dom, on_complete=lambda rid, t: router.complete(rid),
+        on_progress=router.touch)
+    ex = EventExecutor(name="serve-test")
+    res_pub = dom.create_publisher(SERVE_RES, "serve/res", depth=32)
+    for k in range(K):
+        sub = dom.create_subscription(SERVE_REQ, router.topic(k))
+        srv = EchoServer(slots=2)
+        rows: list[ResRow] = []
+
+        def mk(srv=srv, rows=rows, k=k):
+            def sink(rid, gen, seq, toks, eos):
+                rows.append(ResRow(int(rid), gen, seq,
+                                   np.asarray(toks, np.int32), eos))
+
+            def flush():
+                if not rows:
+                    return
+                loan = res_pub.borrow_loaded_message()
+                pack(loan, rows, shard=k, depth=0, stamp=time.monotonic())
+                res_pub.publish_blocking(loan, timeout=10)
+                rows.clear()
+
+            return sink, flush
+
+        srv.stream_sink, flush = mk()
+        srv.attach_executor(ex, sub, max_new=MAX_NEW, round_period_s=0.001,
+                            on_round_end=flush)
+    collector.attach_executor(ex)
+
+    rng = np.random.default_rng(3)
+    prompts = {router.submit(p): p
+               for p in [rng.integers(0, 999, 6) for _ in range(N)]}
+    router.flush()
+    ex.spin(until=lambda: collector.n_completed >= N, timeout=30)
+    ex.shutdown()
+    results = dict(collector.pop_completed())
+    assert len(results) == N
+    for rid, prompt in prompts.items():
+        assert results[rid] == echo_tokens(prompt, MAX_NEW)
+    assert collector.duplicates == 0 and not router.inflight
+    router.close()
+    collector.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-process: kill a replica mid-run -> re-hash -> exactly-once replay
+# ---------------------------------------------------------------------------
+
+
+def test_killed_replica_rids_replayed_exactly_once():
+    ctx = mp.get_context("spawn")
+    assert ctx  # replicas spawn via ReplicaPool (same start method)
+    dom = Domain.create(arena_capacity=32 << 20)
+    K, N, MAX_NEW = 3, 24, 6
+    pool = ReplicaPool(dom, range(K), model="echo", slots=2,
+                       round_period_s=0.005)
+    try:
+        pool.wait_ready(60)
+        router = ShardRouter(dom, range(K), max_new=MAX_NEW)
+        completions: dict[int, int] = {}
+
+        def on_complete(rid, toks):
+            completions[rid] = completions.get(rid, 0) + 1
+            router.complete(rid)
+
+        collector = ResultsCollector(dom, on_complete=on_complete,
+                                     on_progress=router.touch)
+        ex = EventExecutor(name="head")
+        collector.attach_executor(ex)
+
+        def janitor():
+            for shard in pool.poll():
+                router.remove_shard(shard)
+            for rid in router.stalled(5.0):
+                router.replay(rid)
+            router.flush(timeout=5.0)
+
+        ex.add_timer(0.1, janitor)
+        rng = np.random.default_rng(7)
+        prompts = {}
+        for _ in range(N):
+            p = rng.integers(0, 999, 10)
+            prompts[router.submit(p)] = p
+        router.flush()
+
+        ex.spin(until=lambda: collector.n_completed >= N // 4, timeout=30)
+        # kill the shard with the most in-flight rids: guarantees the
+        # replay path actually fires
+        per_shard: dict[int, int] = {}
+        for rec in router.inflight.values():
+            per_shard[rec.shard] = per_shard.get(rec.shard, 0) + 1
+        victim = max(per_shard, key=per_shard.get)
+        pool.kill(victim)
+        ex.spin(until=lambda: collector.n_completed >= N, timeout=60)
+        ex.shutdown()
+
+        results = dict(collector.pop_completed())
+        assert len(results) == N                      # no rid lost
+        assert all(n == 1 for n in completions.values())  # exactly once
+        assert router.replays > 0                     # the kill bit someone
+        for rid, prompt in prompts.items():
+            # deterministic echo: the replayed stream is bit-identical
+            assert results[rid] == echo_tokens(prompt, MAX_NEW), rid
+        assert victim not in router.ring
+        assert not pool.is_alive(victim)
+        router.close()
+        collector.close()
+    finally:
+        pool.stop()
+        dom.close()
+
+
+# ---------------------------------------------------------------------------
+# pool liveness: leases catch a wedged (alive but not consuming) replica
+# ---------------------------------------------------------------------------
+
+
+def test_lease_refresh_on_take_and_staleness(dom):
+    reg = dom.registry
+    t = reg.topic_index("lease-topic")
+    s = reg.add_subscriber(t, 1)  # fake pid: lease API only
+    ages = reg.lease_ages(t)
+    assert s in ages and ages[s] < 1.0
+    reg.topics[t]["sub_lease_ns"][s] = 0  # force epoch-old lease
+    assert reg.lease_ages(t)[s] > 10.0
+    reg.take(t, s)                         # lease refresh on take
+    assert reg.lease_ages(t)[s] < 1.0
+    reg.topics[t]["sub_lease_ns"][s] = 0
+    reg.refresh_lease(t, s)                # the idle heartbeat path
+    assert reg.lease_ages(t)[s] < 1.0
