@@ -18,14 +18,14 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="minimal sizes (CI)")
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale smoke (CI gate): fig11/fig14/serving "
-                         "only unless --only says otherwise")
+                    help="seconds-scale smoke (CI gate): fig11/fig14/fig15/"
+                         "serving only unless --only says otherwise")
     ap.add_argument("--only", default="",
                     help="comma list: fig9,fig10,fig11,fig12,fig13,fig14,"
-                         "serving,roofline")
+                         "fig15,serving,roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "fig11,fig14,serving"
+        args.only = "fig11,fig14,fig15,serving"
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
     n10 = 600 if args.full else (60 if args.quick else 200)
@@ -82,6 +82,14 @@ def main(argv=None) -> int:
                 print(f"# FAIL fig14: agnocast hop not flat "
                       f"({res['agno_hop_spread']:.2f}x)")
                 failures += 1
+    if want("fig15"):
+        from benchmarks import fig15_metadata
+        res = fig15_metadata.main(smoke=args.smoke or args.quick)
+        if not res["ok"]:
+            for c in res["checks"]:
+                if not c["ok"]:
+                    print(f"# FAIL fig15/{c['name']}: {c['detail']}")
+            failures += 1
     if want("serving"):
         from benchmarks import fig13_serving
         res = fig13_serving.main(smoke=args.smoke or args.quick)

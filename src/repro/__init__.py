@@ -5,8 +5,8 @@ paper's contribution), plus the layers a "millions of users" deployment
 needs on top.  Module map:
 
 * :mod:`repro.core` — the paper's plane: shared-memory arena +
-  unsized messages (``ArenaVector``), transactional registry (flock +
-  WAL + janitor), two-counter smart pointers, ``Publisher`` /
+  unsized messages (``ArenaVector``), transactional registry (per-topic
+  flocks + per-topic WAL slots + janitor), two-counter smart pointers, ``Publisher`` /
   ``Subscription`` topics with O(1) FIFO wakeups, the epoll
   ``EventExecutor`` (callback groups, batched takes, event-driven
   backpressure with owner-side waiter flags), the federated routing

@@ -6,7 +6,8 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
 * :mod:`repro.core.messages` — unsized message schema (``ArenaVector`` =
   ``std::vector`` in the shared heap) + the serialized baseline format;
 * :mod:`repro.core.registry` — transactional metadata (kernel-module
-  analogue: flock + WAL journal + PID-liveness janitor);
+  analogue: per-topic flocks + per-topic WAL journal slots +
+  PID-liveness janitor; the domain lock covers create/destroy/sweep);
 * :mod:`repro.core.smart_ptr` — the two-counter smart pointer (§IV-C);
 * :mod:`repro.core.topic` — ``create_publisher`` / ``create_subscription``
   / ``borrow_loaded_message`` / move-``publish`` (Fig. 2 API);

@@ -206,18 +206,18 @@ class _PublisherHandle(_Handle):
 
 class _BridgeHandle(_Handle):
     """All planes of a :class:`repro.core.routing.DomainBridge` in one loop:
-    every endpoint's wakeup FIFO, the bus socket, and — while a copy-in is
-    parked on ``AgnocastQueueFull`` — the blocked publisher's slot-freed
-    FIFO.  While parked, the bus fd stays suspended (no further frames are
-    consumed) and the publisher fd drives retries; once the parked publish
-    lands, intake resumes."""
+    every endpoint's wakeup FIFO, the bus socket, and — per endpoint whose
+    copy-in is parked on ``AgnocastQueueFull`` — that topic's blocked-
+    publisher slot-freed FIFO.  Parking is per topic: intake keeps running
+    (frames for a parked topic join its bounded backlog inside the bridge)
+    while each armed publisher fd drives its own topic's retries."""
 
     def __init__(self, executor, group, bridge):
         super().__init__(executor, group, f"bridge:{bridge.name}")
         self.bridge = bridge
         self._sock = bridge.bus.fileno()
         self._sub_eps = {ep.sub.fileno(): ep for ep in bridge.endpoints.values()}
-        self._pub_fd: int | None = None
+        self._pub_fds: dict[int, object] = {}  # fd -> blocked Publisher
         self.fds = list(self._sub_eps) + [self._sock]
         bridge._handle = self  # topics attached later are watched too
 
@@ -240,13 +240,12 @@ class _BridgeHandle(_Handle):
                 # subscription, or this loop would spin a core
                 self.executor._park_hangup(fd, self)
             return [_Work(self, lambda ep=ep: self.bridge.pump_agnocast(ep.topic))]
-        if fd == self._pub_fd:
-            pub = self.bridge.blocked_publisher
-            if pub is not None:
-                pub.drain_slot_wakeups()
-                return [_Work(self, self._retry_blocked)]
-            self._disarm_pub()  # stale: the parked publish already landed
-            return []
+        pub = self._pub_fds.get(fd)
+        if pub is not None:
+            pub.drain_slot_wakeups()
+            return [_Work(self, self._retry_blocked)]
+        if fd != self._sock:
+            return []  # stale pub fd: its parked publish already landed
         # bus socket: frames are only consumed when the pump runs, so suppress
         # the fd until then or a threaded loop would re-enqueue the same event
         self.executor._suspend_fd(fd)
@@ -262,39 +261,43 @@ class _BridgeHandle(_Handle):
     # -- blocked-publisher multiplexing (backpressure) -------------------------
 
     def _after_bus_pump(self) -> None:
-        pub = self.bridge.blocked_publisher
-        if pub is not None:
-            self._arm_pub(pub)
-        else:
-            self.executor._resume_fd(self._sock, self)
+        self._sync_pubs()
+        self.executor._resume_fd(self._sock, self)
 
-    def _arm_pub(self, pub) -> None:
+    def _sync_pubs(self) -> None:
+        """Make the armed slot-freed fds mirror the bridge's parked set:
+        newly parked topics get their publisher fd multiplexed in, lifted
+        ones get theirs disarmed."""
+        blocked = {pub.fileno(): pub
+                   for pub in self.bridge.blocked_publishers}
+        for fd in list(self._pub_fds):
+            if fd not in blocked:
+                self._disarm_pub(fd)
+        for fd, pub in blocked.items():
+            if fd not in self._pub_fds:
+                self._arm_pub(fd, pub)
+
+    def _arm_pub(self, fd: int, pub) -> None:
         pub.set_waiting(True)  # park already set it; re-arm is idempotent
-        fd = pub.fileno()
-        self._pub_fd = fd
+        self._pub_fds[fd] = pub
         if fd not in self.fds:
             self.fds.append(fd)
         self.executor._resume_fd(fd, self)
 
-    def _disarm_pub(self) -> None:
-        fd, self._pub_fd = self._pub_fd, None
-        if fd is not None:
-            self.executor._suspend_fd(fd)
-            if fd in self.fds:
-                self.fds.remove(fd)
+    def _disarm_pub(self, fd: int) -> None:
+        self._pub_fds.pop(fd, None)
+        self.executor._suspend_fd(fd)
+        if fd in self.fds:
+            self.fds.remove(fd)
 
     def _retry_blocked(self) -> None:
-        # a raising retry drops the parked frame (loan freed by the bridge):
-        # treat it as cleared, or the suspended bus fd would never resume
-        # and the bridge would silently stop relaying
-        cleared = True
+        # a raising retry drops that topic's parked frame (loan freed by
+        # the bridge): _sync_pubs disarms whatever is no longer parked, so
+        # a poisoned frame can never wedge the remaining topics' wakeups
         try:
-            cleared = self.bridge.retry_pending()
+            self.bridge.retry_pending()
         finally:
-            if cleared:
-                self._disarm_pub()
-                # resume intake: buffered frames re-arm the socket readiness
-                self.executor._resume_fd(self._sock, self)
+            self._sync_pubs()
 
 
 class _TimerHandle(_Handle):

@@ -12,15 +12,30 @@ with user-space mechanisms the kernel still underwrites:
 
 * Metadata lives in a shared-memory segment of fixed-layout structured
   arrays (the "module state").
-* Every operation runs under an ``flock`` on a lock file — an OS-owned
-  lock that **the kernel releases when the holder dies**, so a crashed
-  participant can never wedge the plane.
-* Row mutations are write-ahead journaled with before-images; the next
-  lock acquirer rolls back any PENDING mutation left by a dead process.
-  This is the "complete atomically or roll back" alternative the paper
-  explicitly names for a user-space implementation (§IV-B).
+* The lock plane is **sharded by topic**, mirroring the kernel module's
+  per-topic transactional paths: every per-topic operation (publish /
+  take / release / participant add-remove) runs under that topic's own
+  ``flock`` (``topic_lock_path``), so operations on disjoint topics are
+  truly concurrent.  A **domain lock** (``domain_lock_path``) is held
+  only for topic create/destroy and the janitor sweep.  Both are OS-owned
+  locks that **the kernel releases when the holder dies**, so a crashed
+  participant can never wedge the plane.  Lock order is domain → topic,
+  never the reverse; topic locks are never nested with each other.
+* Row mutations are write-ahead journaled with before-images into a
+  **per-topic journal slot** (``journal[tidx]``), guarded by that topic's
+  lock.  The next acquirer of *that topic's* lock rolls back any PENDING
+  mutation left by a dead process — recovery is per topic, so a writer
+  dying mid-mutation on topic A never stalls (or is recovered by) traffic
+  on topic B.  This is the "complete atomically or roll back" alternative
+  the paper explicitly names for a user-space implementation (§IV-B).
+  ``topic_index`` additionally rolls back dead writers' journals under
+  the domain lock (taking each affected topic's lock first) so the
+  topic-name scan never trusts a row torn by a creator that died
+  mid-create.
 * A janitor sweep detects dead PIDs (``kill(pid, 0)``) and releases their
-  unreceived/held bits — the process-exit hook analogue.
+  unreceived/held bits — the process-exit hook analogue.  The sweep holds
+  the domain lock across the pass (freezing create/destroy) and takes
+  each topic's lock while sweeping that topic.
 
 Entry lifetime follows the paper's two-counter rule (§IV-C): an entry's
 payload may be freed only when its reference holders ("held", a bitmask of
@@ -45,9 +60,12 @@ Two extensions ride on the same plane:
   publisher arming, cleared when the wait ends) lets releasers skip the
   FIFO write entirely when nobody is blocked — the common case pays zero
   extra syscalls on the hot release path.  The flag protocol is
-  lost-wakeup-free because both sides order their ops through the flock:
-  the waiter sets its flag *before* re-checking ``can_publish``, and the
-  releaser reads the flag *after* its held→0 mutation commits.
+  lost-wakeup-free because both sides order their ops through the *same
+  topic's* lock: the waiter sets its flag *before* re-checking
+  ``can_publish`` (which acquires the topic lock), and the releaser reads
+  the flag *after* its held→0 mutation commits under that lock — sharding
+  the lock by topic keeps the argument intact because a waiter and its
+  releasers are, by construction, operating on the same topic.
 * **Subscriber liveness leases**: every ``take`` (and the explicit
   ``refresh_lease``) stamps a per-subscriber monotonic-clock lease in the
   shared topic header.  PID liveness catches *dead* participants; the
@@ -62,8 +80,10 @@ import errno
 import fcntl
 import os
 import secrets
+import shutil
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 
 import numpy as np
@@ -72,13 +92,14 @@ from .arena import _new_shm
 
 __all__ = ["Registry", "RegistryError", "AgnocastQueueFull", "Entry",
            "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
-           "fifo_dir", "sub_fifo_path", "pub_fifo_path"]
+           "fifo_dir", "sub_fifo_path", "pub_fifo_path",
+           "domain_lock_path", "topic_lock_path"]
 
 MAX_TOPICS = 64
 MAX_PUBS = 8           # a sharded results topic fans in one pub per replica
 MAX_SUBS = 64          # one bit per subscriber in uint64 masks
 DEPTH_MAX = 64
-_MAGIC = 0xA6_0C_0D_02  # layout v2: waiter flags + subscriber leases
+_MAGIC = 0xA6_0C_0D_03  # layout v3: per-topic journal slots (sharded locks)
 
 ST_FREE, ST_USED, ST_DEAD = 0, 1, 2
 ORIGIN_AGNOCAST, ORIGIN_BRIDGE = 0, 1
@@ -154,6 +175,16 @@ class Entry:
     route_seq: int = 0
 
 
+def domain_lock_path(reg: str) -> str:
+    """The domain lock: topic create/destroy and the janitor sweep only."""
+    return f"/tmp/.agnocast-{reg}.lock"
+
+
+def topic_lock_path(reg: str, tidx: int) -> str:
+    """Topic ``tidx``'s lock: every publish/take/release/participant op."""
+    return f"/tmp/.agnocast-{reg}.t{tidx}.lock"
+
+
 def fifo_dir(reg: str) -> str:
     return f"/tmp/.agnocast-{reg}.d"
 
@@ -166,6 +197,26 @@ def sub_fifo_path(reg: str, tidx: int, sidx: int) -> str:
 def pub_fifo_path(reg: str, tidx: int, pidx: int) -> str:
     """Owner-side reverse FIFO: releasers write one byte per freed slot."""
     return os.path.join(fifo_dir(reg), f"t{tidx}p{pidx}.pub.fifo")
+
+
+def _open_and_wake(path: str) -> int | None:
+    """Open a FIFO write end (non-blocking) and write one wakeup byte.
+
+    The recycled-inode retry shared by the owner-side
+    (:meth:`Registry._notify_owner`) and subscriber-side
+    (``Publisher._notify``) wakeup paths: the sweep unlinks dead slots'
+    FIFO files and a successor mkfifos a fresh inode, so a cached write fd
+    can go stale — callers drop it and re-send through here.  Returns the
+    fresh fd for the caller's cache, or ``None`` if nobody is listening."""
+    try:
+        fd = os.open(path, os.O_WRONLY | os.O_NONBLOCK)
+    except OSError:
+        return None  # ENXIO/ENOENT: no reader
+    try:
+        os.write(fd, b"\x01")
+    except OSError:
+        pass  # full pipe: a wakeup is already pending
+    return fd
 
 
 def _alive(pid: int) -> bool:
@@ -181,18 +232,39 @@ def _alive(pid: int) -> bool:
 
 
 class _Flock:
-    """Kernel-released mutual exclusion (survives holder death)."""
+    """Kernel-released mutual exclusion (survives holder death).
+
+    ``flock`` is held per *open file description*: two threads sharing this
+    object would both "acquire" it at once (the second LOCK_EX on an
+    already-held fd is a no-op), so a thread mutex restores in-process
+    exclusion — executor worker threads share one ``Registry``.
+    """
 
     def __init__(self, path: str):
         self._path = path
         self._fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o666)
+        try:
+            # the O_CREAT mode is masked by umask: a registry created under
+            # a restrictive umask must still be attachable cross-user
+            os.chmod(path, 0o666)
+        except OSError:
+            pass  # pre-existing file owned by another uid
+        self._mu = threading.Lock()
 
     def __enter__(self):
-        fcntl.flock(self._fd, fcntl.LOCK_EX)
+        self._mu.acquire()
+        try:
+            fcntl.flock(self._fd, fcntl.LOCK_EX)
+        except BaseException:
+            self._mu.release()
+            raise
         return self
 
     def __exit__(self, *exc):
-        fcntl.flock(self._fd, fcntl.LOCK_UN)
+        try:
+            fcntl.flock(self._fd, fcntl.LOCK_UN)
+        finally:
+            self._mu.release()
 
     def close(self):
         try:
@@ -211,8 +283,11 @@ class Registry:
         buf = shm.buf
         self._hdr = np.frombuffer(buf, dtype=np.uint64, count=8)
         off = 64
-        self._journal = np.frombuffer(buf, dtype=JOURNAL_DT, count=1, offset=off)
-        off += JOURNAL_DT.itemsize
+        # one journal slot per topic: journal[tidx] is guarded by topic
+        # tidx's lock, so disjoint-topic mutations journal concurrently
+        self._journal = np.frombuffer(buf, dtype=JOURNAL_DT, count=MAX_TOPICS,
+                                      offset=off)
+        off += JOURNAL_DT.itemsize * MAX_TOPICS
         off = (off + 63) & ~63
         self.topics = np.frombuffer(buf, dtype=TOPIC_DT, count=MAX_TOPICS, offset=off)
         off += TOPIC_DT.itemsize * MAX_TOPICS
@@ -221,7 +296,9 @@ class Registry:
         self.entries = np.frombuffer(buf, dtype=ENTRY_DT, count=n_entries, offset=off).reshape(
             MAX_TOPICS, MAX_PUBS, DEPTH_MAX
         )
-        self._lock = _Flock(f"/tmp/.agnocast-{name}.lock")
+        self._lock = _Flock(domain_lock_path(name))  # create/destroy + sweep
+        self._tlocks: list[_Flock | None] = [None] * MAX_TOPICS
+        self._tlock_mu = threading.Lock()  # lazy per-topic lock-file opens
         self._pub_fds: dict[tuple[int, int], int] = {}  # (tidx,pidx) -> write fd
         self._pub_fds_mu = threading.Lock()  # executor worker threads share us
         if owner:
@@ -233,7 +310,7 @@ class Registry:
 
     @staticmethod
     def segment_size() -> int:
-        off = 64 + JOURNAL_DT.itemsize
+        off = 64 + JOURNAL_DT.itemsize * MAX_TOPICS
         off = (off + 63) & ~63
         off += TOPIC_DT.itemsize * MAX_TOPICS
         off = (off + 63) & ~63
@@ -261,6 +338,10 @@ class Registry:
                     pass
             self._pub_fds = {}
         self._lock.close()
+        for lk in self._tlocks:
+            if lk is not None:
+                lk.close()
+        self._tlocks = [None] * MAX_TOPICS
         for a in ("_hdr", "_journal", "topics", "entries"):
             setattr(self, a, None)
         gc.collect()
@@ -275,23 +356,70 @@ class Registry:
                 self._shm.unlink()
             except FileNotFoundError:
                 pass
-            try:
-                os.unlink(f"/tmp/.agnocast-{self.name}.lock")
-            except OSError:
-                pass
+            # every artifact this registry strews across /tmp goes with it:
+            # the domain lock, every per-topic lock, and the FIFO directory
+            # (wakeup + slot-freed FIFOs) — nothing stale survives a run
+            paths = [domain_lock_path(self.name)]
+            paths.extend(topic_lock_path(self.name, i)
+                         for i in range(MAX_TOPICS))
+            for p in paths:
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+            shutil.rmtree(fifo_dir(self.name), ignore_errors=True)
 
-    # -- journaled row mutation (transactionality core) ----------------------
+    # -- sharded locking + journaled row mutation (transactionality core) -----
 
-    def _recover(self):
-        j = self._journal[0]
+    def _topic_flock(self, tidx: int) -> _Flock:
+        """Topic ``tidx``'s lock file, opened lazily (most participants only
+        ever touch a handful of the 64 possible topics)."""
+        lk = self._tlocks[tidx]
+        if lk is None:
+            with self._tlock_mu:
+                lk = self._tlocks[tidx]
+                if lk is None:
+                    lk = _Flock(topic_lock_path(self.name, tidx))
+                    self._tlocks[tidx] = lk
+        return lk
+
+    @contextmanager
+    def _locked(self, tidx: int):
+        """The per-topic critical section every metadata op runs in:
+        acquire topic ``tidx``'s lock, roll back any dead writer's pending
+        mutation on *this* topic, then run the op."""
+        with self._topic_flock(tidx):
+            self._recover(tidx)
+            yield
+
+    def _recover(self, tidx: int):
+        """Roll back a dead writer's in-flight mutation on topic ``tidx``
+        (before-images).  Caller holds topic ``tidx``'s lock — recovery is
+        per topic: a pending journal on another topic is that topic's next
+        acquirer's job, never ours."""
+        j = self._journal[tidx]
         if int(j["state"]) == _J_PENDING and not _alive(int(j["pid"])):
-            # roll back the dead writer's in-flight mutation (before-images)
             t, p, s = int(j["tidx"]), int(j["pidx"]), int(j["slot"])
             if int(j["has_topic"]) and t >= 0:
                 self.topics[t] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
             if int(j["has_entry"]) and t >= 0 and s >= 0:
                 self.entries[t, p, s] = np.frombuffer(bytes(j["entry_img"]), dtype=ENTRY_DT)[0]
-            self._journal[0]["state"] = _J_CLEAN
+            j["state"] = _J_CLEAN
+
+    def _recover_dead_topics(self) -> None:
+        """Opportunistic pass under the domain lock: roll back every dead
+        writer's pending journal before trusting the topic-name scan (a
+        creator that died mid-create may have left a torn row).  Each
+        rollback still takes its topic's lock (domain → topic order), so a
+        concurrent *live* acquirer of that topic — who may already have
+        recovered and started a fresh transaction — is never disturbed:
+        ``_recover`` re-checks writer liveness under the lock."""
+        pending = np.nonzero(self._journal["state"] == _J_PENDING)[0]
+        for i in pending:
+            i = int(i)
+            if not _alive(int(self._journal[i]["pid"])):
+                with self._topic_flock(i):
+                    self._recover(i)
 
     class _Txn:
         def __init__(self, reg: "Registry", tidx: int, pidx: int = -1, slot: int = -1,
@@ -300,25 +428,28 @@ class Registry:
             self.topic, self.entry = topic, entry
 
         def __enter__(self):
-            r, j = self.reg, self.reg._journal
-            j[0]["pid"] = os.getpid()
-            j[0]["tidx"], j[0]["pidx"], j[0]["slot"] = self.tidx, self.pidx, self.slot
-            j[0]["has_topic"] = 1 if self.topic else 0
-            j[0]["has_entry"] = 1 if self.entry else 0
+            # journal slot = the topic's own: guarded by the topic lock the
+            # caller already holds, so sibling topics journal concurrently
+            r, t = self.reg, self.tidx
+            j = self.reg._journal
+            j[t]["pid"] = os.getpid()
+            j[t]["tidx"], j[t]["pidx"], j[t]["slot"] = self.tidx, self.pidx, self.slot
+            j[t]["has_topic"] = 1 if self.topic else 0
+            j[t]["has_entry"] = 1 if self.entry else 0
             if self.topic:
-                j[0]["topic_img"] = r.topics[self.tidx].tobytes()
+                j[t]["topic_img"] = r.topics[self.tidx].tobytes()
             if self.entry:
-                j[0]["entry_img"] = r.entries[self.tidx, self.pidx, self.slot].tobytes()
-            j[0]["state"] = _J_PENDING  # fence: images valid before PENDING
+                j[t]["entry_img"] = r.entries[self.tidx, self.pidx, self.slot].tobytes()
+            j[t]["state"] = _J_PENDING  # fence: images valid before PENDING
             return self
 
         def __exit__(self, et, ev, tb):
             if et is None:
-                self.reg._journal[0]["state"] = _J_CLEAN
+                self.reg._journal[self.tidx]["state"] = _J_CLEAN
             # on exception: leave PENDING; rollback happens via _recover on
             # the next acquisition (we are still alive, so roll back now)
-            elif int(self.reg._journal[0]["state"]) == _J_PENDING:
-                j = self.reg._journal[0]
+            elif int(self.reg._journal[self.tidx]["state"]) == _J_PENDING:
+                j = self.reg._journal[self.tidx]
                 if int(j["has_topic"]):
                     self.reg.topics[self.tidx] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
                 if int(j["has_entry"]):
@@ -331,8 +462,8 @@ class Registry:
 
     def topic_index(self, name: str, *, create: bool = True) -> int:
         key = name.encode()
-        with self._lock:
-            self._recover()
+        with self._lock:  # the domain lock: create/destroy only
+            self._recover_dead_topics()
             free = -1
             for i in range(MAX_TOPICS):
                 t = self.topics[i]
@@ -344,19 +475,23 @@ class Registry:
                 raise RegistryError(f"unknown topic {name!r}")
             if free < 0:
                 raise RegistryError("topic table full")
-            with self._Txn(self, free, topic=True):
-                t = self.topics[free]
-                t["name"] = key
-                t["in_use"] = 1
-                t["sub_alive"] = 0
-                t["pub_alive"][:] = 0
+            # the create mutation journals into the new topic's own slot,
+            # under its lock (domain → topic order): if we die here, the
+            # slot's next acquirer — or the next topic_index/sweep — rolls
+            # the torn row back to free
+            with self._locked(free):
+                with self._Txn(self, free, topic=True):
+                    t = self.topics[free]
+                    t["name"] = key
+                    t["in_use"] = 1
+                    t["sub_alive"] = 0
+                    t["pub_alive"][:] = 0
             return free
 
     def add_publisher(self, tidx: int, pid: int, arena_name: str, depth: int) -> int:
         if not (1 <= depth <= DEPTH_MAX):
             raise RegistryError(f"depth must be in [1,{DEPTH_MAX}]")
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             for p in range(MAX_PUBS):
                 if not t["pub_alive"][p] or not _alive(int(t["pub_pids"][p])):
@@ -373,8 +508,7 @@ class Registry:
             raise RegistryError("publisher table full")
 
     def add_subscriber(self, tidx: int, pid: int) -> int:
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             alive = int(t["sub_alive"])
             for s in range(MAX_SUBS):
@@ -383,19 +517,28 @@ class Registry:
                         t["sub_pids"][s] = pid
                         t["sub_alive"] = np.uint64(alive | (1 << s))
                         t["sub_lease_ns"][s] = time.monotonic_ns()
+                    # the slot's wakeup FIFO is (re)created here, under the
+                    # topic lock: sweep/remove unlink a dead slot's FIFO
+                    # file, so creation must be ordered with the slot claim
+                    # or a publish racing the new subscriber's own mkfifo
+                    # would find no file at all (ENOENT, silently skipped)
+                    try:
+                        os.makedirs(fifo_dir(self.name), exist_ok=True)
+                        os.mkfifo(sub_fifo_path(self.name, tidx, s))
+                    except FileExistsError:
+                        pass
                     return s
             raise RegistryError("subscriber table full")
 
     def remove_subscriber(self, tidx: int, sidx: int) -> None:
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             owners = self._drop_subscriber(tidx, sidx)
         self._notify_owners(owners)
 
     def _drop_subscriber(self, tidx: int, sidx: int) -> list[tuple[int, int]]:
-        """Caller holds the lock.  Returns the (tidx, pidx) owners to wake
-        (dropping refs may have freed ring slots) — the FIFO writes happen
-        after the lock is released."""
+        """Caller holds topic ``tidx``'s lock.  Returns the (tidx, pidx)
+        owners to wake (dropping refs may have freed ring slots) — the FIFO
+        writes happen after the lock is released."""
         mask = np.uint64(~np.uint64(1 << sidx))
         t = self.topics[tidx]
         with self._Txn(self, tidx, topic=True):
@@ -404,6 +547,10 @@ class Registry:
         e = self.entries[tidx]
         e["unreceived"] &= mask
         e["held"] &= mask  # releases the dead subscriber's references (§IV-C)
+        try:  # the slot's wakeup FIFO file goes with the slot (no /tmp leak)
+            os.unlink(sub_fifo_path(self.name, tidx, sidx))
+        except OSError:
+            pass
         return [(tidx, p) for p in range(MAX_PUBS) if t["pub_alive"][p]]
 
     def _notify_owners(self, owners: list[tuple[int, int]]) -> None:
@@ -423,8 +570,8 @@ class Registry:
         with no blocked publisher is the common case, and the flag check is
         one shared-memory load instead of an ``os.write`` syscall.  The
         waiter sets the flag *before* re-checking ``can_publish`` and both
-        sides cross the flock, so a releaser that misses the flag is always
-        ordered before a re-check that sees its freed slot.
+        sides cross the topic's lock, so a releaser that misses the flag is
+        always ordered before a re-check that sees its freed slot.
         """
         try:
             if not self.topics[tidx]["pub_waiters"][pidx]:
@@ -451,6 +598,10 @@ class Registry:
                 except OSError:
                     pass
                 self._pub_fds.pop(key, None)
+                # recycled slot: retry once against the fresh inode
+                fd = _open_and_wake(pub_fifo_path(self.name, tidx, pidx))
+                if fd is not None:
+                    self._pub_fds[key] = fd
 
     def set_pub_waiter(self, tidx: int, pidx: int, waiting: bool) -> None:
         """Raise/clear the owner's "blocked on a full ring" flag.
@@ -479,8 +630,8 @@ class Registry:
         heartbeat — the wedged-consumer detector (PID liveness only catches
         dead ones).  Lock-free monitoring read: the poller runs on a timer,
         so a torn race costs one stale sample, never a wrong decision —
-        keeping it off the flock matters because liveness polls must not
-        bid against the data plane's hot path."""
+        keeping it off the topic lock matters because liveness polls must
+        not bid against the data plane's hot path."""
         now = time.monotonic_ns()
         t = self.topics[tidx]
         alive = int(t["sub_alive"])
@@ -491,8 +642,7 @@ class Registry:
         }
 
     def publishers(self, tidx: int) -> list[tuple[int, str]]:
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             return [
                 (p, bytes(t["pub_arena"][p]).rstrip(b"\0").decode())
@@ -506,8 +656,7 @@ class Registry:
         """Would :meth:`publish` succeed right now?  The target ring slot is
         publishable unless a subscriber still *holds* its occupant (an
         unreceived-only occupant is dropped by QoS keep-last)."""
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             depth = int(t["pub_depth"][pidx])
             slot = int(t["pub_next_seq"][pidx]) % depth
@@ -525,8 +674,7 @@ class Registry:
         AgnocastQueueFull (cf. loaned-chunk exhaustion in iceoryx).
         """
         freeable: list[int] = []
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             depth = int(t["pub_depth"][pidx])
             seq = int(t["pub_next_seq"][pidx])
@@ -579,8 +727,7 @@ class Registry:
         """
         got: list[Entry] = []
         bit = np.uint64(1 << sidx)
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             # lease refresh on take: an actively-consuming subscriber never
             # needs a separate heartbeat (repro.serving replica liveness)
             self.topics[tidx]["sub_lease_ns"][sidx] = time.monotonic_ns()
@@ -617,8 +764,7 @@ class Registry:
         every slow subscriber catches up."""
         bit = np.uint64(1 << sidx)
         freed = False
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             slot = seq % int(t["pub_depth"][pidx])
             e = self.entries[tidx, pidx, slot]
@@ -627,16 +773,15 @@ class Registry:
                     e["held"] = np.uint64(int(e["held"]) & ~int(bit))
                 freed = int(e["held"]) == 0
         if freed:
-            # outside the flock: the FIFO write is best-effort/non-blocking
-            # and must not lengthen the global critical section
+            # outside the topic lock: the FIFO write is best-effort/non-
+            # blocking and must not lengthen the critical section
             self._notify_owner(tidx, pidx)
 
     def reclaimable(self, tidx: int, pidx: int) -> list[int]:
         """Owner-side query: seqs whose payload may now be freed (both
         counters zero — the paper's deallocation condition, Fig. 7)."""
         out: list[int] = []
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             ring = self.entries[tidx, pidx]
             done = (ring["state"] == ST_USED) & (ring["unreceived"] == 0) & \
                    (ring["held"] == 0) & (ring["pub_refs"] == 0)
@@ -653,37 +798,56 @@ class Registry:
         The paper's kernel module hooks process exit; our janitor detects
         death via PID liveness and is invoked by any participant. Idempotent
         (safe to crash mid-sweep and re-run).
+
+        Lock scope: the domain lock is held across the pass (freezing topic
+        create/destroy, so the ``in_use`` scan stays coherent) and each
+        topic's own lock is taken while that topic is swept — the data
+        plane of a healthy topic only ever contends with the sweep for the
+        instant its own topic is under the broom.
         """
         report = {"dead_subs": 0, "dead_pubs": 0, "orphan_arenas": []}
         owners: list[tuple[int, int]] = []
         with self._lock:
-            self._recover()
+            self._recover_dead_topics()
             for tidx in range(MAX_TOPICS):
-                t = self.topics[tidx]
-                if not t["in_use"]:
+                if not self.topics[tidx]["in_use"]:
                     continue
-                alive = int(t["sub_alive"])
-                for s in range(MAX_SUBS):
-                    if (alive >> s) & 1 and not _alive(int(t["sub_pids"][s])):
-                        owners.extend(self._drop_subscriber(tidx, s))
-                        report["dead_subs"] += 1
-                for p in range(MAX_PUBS):
-                    if t["pub_alive"][p] and not _alive(int(t["pub_pids"][p])):
-                        arena = bytes(t["pub_arena"][p]).rstrip(b"\0").decode()
-                        with self._Txn(self, tidx, topic=True):
-                            t["pub_alive"][p] = 0
-                            t["pub_pids"][p] = 0
-                        self.entries[tidx, p]["state"] = ST_DEAD
-                        report["dead_pubs"] += 1
-                        report["orphan_arenas"].append(arena)
-        self._notify_owners(owners)  # FIFO writes outside the flock
+                with self._locked(tidx):
+                    t = self.topics[tidx]
+                    if not t["in_use"]:
+                        continue
+                    alive = int(t["sub_alive"])
+                    for s in range(MAX_SUBS):
+                        if (alive >> s) & 1 and not _alive(int(t["sub_pids"][s])):
+                            owners.extend(self._drop_subscriber(tidx, s))
+                            report["dead_subs"] += 1
+                    for p in range(MAX_PUBS):
+                        if t["pub_alive"][p] and not _alive(int(t["pub_pids"][p])):
+                            arena = bytes(t["pub_arena"][p]).rstrip(b"\0").decode()
+                            with self._Txn(self, tidx, topic=True):
+                                t["pub_alive"][p] = 0
+                                t["pub_pids"][p] = 0
+                            self.entries[tidx, p]["state"] = ST_DEAD
+                            report["dead_pubs"] += 1
+                            report["orphan_arenas"].append(arena)
+                            with self._pub_fds_mu:  # drop any cached write fd
+                                fd = self._pub_fds.pop((tidx, p), None)
+                            if fd is not None:
+                                try:
+                                    os.close(fd)
+                                except OSError:
+                                    pass
+                            try:  # dead slot's reverse FIFO file (no leak)
+                                os.unlink(pub_fifo_path(self.name, tidx, p))
+                            except OSError:
+                                pass
+        self._notify_owners(owners)  # FIFO writes outside the locks
         return report
 
     # -- introspection ---------------------------------------------------------
 
     def stats(self, tidx: int) -> dict:
-        with self._lock:
-            self._recover()
+        with self._locked(tidx):
             t = self.topics[tidx]
             ring = self.entries[tidx]
             return {

@@ -50,11 +50,15 @@ Backpressure FIFO protocol (event-driven end to end, no sleep-polling):
   releasing a dead subscriber's refs — writes one byte to it when an
   entry's last *held* reference drops (the only counter a publish can
   block on).
-* A bridge whose copy-in hits ``AgnocastQueueFull`` *parks* the filled
-  loan (``pending``), stops consuming bus frames (bounded memory, FIFO
-  order preserved), and exposes the blocked publisher's ``fileno()``; the
-  executor multiplexes that fd and retries the parked publish on wakeup.
-* Standalone (executor-less) bridges select on the same fd in
+* Parking is **per endpoint**: a copy-in that hits ``AgnocastQueueFull``
+  parks that *topic's* filled loan (one parked loan per topic) plus a
+  bounded backlog of raw frames behind it (per-topic FIFO order
+  preserved, overflow counted and dropped) — frames for every other topic
+  of the bridge keep flowing, so one stalled consumer never head-of-line
+  blocks the whole bridge.  Each parked endpoint exposes its blocked
+  publisher's ``fileno()``; the executor multiplexes those fds and
+  retries the parked publishes on wakeup.
+* Standalone (executor-less) bridges select on the same fds in
   ``spin_once``; plain publishers use ``Publisher.wait_for_slot`` /
   ``publish_blocking``.
 
@@ -75,7 +79,7 @@ import secrets
 import select
 import threading
 import zlib
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import NamedTuple
 
 import numpy as np
@@ -215,14 +219,15 @@ class RoutingTable:
 class _Endpoint:
     """One federated topic on one bridge: the bridge's pub/sub pair."""
 
-    __slots__ = ("mtype", "topic", "pub", "sub")
+    __slots__ = ("mtype", "topic", "pub", "sub", "depth")
 
     def __init__(self, mtype: MessageType, topic: str, pub: Publisher,
-                 sub: Subscription):
+                 sub: Subscription, depth: int):
         self.mtype = mtype
         self.topic = topic
         self.pub = pub
         self.sub = sub
+        self.depth = depth  # ring depth; also bounds the parked backlog
 
 
 class _Pending(NamedTuple):
@@ -251,7 +256,11 @@ class DomainBridge:
         self.max_hops = router.max_hops if router is not None else max_hops
         self.bus = BusClient(bus_path)
         self.endpoints: dict[str, _Endpoint] = {}
-        self._pending: _Pending | None = None
+        # per-endpoint parking: topic -> the one parked loan, plus a bounded
+        # FIFO backlog of raw frames that arrived behind it (bounded by the
+        # endpoint's own ring depth)
+        self._pending: dict[str, _Pending] = {}
+        self._backlog: dict[str, deque] = {}
         # standalone bridges own their dedup window + id mint; router-owned
         # ones share the router's
         self._seen = _DedupWindow() if router is None else None
@@ -265,6 +274,7 @@ class DomainBridge:
         self.copy_errors = 0       # aborted copy-ins (loan returned)
         self.oom_retries = 0       # copy-ins that hit arena pressure once
         self.dropped_oom = 0       # frames dropped after the bounded retry
+        self.dropped_backlog = 0   # frames beyond a parked topic's backlog
 
     # -- federation surface ---------------------------------------------------
 
@@ -275,10 +285,10 @@ class DomainBridge:
         start watching the new endpoint's wakeup FIFO."""
         ep = self.endpoints.get(topic)
         if ep is None:
-            pub = self.dom.create_publisher(mtype, topic,
-                                            depth=depth or self.depth)
+            d = depth or self.depth
+            pub = self.dom.create_publisher(mtype, topic, depth=d)
             sub = self.dom.create_subscription(mtype, topic)
-            ep = _Endpoint(mtype, topic, pub, sub)
+            ep = _Endpoint(mtype, topic, pub, sub, d)
             self.endpoints[topic] = ep
             self.bus.subscribe(topic)
             if self._handle is not None:
@@ -352,19 +362,34 @@ class DomainBridge:
     def pump_bus(self, timeout: float = 0.0) -> int:
         """Copy admitted bus frames into the agnocast plane.
 
-        While a copy-in is parked on a full queue no further frames are
-        consumed (bounded memory, per-topic order preserved); the parked
-        publish is retried first."""
+        Parked topics are retried first; a frame for a still-parked topic
+        joins that topic's bounded backlog (per-topic FIFO order preserved,
+        overflow dropped and counted) while every other topic's frames are
+        copied in immediately — intake never stops for the whole bridge."""
         n = 0
-        if self._pending is not None and not self.retry_pending():
-            return n
+        seen = 0
+        self.retry_pending()
         while True:
-            fr = self.bus.recv_frame(timeout if n == 0 else 0.0)
+            fr = self.bus.recv_frame(timeout if seen == 0 else 0.0)
             if fr is None:
                 return n
-            n += self._handle_frame(fr)
-            if self._pending is not None:
-                return n
+            seen += 1
+            n += self._intake_frame(fr)
+
+    def _intake_frame(self, fr: Frame) -> int:
+        """Route one received frame: deliver now, or queue it behind its
+        topic's parked copy-in."""
+        ep = self.endpoints.get(fr.topic)
+        if ep is None:
+            return 0
+        if fr.topic in self._pending:
+            q = self._backlog.setdefault(fr.topic, deque())
+            if len(q) >= max(ep.depth, 4):
+                self.dropped_backlog += 1  # bounded memory: shed, counted
+                return 0
+            q.append(fr)
+            return 0
+        return self._handle_frame(fr)
 
     def _handle_frame(self, fr: Frame) -> int:
         ep = self.endpoints.get(fr.topic)
@@ -383,6 +408,8 @@ class DomainBridge:
         try:
             self._copy_in_bounded(ep, fr, src, rseq)
         except Exception as e:
+            if getattr(e, "_bridge_accounted", False):
+                return 0  # the inline parked-retry already counted + forgot
             if not isinstance(e, OutOfArenaMemory):
                 self.copy_errors += 1  # malformed frame: dropped, no leak
             if fr.origin == 1:
@@ -448,25 +475,53 @@ class DomainBridge:
                            src_tag=src, route_seq=rseq)
             self.relayed_in += 1
         except AgnocastQueueFull:
-            # park: the loan stays valid; the blocked publisher's slot-freed
-            # FIFO is the wakeup source (executor-multiplexed or select()ed).
-            # Waiter flag up so releasers write that FIFO at all.
-            self._pending = _Pending(ep, loan, hops, src, rseq)
+            # park THIS endpoint: the loan stays valid; the blocked
+            # publisher's slot-freed FIFO is the wakeup source (executor-
+            # multiplexed or select()ed).  Waiter flag up so releasers
+            # write that FIFO at all.  Other endpoints keep flowing.
+            self._pending[ep.topic] = _Pending(ep, loan, hops, src, rseq)
             ep.pub.set_waiting(True)
             # lost-wakeup guard (same rule as wait_for_slot): a release that
             # landed between the failed publish and the flag store produced
-            # no FIFO byte — re-check under the flock and retry immediately
+            # no FIFO byte — re-check under the topic lock, retry now
             if self.dom.registry.can_publish(ep.pub.tidx, ep.pub.pidx):
-                self.retry_pending()
+                self._retry_topic(ep.topic)
         except Exception:
             loan.dealloc()  # any other failure: return the arena blocks
             raise
 
     def retry_pending(self) -> bool:
-        """Retry the parked copy-in; True when the bridge is unblocked."""
-        if self._pending is None:
+        """Retry every parked copy-in (then drain the unparked topics'
+        backlogs, in arrival order); True when nothing remains parked.
+
+        One topic's poisoned retry must not wedge its siblings: the error
+        is re-raised only after every parked topic got its retry, and the
+        poisoned topic's backlog is shed (counted) — its frames must not
+        deliver stale and out of order behind newer intake."""
+        err: Exception | None = None
+        for topic in list(self._pending):
+            try:
+                unparked = self._retry_topic(topic)
+            except Exception as e:
+                q = self._backlog.pop(topic, None)
+                if q:
+                    self.dropped_backlog += len(q)
+                if err is None:
+                    err = e
+                continue
+            if unparked:
+                self._drain_backlog(topic)
+        if err is not None:
+            raise err
+        return not self._pending
+
+    def _retry_topic(self, topic: str) -> bool:
+        """Retry one topic's parked publish; True when that topic is
+        unblocked (its backlog may still hold frames — see caller)."""
+        pending = self._pending.get(topic)
+        if pending is None:
             return True
-        ep, loan, hops, src, rseq = self._pending
+        ep, loan, hops, src, rseq = pending
         ep.pub.reclaim()
         try:
             ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
@@ -474,39 +529,62 @@ class DomainBridge:
                            src_tag=src, route_seq=rseq)
         except AgnocastQueueFull:
             return False
-        except Exception:
-            self._pending = None  # poisoned: drop the frame, free the loan
+        except Exception as e:
+            del self._pending[topic]  # poisoned: drop the frame, free loan
             self.copy_errors += 1
             loan.dealloc()
             ep.pub.set_waiting(False)
             # undelivered: release its dedup key so another route can still
             # deliver (no-op for adopted ids — they are never re-admitted)
             self._forget(src, rseq)
+            # the immediate lost-wakeup retry re-raises through
+            # _handle_frame's catch-all: mark the frame as accounted so the
+            # drop is not counted (and its key not forgotten) twice
+            e._bridge_accounted = True
             raise
-        self._pending = None
+        del self._pending[topic]
         self.relayed_in += 1
         ep.pub.set_waiting(False)
         return True
 
+    def _drain_backlog(self, topic: str) -> None:
+        """Deliver frames queued behind a (now lifted) parked copy-in, in
+        arrival order; stops where the topic re-parks."""
+        q = self._backlog.get(topic)
+        while q:
+            fr = q.popleft()
+            self._handle_frame(fr)
+            if topic in self._pending:
+                return  # re-parked: the rest stays queued, order intact
+        self._backlog.pop(topic, None)
+
     @property
     def blocked_publisher(self) -> Publisher | None:
-        """The publisher whose full ring is stalling copy-ins (if any)."""
-        return self._pending.ep.pub if self._pending is not None else None
+        """One publisher whose full ring is stalling its topic's copy-ins
+        (compat accessor; see :attr:`blocked_publishers` for all of them)."""
+        for pending in self._pending.values():
+            return pending.ep.pub
+        return None
+
+    @property
+    def blocked_publishers(self) -> list[Publisher]:
+        """Every parked endpoint's publisher — one selectable slot-freed
+        fd per stalled topic; unrelated topics are not represented because
+        they are not blocked."""
+        return [p.ep.pub for p in self._pending.values()]
 
     # -- standalone spinning -----------------------------------------------------
 
     def spin_once(self, timeout: float = 0.05) -> int:
         """Pump both planes once, then wait on every relevant fd at once:
-        each endpoint's wakeup FIFO, the bus socket, and — when a copy-in is
-        parked — the blocked publisher's slot-freed FIFO."""
+        each endpoint's wakeup FIFO, the bus socket, and every parked
+        endpoint's blocked-publisher slot-freed FIFO (intake keeps running
+        while individual topics are parked — their frames backlog)."""
         moved = self.pump_agnocast() + self.pump_bus(0.0)
         if moved == 0:
             rlist: list = [ep.sub for ep in self.endpoints.values()]
-            pub = self.blocked_publisher
-            if pub is not None:
-                rlist.append(pub)
-            else:
-                rlist.append(self.bus)
+            rlist.extend(self.blocked_publishers)
+            rlist.append(self.bus)
             r, _, _ = select.select(rlist, [], [], timeout)
             for obj in r:
                 if isinstance(obj, Subscription):
@@ -532,23 +610,25 @@ class DomainBridge:
             "copy_errors": self.copy_errors,
             "oom_retries": self.oom_retries,
             "dropped_oom": self.dropped_oom,
-            "parked": self._pending is not None,
+            "dropped_backlog": self.dropped_backlog,
+            "parked": len(self._pending),
         }
 
     def close(self) -> None:
-        if self._pending is not None:
+        for pending in list(self._pending.values()):
             try:
-                self._pending.loan.dealloc()  # return the parked loan's arena
+                pending.loan.dealloc()  # return the parked loan's arena
             except Exception:
                 pass
             try:
-                self._pending.ep.pub.set_waiting(False)
+                pending.ep.pub.set_waiting(False)
             except Exception:
                 pass
-            # the parked frame was admitted but never delivered: release its
+            # a parked frame was admitted but never delivered: release its
             # dedup key so other routes (or a restarted bridge) can deliver
-            self._forget(self._pending.src_tag, self._pending.route_seq)
-            self._pending = None
+            self._forget(pending.src_tag, pending.route_seq)
+        self._pending = {}
+        self._backlog = {}
         self.bus.close()
 
 

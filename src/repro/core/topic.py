@@ -40,6 +40,7 @@ from .registry import (
     ORIGIN_AGNOCAST,
     AgnocastQueueFull,
     Registry,
+    _open_and_wake,
     fifo_dir as _fifo_dir,
     pub_fifo_path as _pub_fifo_path,
     sub_fifo_path as _fifo_path,
@@ -227,8 +228,8 @@ class Publisher:
         anything that waits on :meth:`fileno` outside :meth:`wait_for_slot`
         (executor ``add_publisher`` handles, a parked bridge copy-in) must
         raise the flag for the wait's duration.  Always set the flag
-        *before* re-checking ``can_publish`` — the flock orders the two
-        sides, which makes the protocol lost-wakeup-free."""
+        *before* re-checking ``can_publish`` — the topic's lock orders the
+        two sides, which makes the protocol lost-wakeup-free."""
         self.dom.registry.set_pub_waiter(self.tidx, self.pidx, waiting)
 
     def drain_slot_wakeups(self) -> int:
@@ -324,6 +325,13 @@ class Publisher:
                         if e.errno == errno.EPIPE:
                             os.close(fd)
                             self._fifo_fds.pop(s, None)
+                            # recycled slot (sweep unlinked the dead sub's
+                            # FIFO, a successor mkfifo'd a fresh inode):
+                            # retry once so the wakeup is not lost
+                            fd = _open_and_wake(
+                                _fifo_path(self.dom.name, self.tidx, s))
+                            if fd is not None:
+                                self._fifo_fds[s] = fd
             s += 1
 
     def close(self) -> None:

@@ -38,7 +38,7 @@ class ReplicaPool:
                  model_kwargs: dict | None = None, slots: int = 4,
                  max_seq: int = 256, depth: int = 16, arena_mb: int = 32,
                  round_period_s: float = 0.002, lease_period_s: float = 0.25,
-                 lease_timeout_s: float = 10.0, flush_every: int = 4):
+                 lease_timeout_s: float = 10.0, flush_every: int = 1):
         self.dom = dom
         self.req_prefix = req_prefix
         self.res_topic = res_topic

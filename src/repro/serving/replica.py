@@ -201,17 +201,19 @@ def replica_main(dom_name: str, shard: int, req_topic: str, res_topic: str, *,
                  slots: int = 4, max_seq: int = 256, max_new: int = 16,
                  depth: int = 16, arena_mb: int = 32,
                  round_period_s: float = 0.002, lease_period_s: float = 0.25,
-                 flush_every: int = 4,
+                 flush_every: int = 1,
                  stop_event=None, ready_event=None) -> None:
     """Entry point for one replica process (spawn-safe).
 
-    ``flush_every`` batches result publishes across decode rounds: the
-    registry's flock is ONE lock per domain, so per-round publishes make
-    total metadata-plane traffic constant in K (every added replica just
-    bids on the same lock) — chunk batching is what lets aggregate
-    throughput actually scale with the replica count.  A round that
-    produced an ``eos`` chunk flushes immediately (completion latency is
-    never deferred)."""
+    ``flush_every`` optionally batches result publishes across decode
+    rounds.  It defaults to 1 (publish every round): the metadata plane is
+    sharded per topic, so a replica's request takes contend on nobody and
+    its result publishes bid only on the results topic's own lock — the
+    domain-wide-flock era, when chunk batching was *required* for
+    aggregate throughput to scale with K at all, is over.  Values > 1
+    still trade completion latency for fewer metadata ops under extreme
+    fan-in.  A round that produced an ``eos`` chunk flushes immediately
+    (completion latency is never deferred)."""
     dom = Domain.join(dom_name, arena_capacity=arena_mb << 20)
     if model == "echo":
         server = EchoServer(slots=slots)

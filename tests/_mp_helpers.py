@@ -128,3 +128,27 @@ def bridge_runner(reg_name, bus_path, topic, q, run_s=10.0):
         br.spin_once(0.05)
     q.put(("counts", br.relayed_out, br.relayed_in))
     time.sleep(0.5)
+
+
+def crash_mid_mutation(reg_name, topic, q, hold_s=1.0):
+    """Die mid-mutation on ``topic`` WHILE HOLDING its per-topic lock: a
+    PENDING journal slot + torn row are left behind, and the kernel must
+    release the flock on SIGKILL.  The parent proves (a) other topics'
+    traffic proceeds during the hold, (b) the next acquirer of THIS topic
+    rolls the torn write back."""
+    from repro.core.registry import _J_PENDING, Registry
+
+    reg = Registry.attach(reg_name)
+    t = reg.topic_index(topic, create=False)
+    lock = reg._topic_flock(t)
+    lock.__enter__()            # hold topic t's lock until death
+    j = reg._journal[t]
+    j["pid"] = os.getpid()
+    j["tidx"], j["pidx"], j["slot"] = t, 0, 1
+    j["has_topic"], j["has_entry"] = 0, 1
+    j["entry_img"] = reg.entries[t, 0, 1].tobytes()
+    j["state"] = _J_PENDING
+    reg.entries[t, 0, 1]["desc_off"] = 31337   # the torn write
+    q.put("holding")
+    time.sleep(hold_s)          # parent drives topic B traffic meanwhile
+    os.kill(os.getpid(), signal.SIGKILL)

@@ -143,3 +143,49 @@ def test_bridge_relays_both_directions(ctx):
     finally:
         dom.close()
         bus.stop()
+
+
+def test_dead_writer_recovered_per_topic_while_others_flow(ctx):
+    """Sharded metadata plane (§IV-B per topic): a writer SIGKILLed
+    mid-mutation on topic A — while *holding A's lock* — must (a) not stall
+    topic B's traffic during the hold (disjoint locks), and (b) be rolled
+    back by the next acquirer of A, not by B's acquirers."""
+    from repro.core.registry import _J_CLEAN, _J_PENDING, Registry
+
+    reg = Registry.create()
+    try:
+        import os as _os
+
+        ta = reg.topic_index("A")
+        tb = reg.topic_index("B")
+        pa = reg.add_publisher(ta, _os.getpid(), "arena-a", depth=4)
+        pb = reg.add_publisher(tb, _os.getpid(), "arena-b", depth=4)
+        sb = reg.add_subscriber(tb, _os.getpid())
+        reg.publish(ta, pa, 7, 1)                    # seq 1 -> slot 1
+        q = ctx.Queue()
+        child = ctx.Process(target=H.crash_mid_mutation,
+                            args=(reg.name, "A", q), kwargs={"hold_s": 1.0})
+        child.start()
+        assert q.get(timeout=20) == "holding"
+        # (a) B's plane is live while A's lock is held by the dying writer
+        t0 = time.monotonic()
+        seq, _ = reg.publish(tb, pb, 11, 1)
+        got = reg.take(tb, sb)
+        reg.release(tb, pb, sb, seq)
+        b_elapsed = time.monotonic() - t0
+        assert [e.seq for e in got] == [seq]
+        assert b_elapsed < 0.5, f"B ops stalled {b_elapsed:.2f}s on A's lock"
+        child.join(timeout=20)
+        assert child.exitcode == -9                 # SIGKILLed mid-mutation
+        # B traffic does NOT recover A (journal slots are per topic)...
+        reg.publish(tb, pb, 12, 1)
+        assert int(reg._journal[ta]["state"]) == _J_PENDING
+        assert int(reg.entries[ta, pa, 1]["desc_off"]) == 31337
+        # ...the next acquirer of A does: torn write rolled back, WAL clean
+        sa = reg.add_subscriber(ta, _os.getpid())
+        assert int(reg._journal[ta]["state"]) == _J_CLEAN
+        assert int(reg.entries[ta, pa, 1]["desc_off"]) == 7
+        assert [e.seq for e in reg.take(ta, sa)] == []  # snapshot semantics
+    finally:
+        reg.close()
+        reg.unlink()

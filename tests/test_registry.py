@@ -1,12 +1,24 @@
 """Registry transactionality: the kernel-module-analogue guarantees."""
 
 import os
+import stat
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import AgnocastQueueFull, Registry
-from repro.core.registry import ST_FREE, ST_USED, _J_PENDING
+from repro.core.registry import (
+    _J_CLEAN,
+    _J_PENDING,
+    ST_FREE,
+    ST_USED,
+    domain_lock_path,
+    fifo_dir,
+    sub_fifo_path,
+    topic_lock_path,
+)
 
 
 @pytest.fixture()
@@ -139,3 +151,140 @@ def test_attach_rejects_non_registry():
     finally:
         r.close()
         r.unlink()
+
+
+# ---------------------------------------------------------------------------
+# sharded metadata plane: per-topic locks + per-topic journal slots
+# ---------------------------------------------------------------------------
+
+_DEAD_PID = 2**22 + 31337  # beyond pid_max defaults: certainly not alive
+
+
+def _forge_dead_writer(reg, tidx, pidx, slot):
+    """Leave topic ``tidx`` looking like a writer died mid-mutation: a
+    PENDING journal slot holding the before-image, plus the torn write."""
+    before = reg.entries[tidx, pidx, slot].copy()
+    j = reg._journal[tidx]
+    j["pid"] = _DEAD_PID
+    j["tidx"], j["pidx"], j["slot"] = tidx, pidx, slot
+    j["has_topic"], j["has_entry"] = 0, 1
+    j["entry_img"] = before.tobytes()
+    j["state"] = _J_PENDING
+    reg.entries[tidx, pidx, slot]["desc_off"] = 424242  # the torn write
+    return before
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("pub"), st.integers(1, 512)),
+            st.tuples(st.just("take"), st.integers(0, 4)),
+            st.tuples(st.just("release"), st.integers(0, 3)),
+        ),
+        max_size=25,
+    ),
+)
+def test_distinct_topic_ops_never_roll_back_other_journals(ops):
+    """Journal slots are per topic: any op sequence on topic B must leave a
+    dead writer's PENDING journal on topic A exactly as it found it (B's
+    acquirers are not A's recovery agents) — and the next op on A itself
+    must then roll A back."""
+    reg = Registry.create()
+    try:
+        ta = reg.topic_index("a")
+        tb = reg.topic_index("b")
+        pa = reg.add_publisher(ta, os.getpid(), "arena-a", depth=4)
+        pb = reg.add_publisher(tb, os.getpid(), "arena-b", depth=4)
+        sb = reg.add_subscriber(tb, os.getpid())
+        reg.publish(ta, pa, 7, 1)                       # seq 1 -> slot 1
+        before = _forge_dead_writer(reg, ta, pa, 1)
+        journal_img = reg._journal[ta].tobytes()
+
+        taken = []
+        for kind, arg in ops:
+            if kind == "pub":
+                try:
+                    reg.publish(tb, pb, arg, 1)
+                except AgnocastQueueFull:
+                    pass
+            elif kind == "take":
+                taken.extend(reg.take(tb, sb, limit=arg or None))
+            elif kind == "release" and taken:
+                e = taken.pop(arg % len(taken))
+                reg.release(tb, pb, sb, e.seq)
+
+        # topic A's pending journal and torn row are untouched by B traffic
+        assert reg._journal[ta].tobytes() == journal_img
+        assert int(reg.entries[ta, pa, 1]["desc_off"]) == 424242
+        # ...until the next acquirer of A itself runs recovery
+        reg.take(ta, reg.add_subscriber(ta, os.getpid()))
+        assert int(reg._journal[ta]["state"]) == _J_CLEAN
+        assert int(reg.entries[ta, pa, 1]["desc_off"]) == int(before["desc_off"])
+    finally:
+        reg.close()
+        reg.unlink()
+
+
+def test_topic_index_recovers_dead_creator(reg):
+    """A creator that died mid-create leaves a torn topic row + PENDING
+    journal; the next topic_index (domain lock) must roll it back before
+    trusting the name scan."""
+    t = reg.topic_index("x")
+    p = reg.add_publisher(t, os.getpid(), "a", depth=4)
+    reg.publish(t, p, 55, 1)
+    _forge_dead_writer(reg, t, p, 1)
+    assert reg.topic_index("y") != t     # scan ran; never matched torn state
+    assert int(reg._journal[t]["state"]) == _J_CLEAN   # rolled back
+    assert int(reg.entries[t, p, 1]["desc_off"]) == 55
+
+
+def test_lock_files_world_writable_despite_umask():
+    """O_CREAT's mode is masked by umask: the chmod-after-create must leave
+    both the domain and per-topic lock files attachable cross-user."""
+    old = os.umask(0o077)
+    try:
+        reg = Registry.create()
+        try:
+            t = reg.topic_index("x")
+            reg.add_publisher(t, os.getpid(), "a", depth=4)  # opens t-lock
+            for path in (domain_lock_path(reg.name),
+                         topic_lock_path(reg.name, t)):
+                mode = stat.S_IMODE(os.stat(path).st_mode)
+                assert mode == 0o666, f"{path}: {oct(mode)}"
+        finally:
+            reg.close()
+            reg.unlink()
+    finally:
+        os.umask(old)
+
+
+def test_unlink_removes_locks_and_fifo_dir(tmp_path):
+    """Registry.unlink must leave nothing in /tmp: domain lock, per-topic
+    locks, and the FIFO directory all go."""
+    import glob
+
+    reg = Registry.create()
+    name = reg.name
+    t = reg.topic_index("x")
+    reg.add_publisher(t, os.getpid(), "a", depth=4)   # touches a topic lock
+    os.makedirs(fifo_dir(name), exist_ok=True)
+    fifo = sub_fifo_path(name, t, 0)
+    os.mkfifo(fifo)
+    reg.close()
+    reg.unlink()
+    leftovers = glob.glob(f"/tmp/.agnocast-{name}*")
+    assert leftovers == [], leftovers
+
+
+def test_sweep_unlinks_dead_subscriber_fifo(reg):
+    """The janitor drops a dead subscriber's wakeup FIFO file along with
+    its refs (no /tmp leak across runs)."""
+    t = reg.topic_index("x")
+    reg.add_publisher(t, os.getpid(), "a", depth=4)
+    s = reg.add_subscriber(t, _DEAD_PID)   # creates the slot's FIFO file
+    path = sub_fifo_path(reg.name, t, s)
+    assert os.path.exists(path)
+    rep = reg.sweep()
+    assert rep["dead_subs"] == 1
+    assert not os.path.exists(path)

@@ -532,3 +532,64 @@ def test_bridge_oom_final_drop_releases_dedup_key():
     finally:
         dom.close()
         bus.stop()
+
+
+def test_bridge_parking_is_per_endpoint_no_head_of_line_blocking():
+    """A full ring on ONE topic must not stall the bridge's other topics:
+    parking is per endpoint (one parked loan + a bounded backlog per
+    topic), so topic-B frames keep landing while topic A is parked — and
+    A's frames still arrive, in order, once its refs are released."""
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=8 << 20)
+    try:
+        br = DomainBridge(dom, bus.path, name="hol", depth=2)
+        br.attach(POINT_CLOUD2, "hol/a")
+        br.attach(POINT_CLOUD2, "hol/b", depth=8)  # B must hold all 4 frames
+        cli = BusClient(bus.path)
+        time.sleep(0.2)
+        sub_a = dom.create_subscription(POINT_CLOUD2, "hol/a")
+        sub_b = dom.create_subscription(POINT_CLOUD2, "hol/b")
+
+        def send(topic, i):
+            m = POINT_CLOUD2.plain()
+            m.data = np.full(16, i, np.uint8)
+            cli.publish(topic, serialize(m))
+
+        def pump(cond, timeout=10.0):
+            deadline = time.monotonic() + timeout
+            while not cond() and time.monotonic() < deadline:
+                br.pump_bus(0.05)
+
+        # fill A's depth-2 ring and hold refs on both slots
+        send("hol/a", 0), send("hol/a", 1)
+        pump(lambda: br.relayed_in >= 2)
+        held = sub_a.take()
+        assert len(held) == 2
+        # overflow A: the third copy-in parks ONLY endpoint A...
+        send("hol/a", 2), send("hol/a", 3)
+        pump(lambda: br.stats()["parked"] >= 1)
+        assert br.stats()["parked"] == 1
+        assert br.relayed_in == 2
+        # ...and B keeps flowing while A is parked (the regression)
+        for i in range(4):
+            send("hol/b", 10 + i)
+        pump(lambda: br.relayed_in >= 6)
+        ptrs_b = sub_b.take()
+        got_b = [int(np.asarray(p.data)[0]) for p in ptrs_b]
+        for p in ptrs_b:
+            p.release()
+        assert got_b == [10, 11, 12, 13]
+        assert br.stats()["parked"] == 1          # A still parked throughout
+        # release A's hostages: parked loan + backlog drain in order
+        for ptr in held:
+            ptr.release()
+        pump(lambda: br.relayed_in >= 8)
+        got_a = [int(np.asarray(p.data)[0]) for p in sub_a.take()]
+        assert got_a == [2, 3]                    # FIFO order preserved
+        assert br.stats()["parked"] == 0
+        assert br.stats()["dropped_backlog"] == 0
+        cli.close()
+        br.close()
+    finally:
+        dom.close()
+        bus.stop()
