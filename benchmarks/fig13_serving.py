@@ -75,7 +75,7 @@ def run_once(k: int, *, n_requests: int, prompt_len: int, model: str,
         # snapshot: a closed-loop arrival process steers new rids away from
         # deep shards, so fleet utilization is not at the mercy of
         # small-sample hash imbalance
-        collector = ResultsCollector(dom)
+        collector = ResultsCollector(dom, shards=range(k))
         router = ShardRouter(dom, range(k), max_new=MAX_NEW,
                              load_aware=True,
                              stats_fn=collector.shard_depths)

@@ -19,13 +19,13 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale smoke (CI gate): fig11/fig14/fig15/"
-                         "serving only unless --only says otherwise")
+                         "hotpath/serving only unless --only says otherwise")
     ap.add_argument("--only", default="",
                     help="comma list: fig9,fig10,fig11,fig12,fig13,fig14,"
-                         "fig15,serving,roofline")
+                         "fig15,hotpath,serving,roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "fig11,fig14,fig15,serving"
+        args.only = "fig11,fig14,fig15,hotpath,serving"
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
     n10 = 600 if args.full else (60 if args.quick else 200)
@@ -89,6 +89,14 @@ def main(argv=None) -> int:
             for c in res["checks"]:
                 if not c["ok"]:
                     print(f"# FAIL fig15/{c['name']}: {c['detail']}")
+            failures += 1
+    if want("hotpath"):
+        from benchmarks import hotpath
+        res = hotpath.main(smoke=args.smoke or args.quick)
+        if not res["ok"]:
+            for c in res["checks"]:
+                if not c["ok"]:
+                    print(f"# FAIL hotpath/{c['name']}: {c['detail']}")
             failures += 1
     if want("serving"):
         from benchmarks import fig13_serving

@@ -52,7 +52,8 @@ def main() -> None:
             done[rid] = tokens
             router.complete(rid)
 
-        collector = ResultsCollector(dom, on_complete=on_complete,
+        collector = ResultsCollector(dom, shards=pool.shards,
+                                     on_complete=on_complete,
                                      on_progress=router.touch)
         ex = EventExecutor(name="head")
         collector.attach_executor(ex)

@@ -190,7 +190,11 @@ class _PublisherHandle(_Handle):
         self.callback = callback
         self.fds = [pub.fileno()]
         # the handle waits on the publisher's behalf for its whole life:
-        # releasers only write the slot-freed FIFO while this flag is up
+        # releasers only write the slot-freed FIFO while this flag is up.
+        # (Registry v4 note: an armed flag also routes this topic's
+        # releases onto the locked slow path — that is the protocol, not a
+        # bug: the wakeup FIFO write must be ordered with the held→0
+        # transition, which only the lock provides.)
         pub.set_waiting(True)
 
     def _detach(self) -> None:
@@ -387,9 +391,12 @@ class EventExecutor:
         h = self._adopt(_PublisherHandle(self, group or self.default_group,
                                          pub, callback))
         # late-registration guard: a slot freed between the caller's failed
-        # publish and the waiter flag going up produced no FIFO byte (the
-        # flag-gated _notify_owner skipped it) — synthesize the first wakeup
-        # if the ring is already publishable
+        # publish and the waiter flag going up produced no FIFO byte — under
+        # registry v4 not even a locked release would have (an unarmed-flag
+        # release is a lock-free byte store with no notify at all), so this
+        # re-check is load-bearing: can_publish counts unfolded release
+        # intent bytes, which is exactly what makes it see those silent
+        # frees.  Synthesize the first wakeup if the ring is publishable
         try:
             free = pub.dom.registry.can_publish(pub.tidx, pub.pidx)
         except Exception:

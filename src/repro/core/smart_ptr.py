@@ -23,22 +23,26 @@ __all__ = ["MessagePtr"]
 
 
 class _RefState:
-    __slots__ = ("count", "released", "registry", "tidx", "sidx", "entry")
+    __slots__ = ("count", "released", "registry", "tidx", "sidx", "entry", "gen")
 
-    def __init__(self, registry: Registry, tidx: int, sidx: int, entry: Entry):
+    def __init__(self, registry: Registry, tidx: int, sidx: int, entry: Entry,
+                 gen: int | None = None):
         self.count = 1
         self.released = False
         self.registry = registry
         self.tidx = tidx
         self.sidx = sidx
         self.entry = entry
+        self.gen = gen  # topic generation at take: stale handles must not
+                        # release into a recycled topic slot (name-ABA guard)
 
     def decref(self) -> None:
         self.count -= 1
         if self.count <= 0 and not self.released:
             self.released = True
             try:
-                self.registry.release(self.tidx, self.entry.pub_idx, self.sidx, self.entry.seq)
+                self.registry.release(self.tidx, self.entry.pub_idx, self.sidx,
+                                      self.entry.seq, gen=self.gen)
             except Exception:
                 pass  # registry torn down; janitor covers us
 
@@ -60,8 +64,8 @@ class MessagePtr:
 
     @classmethod
     def first(cls, msg: ReceivedMessage, registry: Registry, tidx: int, sidx: int,
-              entry: Entry) -> "MessagePtr":
-        return cls(msg, _RefState(registry, tidx, sidx, entry))
+              entry: Entry, gen: int | None = None) -> "MessagePtr":
+        return cls(msg, _RefState(registry, tidx, sidx, entry, gen))
 
     # -- access ----------------------------------------------------------------
 

@@ -145,6 +145,7 @@ class Publisher:
         self.mtype = mtype
         self.topic = topic
         self.tidx = dom.registry.topic_index(topic)
+        self.tgen = dom.registry.topic_gen(self.tidx)  # name-ABA guard
         self.pidx = dom.registry.add_publisher(self.tidx, os.getpid(), dom.arena.name, depth)
         self._inflight: dict[int, tuple[int, int, list[int]]] = {}  # seq -> (desc_off, desc_len, payload offs)
         self._fifo_fds: dict[int, int] = {}
@@ -185,7 +186,7 @@ class Publisher:
             seq, freeable = self.dom.registry.publish(
                 self.tidx, self.pidx, off, len(desc), origin=origin,
                 exclude_sub=exclude_sub, hops=hops, src_tag=src_tag,
-                route_seq=route_seq
+                route_seq=route_seq, gen=self.tgen
             )
         except Exception:
             self.dom.arena.free(off)  # queue full: loan stays valid for retry
@@ -305,20 +306,32 @@ class Publisher:
     # -- O(1) wake-ups -------------------------------------------------------------
 
     def _notify(self) -> None:
-        t = self.dom.registry.topics[self.tidx]
+        reg = self.dom.registry
+        # generation gate (name-ABA guard): if the topic row was destroyed
+        # and recycled under our feet, its FIFO files belong to the new
+        # tenant — a stale publisher must not wake somebody else's subs
+        if reg.topic_gen(self.tidx) != self.tgen:
+            return
+        t = reg.topics[self.tidx]
         alive = int(t["sub_alive"])
         s = 0
         while alive >> s:
             if (alive >> s) & 1:
+                # a live subscriber with no openable FIFO is usually one
+                # mid-open of its read end (the slot claim mkfifos the file
+                # under the topic lock, the open comes after): retry while
+                # the slot stays claimed instead of silently dropping the
+                # wakeup — the same lost-wakeup guard as the EPIPE path
+                sub_live = (lambda s=s:
+                            (int(t["sub_alive"]) >> s) & 1
+                            and reg.topic_gen(self.tidx) == self.tgen)
                 fd = self._fifo_fds.get(s)
                 if fd is None:
-                    try:
-                        fd = os.open(_fifo_path(self.dom.name, self.tidx, s),
-                                     os.O_WRONLY | os.O_NONBLOCK)
+                    fd = _open_and_wake(_fifo_path(self.dom.name, self.tidx, s),
+                                        still_wanted=sub_live)
+                    if fd is not None:
                         self._fifo_fds[s] = fd
-                    except OSError:
-                        fd = None
-                if fd is not None:
+                else:
                     try:
                         os.write(fd, b"\x01")
                     except OSError as e:
@@ -327,9 +340,11 @@ class Publisher:
                             self._fifo_fds.pop(s, None)
                             # recycled slot (sweep unlinked the dead sub's
                             # FIFO, a successor mkfifo'd a fresh inode):
-                            # retry once so the wakeup is not lost
+                            # retry against the fresh inode so the wakeup
+                            # is not lost
                             fd = _open_and_wake(
-                                _fifo_path(self.dom.name, self.tidx, s))
+                                _fifo_path(self.dom.name, self.tidx, s),
+                                still_wanted=sub_live)
                             if fd is not None:
                                 self._fifo_fds[s] = fd
             s += 1
@@ -360,6 +375,7 @@ class Subscription:
         self.topic = topic
         self.callback = callback
         self.tidx = dom.registry.topic_index(topic)
+        self.tgen = dom.registry.topic_gen(self.tidx)  # name-ABA guard
         self.sidx = dom.registry.add_subscriber(self.tidx, os.getpid())
         path = _fifo_path(dom.name, self.tidx, self.sidx)
         try:
@@ -374,7 +390,8 @@ class Subscription:
 
     def take(self, limit: int | None = None) -> list[MessagePtr]:
         out: list[MessagePtr] = []
-        entries = self.dom.registry.take(self.tidx, self.sidx, limit)
+        entries = self.dom.registry.take(self.tidx, self.sidx, limit,
+                                         gen=self.tgen)
         if not entries:
             return out
         pubs = dict(self.dom.registry.publishers(self.tidx))
@@ -386,7 +403,8 @@ class Subscription:
             raw = arena.read_bytes(e.desc_off, e.desc_len)
             desc = pickle.loads(raw)
             msg = ReceivedMessage(arena, desc)
-            out.append(MessagePtr.first(msg, self.dom.registry, self.tidx, self.sidx, e))
+            out.append(MessagePtr.first(msg, self.dom.registry, self.tidx,
+                                        self.sidx, e, gen=self.tgen))
         return out
 
     # -- event-loop surface (consumed by repro.core.executor) -----------------------
@@ -450,6 +468,7 @@ class Subscription:
         except OSError:
             pass
         try:
-            self.dom.registry.remove_subscriber(self.tidx, self.sidx)
+            self.dom.registry.remove_subscriber(self.tidx, self.sidx,
+                                                gen=self.tgen)
         except Exception:
             pass

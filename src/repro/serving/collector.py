@@ -1,10 +1,13 @@
-"""Results reassembly: one subscription, per-rid ordered token streams.
+"""Results reassembly: merge shard subscriptions into per-rid streams.
 
-Every replica publishes its decode rounds' token chunks on a single
-``SERVE_RES`` topic (zero-copy; the collector reads chunk rows straight
-out of each replica's arena).  The collector turns that interleaved,
-possibly out-of-order, possibly replayed firehose back into per-rid
-in-order token streams:
+Each replica publishes its decode rounds' token chunks on its *own*
+per-shard ``SERVE_RES`` topic (``serve/res/<k>``) so K replicas never
+contend on one topic's metadata row — the collector subscribes to all of
+them (zero-copy; it reads chunk rows straight out of each replica's
+arena) and is the single point where the shards converge.  A legacy
+single-shared-topic mode (``shards=None``) remains for direct ingest.
+The collector turns the interleaved, possibly out-of-order, possibly
+replayed firehose back into per-rid in-order token streams:
 
 * **seq window** — chunks carry a per-(rid, generation) sequence number;
   in-order chunks append directly, early ones wait in a bounded window
@@ -29,6 +32,7 @@ collector yields finished ``(rid, tokens)`` pairs exactly once.
 
 from __future__ import annotations
 
+import select
 import time
 from collections import OrderedDict, deque
 
@@ -57,10 +61,21 @@ class _Stream:
 
 class ResultsCollector:
     def __init__(self, dom: Domain, topic: str = "serve/res", *,
-                 on_complete=None, on_progress=None, window_limit: int = 256):
+                 shards=None, on_complete=None, on_progress=None,
+                 window_limit: int = 256):
         self.dom = dom
         self.topic = topic
-        self.sub = dom.create_subscription(SERVE_RES, topic)
+        # ``shards``: merge per-shard results topics (``<topic>/<k>``) —
+        # K replicas each publish on their own topic so results stop
+        # contending on one topic's metadata row; the collector is the
+        # only place the shards converge.  ``None`` keeps the single
+        # shared-topic layout (direct-ingest tests, external replicas).
+        if shards is None:
+            self.subs = [dom.create_subscription(SERVE_RES, topic)]
+        else:
+            self.subs = [dom.create_subscription(SERVE_RES, f"{topic}/{int(k)}")
+                         for k in shards]
+        self.sub = self.subs[0]  # back-compat alias (single-topic callers)
         self.on_complete = on_complete      # callable(rid, tokens)
         self.on_progress = on_progress      # callable(rid)
         self.window_limit = window_limit
@@ -80,15 +95,23 @@ class ResultsCollector:
     # -- ingestion ------------------------------------------------------------
 
     def attach_executor(self, executor, *, group=None):
-        """Multiplex the results subscription into an EventExecutor loop."""
-        return executor.add_subscription(self.sub, self._on_msg, group=group)
+        """Multiplex every results subscription into an EventExecutor loop
+        (one handle per shard topic; returns them all)."""
+        return [executor.add_subscription(sub, self._on_msg, group=group)
+                for sub in self.subs]
 
     def pump(self, timeout: float = 0.05) -> int:
-        """Standalone take loop (tests / executor-less heads)."""
+        """Standalone take loop (tests / executor-less heads): drain every
+        shard subscription, blocking across all their wakeup FIFOs at once
+        when nothing is pending."""
         n = 0
-        ptrs = self.sub.take_all()
-        if not ptrs and self.sub.wait(timeout):
-            ptrs = self.sub.take_all()
+        ptrs = []
+        for sub in self.subs:
+            ptrs.extend(sub.take_all())
+        if not ptrs:
+            r, _, _ = select.select(self.subs, [], [], timeout)
+            for sub in r:
+                ptrs.extend(sub.take_all())
         for ptr in ptrs:
             try:
                 self._on_msg(ptr)  # copies every row's tokens out
@@ -218,4 +241,5 @@ class ResultsCollector:
         }
 
     def close(self) -> None:
-        self.sub.close()
+        for sub in self.subs:
+            sub.close()

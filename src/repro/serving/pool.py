@@ -38,10 +38,14 @@ class ReplicaPool:
                  model_kwargs: dict | None = None, slots: int = 4,
                  max_seq: int = 256, depth: int = 16, arena_mb: int = 32,
                  round_period_s: float = 0.002, lease_period_s: float = 0.25,
-                 lease_timeout_s: float = 10.0, flush_every: int = 1):
+                 lease_timeout_s: float = 10.0, flush_every: int = 1,
+                 sharded_results: bool = True):
         self.dom = dom
         self.req_prefix = req_prefix
         self.res_topic = res_topic
+        # per-shard results topics (<res_topic>/<k>): replicas stop
+        # contending on one topic row; pair with ResultsCollector(shards=…)
+        self.sharded_results = sharded_results
         self.model = model
         self.model_kwargs = model_kwargs
         self.slots = slots
@@ -64,12 +68,16 @@ class ReplicaPool:
 
     # -- lifecycle ------------------------------------------------------------
 
+    def res_topic_for(self, shard: int) -> str:
+        return (f"{self.res_topic}/{shard}" if self.sharded_results
+                else self.res_topic)
+
     def _spawn(self, shard: int) -> None:
         ready = self._ctx.Event()
         proc = self._ctx.Process(
             target=replica_main,
             args=(self.dom.name, shard, f"{self.req_prefix}/{shard}",
-                  self.res_topic),
+                  self.res_topic_for(shard)),
             kwargs=dict(model=self.model, model_kwargs=self.model_kwargs,
                         slots=self.slots, max_seq=self.max_seq,
                         depth=self.depth, arena_mb=self.arena_mb,

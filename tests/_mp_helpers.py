@@ -152,3 +152,26 @@ def crash_mid_mutation(reg_name, topic, q, hold_s=1.0):
     q.put("holding")
     time.sleep(hold_s)          # parent drives topic B traffic meanwhile
     os.kill(os.getpid(), signal.SIGKILL)
+
+
+def hammer_publish(reg_name, topic, q):
+    """Hammer one topic's full hot path (publish/take/release) until
+    killed: the parent SIGKILLs this process at a random point, likely
+    mid-critical-section, and then proves the seqlock plane converges."""
+    from repro.core.registry import Registry
+
+    reg = Registry.attach(reg_name)
+    t = reg.topic_index(topic)
+    p = reg.add_publisher(t, os.getpid(), "hammer-arena", depth=8)
+    s = reg.add_subscriber(t, os.getpid())
+    q.put("running")
+    i = 0
+    while True:
+        i += 1
+        try:
+            seq, _ = reg.publish(t, p, i, 1)
+        except Exception:
+            continue
+        for e in reg.take(t, s):
+            reg.release(t, p, s, e.seq)
+        reg.reclaimable(t, p)

@@ -189,3 +189,45 @@ def test_dead_writer_recovered_per_topic_while_others_flow(ctx):
     finally:
         reg.close()
         reg.unlink()
+
+
+def test_sigkill_mid_publish_converges_lock_free_reads(ctx):
+    """SIGKILL a child mid-hammer on the v4 hot path (likely inside a
+    critical section: wseq odd, journal PENDING, release bytes pending).
+    Lock-free readers must fall back and the next lock holder must repair
+    parity + roll the journal back; then traffic flows normally."""
+    import os as _os
+    import signal as _signal
+
+    from repro.core.registry import _J_CLEAN, Registry
+
+    reg = Registry.create()
+    try:
+        q = ctx.Queue()
+        child = ctx.Process(target=H.hammer_publish,
+                            args=(reg.name, "hot", q))
+        child.start()
+        assert q.get(timeout=20) == "running"
+        time.sleep(0.3)                       # mid-flight, arbitrary point
+        _os.kill(child.pid, _signal.SIGKILL)
+        child.join(timeout=10)
+
+        t = reg.topic_index("hot")
+        # lock-free read first: may hit odd parity -> bounded retries ->
+        # locked fallback whose recovery repairs the row
+        assert isinstance(reg.can_publish(t, 0), bool)
+        reg.reclaimable(t, 0)                 # locked op: rollback runs
+        assert int(reg._journal[t]["state"]) == _J_CLEAN
+        assert int(reg.topics[t]["wseq"]) % 2 == 0
+        reg.sweep()                           # reap the dead participant
+
+        s = reg.add_subscriber(t, _os.getpid())
+        p = reg.add_publisher(t, _os.getpid(), "after-arena", depth=4)
+        seq, _ = reg.publish(t, p, 5, 1)
+        got = reg.take(t, s)
+        assert [e.seq for e in got] == [seq]
+        reg.release(t, p, s, seq)
+        assert reg.reclaimable(t, p) == [seq]
+    finally:
+        reg.close()
+        reg.unlink()

@@ -325,7 +325,10 @@ def test_killed_replica_rids_replayed_exactly_once():
             completions[rid] = completions.get(rid, 0) + 1
             router.complete(rid)
 
-        collector = ResultsCollector(dom, on_complete=on_complete,
+        # pool shards its results topics (serve/res/<k>): the collector
+        # merges one subscription per shard
+        collector = ResultsCollector(dom, shards=range(K),
+                                     on_complete=on_complete,
                                      on_progress=router.touch)
         ex = EventExecutor(name="head")
         collector.attach_executor(ex)
