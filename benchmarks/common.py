@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import time
 from dataclasses import dataclass
 
@@ -47,9 +48,24 @@ class Stats:
 HEADER = "name,n,mean_us,p50_us,p99_us,max_us,cv"
 
 
-def save_json(bench: str, payload) -> str:
+def env_metadata(payload_sweep=None) -> dict:
+    """Environment fingerprint recorded with every benchmark JSON so CI
+    artifacts from different runners stay comparable (satellite: results
+    without the machine that produced them are not evidence)."""
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "payload_sweep": list(payload_sweep) if payload_sweep else None,
+    }
+
+
+def save_json(bench: str, payload, *, payload_sweep=None) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    if isinstance(payload, dict) and "_env" not in payload:
+        payload = {**payload, "_env": env_metadata(payload_sweep)}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path

@@ -1,0 +1,201 @@
+"""Fig. 16 (extension): cross-host data plane under bridge churn.
+
+Two *separate* registry domains — distinct shm registries and arenas, the
+in-container stand-in for two hosts — federate one topic over a single
+conventional bus.  The bridges run the attach data plane (control frame +
+pin/ack protocol, routing.py), and the run kills bridges mid-stream:
+
+* **receiver-bridge kill** (x2): the CTRL frame is fanned out, then the
+  receiving DomainBridge dies before reading it.  The sender's ack
+  timeout must degrade the message to a serialized re-send that the
+  *replacement* bridge (re-added to the same Router) admits — zero loss.
+* **sender-bridge kill** (x1): the receiver delivers and acks, but the
+  sending bridge is closed before it processes the ack.  ``close()``
+  flushes the unresolved attach send by value; the receiver's router-
+  shared dedup window must drop the re-send — exactly once.
+
+Gates (hard, also in ``--smoke``): every published message delivered
+exactly once — ``lost == 0`` and ``duplicates == 0`` — with all three
+kills exercised and every recovery observed in the bridge counters.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import HEADER, Stats, save_json
+from repro.core import POINT_CLOUD2, Bus, Domain, Router
+
+N_MSGS = 40
+SMOKE_N = 14
+PAYLOAD = 64 << 10
+PIN_LEASE_S = 0.6  # ack-timeout recovery lands at ~0.95 * lease
+TOPIC = "xhost/pc2"
+LINK = "link"
+
+
+def _mk_router(dom: Domain, bus: Bus, depth: int = 8) -> Router:
+    r = Router(dom, data_plane="attach", attach_mode="copy",
+               pin_lease_s=PIN_LEASE_S)
+    r.add_remote(LINK, bus.path, depth=depth)
+    r.add_route("xhost/", LINK)
+    r.activate(POINT_CLOUD2, TOPIC)
+    return r
+
+
+def _respawn(router: Router, bus: Bus, counters: dict) -> None:
+    """Kill the router's bridge (harvesting its recovery counters) and
+    re-add a replacement under the same name: it shares the router's dedup
+    window, which is what exactly-once across the kill hangs on."""
+    old = router.bridges.pop(LINK)
+    counters["fallbacks"] += old.attach_fallbacks
+    counters["ack_timeouts"] += old.ack_timeouts
+    counters["unresolved_at_close"] += sum(
+        1 for aw in old._awaiting.values()
+        if aw.need is None or aw.acks < aw.need)
+    old.close()  # sender side: flushes unresolved attach sends by value
+    br = router.add_remote(LINK, bus.path, depth=8)
+    br.attach(POINT_CLOUD2, TOPIC)
+    time.sleep(0.05)  # the replacement's SUB frame lands on the bus
+
+
+def bench_churn(n_msgs: int) -> dict:
+    bus = Bus().start()
+    domA = Domain.create(arena_capacity=64 << 20)
+    domB = Domain.create(arena_capacity=64 << 20)
+    rA = _mk_router(domA, bus)
+    rB = _mk_router(domB, bus)
+    pub = domA.create_publisher(POINT_CLOUD2, TOPIC, depth=8)
+    sub = domB.create_subscription(POINT_CLOUD2, TOPIC)
+    time.sleep(0.2)  # SUB frames land
+
+    payload = (np.arange(PAYLOAD, dtype=np.uint8) % 251)
+    got: list[int] = []
+    lat: list[float] = []
+    counters = {"fallbacks": 0, "ack_timeouts": 0, "unresolved_at_close": 0}
+    # kill schedule: receiver bridge at 1/4 and 3/4, sender bridge at 1/2
+    kill_recv = {n_msgs // 4, (3 * n_msgs) // 4}
+    kill_send = {n_msgs // 2}
+    kills = {"recv": 0, "send": 0}
+
+    def take() -> None:
+        for ptr in sub.take():
+            got.append(int(np.asarray(ptr.data)[0]))
+            lat.append(time.monotonic() - float(ptr.msg.get("stamp")))
+            ptr.release()
+
+    try:
+        for i in range(n_msgs):
+            m = pub.borrow_loaded_message()
+            pl = payload.copy()
+            pl[0] = (i + 1) % 251  # value byte identifies the message
+            m.data.extend(pl)
+            m.set("stamp", time.monotonic())
+            pub.reclaim()
+            pub.publish_blocking(m, timeout=10.0)
+
+            if i in kill_recv:
+                # flush the CTRL to the bus and wait for its fan-out receipt
+                # so the frame is already in the doomed bridge's socket
+                brA = rA.bridges[LINK]
+                deadline = time.monotonic() + 5.0
+                while time.monotonic() < deadline:
+                    rA.spin_once(0.01)
+                    aws = list(brA._awaiting.values())
+                    if aws and all(aw.need is not None for aw in aws):
+                        break
+                _respawn(rB, bus, counters)  # receiver dies unread
+                kills["recv"] += 1
+            elif i in kill_send:
+                # let the receiver deliver + ack, but kill the sender before
+                # it processes the ack: close() re-sends by value and the
+                # receiver's dedup window must swallow the duplicate
+                rA.spin_once(0.01)  # CTRL out (A does not read the ack)
+                deadline = time.monotonic() + 5.0
+                while len(got) <= i and time.monotonic() < deadline:
+                    rB.spin_once(0.02)
+                    take()
+                _respawn(rA, bus, counters)
+                kills["send"] += 1
+
+            deadline = time.monotonic() + 10.0
+            while len(got) <= i and time.monotonic() < deadline:
+                rA.spin_once(0.02)
+                rB.spin_once(0.02)
+                take()
+            if len(got) <= i:
+                break  # lost: reported below, no point pacing further
+
+        # settle: drain any straggler re-sends so duplicates would show
+        for _ in range(25):
+            rA.spin_once(0.02)
+            rB.spin_once(0.02)
+            take()
+        brA = rA.bridges[LINK]
+        counters["fallbacks"] += brA.attach_fallbacks
+        counters["ack_timeouts"] += brA.ack_timeouts
+    finally:
+        rA.close()
+        rB.close()
+        domA.close()
+        domB.close()
+        bus.stop()
+
+    want = [(i + 1) % 251 for i in range(n_msgs)]
+    lost = [v for v in want if v not in got]
+    dups = len(got) - len(set(got))
+    st = Stats.of("fig16/e2e", lat) if lat else None
+    if st:
+        print(st.row(), flush=True)
+    checks = [
+        {"name": "zero_loss", "ok": not lost,
+         "detail": f"{len(lost)} of {n_msgs} lost: {lost[:8]}"},
+        {"name": "exactly_once", "ok": dups == 0,
+         "detail": f"{dups} duplicate deliveries"},
+        {"name": "kills_exercised",
+         "ok": kills["recv"] == 2 and kills["send"] == 1,
+         "detail": f"kills={kills}"},
+        {"name": "recoveries_observed",
+         # every kill strands exactly one in-flight message; each must be
+         # re-sent (receiver kill: ack timeout; sender kill: close flush)
+         "ok": (counters["fallbacks"] >= kills["recv"]
+                and counters["unresolved_at_close"] >= kills["send"]),
+         "detail": f"counters={counters}"},
+    ]
+    return {
+        "n_msgs": n_msgs,
+        "payload_bytes": PAYLOAD,
+        "pin_lease_s": PIN_LEASE_S,
+        "delivered": len(got),
+        "kills": kills,
+        "counters": counters,
+        "latency": st.__dict__ if st else None,
+        "checks": checks,
+        "ok": all(c["ok"] for c in checks),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    n = SMOKE_N if smoke else N_MSGS
+    print(f"# fig16: cross-host churn ({n} msgs, attach plane, "
+          f"3 bridge kills{', smoke' if smoke else ''})")
+    print(HEADER)
+    res = bench_churn(n)
+    for c in res["checks"]:
+        print(f"# {'ok  ' if c['ok'] else 'FAIL'} fig16/{c['name']}: "
+              f"{c['detail']}")
+    save_json("fig16_crosshost", res, payload_sweep=[PAYLOAD])
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run (CI); same kills, fewer messages")
+    args = ap.parse_args()
+    if not main(smoke=args.smoke)["ok"]:
+        raise SystemExit("fig16: cross-host churn gates failed")

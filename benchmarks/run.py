@@ -19,13 +19,14 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale smoke (CI gate): fig11/fig14/fig15/"
-                         "hotpath/serving only unless --only says otherwise")
+                         "fig16/hotpath/serving only unless --only says "
+                         "otherwise")
     ap.add_argument("--only", default="",
                     help="comma list: fig9,fig10,fig11,fig12,fig13,fig14,"
-                         "fig15,hotpath,serving,roofline")
+                         "fig15,fig16,hotpath,serving,roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "fig11,fig14,fig15,hotpath,serving"
+        args.only = "fig11,fig14,fig15,fig16,hotpath,serving"
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
     n10 = 600 if args.full else (60 if args.quick else 200)
@@ -70,17 +71,27 @@ def main(argv=None) -> int:
         else:
             n14 = 60 if args.full else (10 if args.quick else fig14_routing.N_MSGS)
             res = fig14_routing.main(n_msgs=n14)
-        if res["agno_hop_spread"] >= 2.0:
+        gates14 = [
+            (res["agno_hop_spread"] >= 2.0,
+             f"agnocast hop not flat ({res['agno_hop_spread']:.2f}x)"),
+            (res["planes"]["attach_spread"] > 2.0,
+             f"attach relay not flat "
+             f"({res['planes']['attach_spread']:.2f}x 16MB/4KB)"),
+            (res["planes"]["parts_speedup_16MB"] < 1.5,
+             f"scatter-gather plane too slow "
+             f"({res['planes']['parts_speedup_16MB']:.2f}x < 1.5x @16MB)"),
+        ]
+        for bad, msg in gates14:
+            if not bad:
+                continue
             if args.smoke:
                 # shared CI runners can eat multi-ms preemption stalls that
                 # WARM_S cannot bound; report loudly (the JSON artifact has
                 # the numbers) but don't fail the job on scheduler noise
-                print(f"# WARN fig14: agnocast hop spread "
-                      f"{res['agno_hop_spread']:.2f}x >= 2x (smoke run; "
-                      f"likely runner noise — see bench-smoke artifact)")
+                print(f"# WARN fig14: {msg} (smoke run; likely runner "
+                      f"noise — see bench-smoke artifact)")
             else:
-                print(f"# FAIL fig14: agnocast hop not flat "
-                      f"({res['agno_hop_spread']:.2f}x)")
+                print(f"# FAIL fig14: {msg}")
                 failures += 1
     if want("fig15"):
         from benchmarks import fig15_metadata
@@ -89,6 +100,17 @@ def main(argv=None) -> int:
             for c in res["checks"]:
                 if not c["ok"]:
                     print(f"# FAIL fig15/{c['name']}: {c['detail']}")
+            failures += 1
+    if want("fig16"):
+        from benchmarks import fig16_crosshost
+        # correctness-under-churn: zero loss + exactly-once are hard gates
+        # even in smoke (unlike latency spreads, they don't depend on the
+        # runner being quiet)
+        res = fig16_crosshost.main(smoke=args.smoke or args.quick)
+        if not res["ok"]:
+            for c in res["checks"]:
+                if not c["ok"]:
+                    print(f"# FAIL fig16/{c['name']}: {c['detail']}")
             failures += 1
     if want("hotpath"):
         from benchmarks import hotpath

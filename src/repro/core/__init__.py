@@ -27,7 +27,8 @@ True zero-copy publish/subscribe IPC for *unsized* message types:
   device (HBM) KV pages for prefill→decode hand-off (TPU-native extension).
 """
 
-from .arena import AllocRef, Arena, ArenaError, OutOfArenaMemory
+from .arena import (AllocRef, Arena, ArenaAttachCache, ArenaError,
+                    OutOfArenaMemory)
 from .executor import (
     CallbackGroup,
     EventExecutor,
@@ -48,6 +49,7 @@ from .messages import (
     deserialize,
     message_nbytes,
     serialize,
+    serialize_parts,
 )
 from .registry import (
     DEPTH_MAX,
@@ -72,11 +74,12 @@ from .topic import Domain, Publisher, Subscription
 from .transport import Bus, BusClient, Frame, ShmRing
 
 __all__ = [
-    "AllocRef", "Arena", "ArenaError", "OutOfArenaMemory",
+    "AllocRef", "Arena", "ArenaAttachCache", "ArenaError",
+    "OutOfArenaMemory",
     "ArenaVector", "Fixed", "Ragged", "MessageType",
     "LoanedMessage", "ReceivedMessage", "PlainMessage",
     "POINT_CLOUD2", "TOKEN_BATCH", "BYTES_BLOB",
-    "serialize", "deserialize", "message_nbytes",
+    "serialize", "serialize_parts", "deserialize", "message_nbytes",
     "Registry", "RegistryError", "AgnocastQueueFull", "Entry",
     "MAX_TOPICS", "MAX_PUBS", "MAX_SUBS", "DEPTH_MAX",
     "MessagePtr", "Domain", "Publisher", "Subscription",

@@ -28,12 +28,14 @@ from __future__ import annotations
 
 import secrets
 from bisect import insort
+from collections import OrderedDict
 from dataclasses import dataclass
 from multiprocessing import shared_memory
 
 import numpy as np
 
-__all__ = ["Arena", "AllocRef", "ArenaError", "OutOfArenaMemory"]
+__all__ = ["Arena", "ArenaAttachCache", "AllocRef", "ArenaError",
+           "OutOfArenaMemory"]
 
 _ALIGN = 64  # cacheline alignment, mirrors malloc's practical alignment
 _HEADER = 4096  # reserved; offset 0 is kept invalid (NULL analogue)
@@ -227,3 +229,58 @@ class Arena:
 
     def read_bytes(self, offset: int, nbytes: int) -> bytes:
         return self._buf[offset : offset + nbytes].tobytes()
+
+
+class ArenaAttachCache:
+    """Bounded read-only attach cache for *foreign* arenas.
+
+    The attach-by-name data plane makes a bridge touch one arena per
+    remote publisher incarnation; ``shm_open`` + ``mmap`` per message
+    would dwarf the control-frame cost, and caching without a bound
+    would leak a mapping per dead publisher (arena names are random per
+    incarnation, so a long-lived bridge sees an unbounded stream of
+    them).  LRU with ``capacity`` mappings: eviction closes the mapping
+    — any outstanding numpy views keep the pages alive until they are
+    garbage collected (``Arena.close`` tolerates exported views), so an
+    evicted-while-reading arena degrades to a deferred unmap, never a
+    dangling read."""
+
+    def __init__(self, capacity: int = 16):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._cached: "OrderedDict[str, Arena]" = OrderedDict()
+        self.attaches = 0  # cold attaches (observability: hit rate)
+        self.evictions = 0
+
+    def attach(self, name: str) -> Arena:
+        """The cached ``Arena.attach(name)``: O(1) on a hit.  Raises
+        ``FileNotFoundError``/``ArenaError`` when the segment is gone or
+        not an arena — callers treat that as a failed data read (the
+        bridge NACKs so the source falls back to serialization)."""
+        a = self._cached.get(name)
+        if a is not None:
+            self._cached.move_to_end(name)
+            return a
+        a = Arena.attach(name)
+        self.attaches += 1
+        self._cached[name] = a
+        while len(self._cached) > self.capacity:
+            _, old = self._cached.popitem(last=False)
+            self.evictions += 1
+            old.close()
+        return a
+
+    def evict(self, name: str) -> bool:
+        """Drop one mapping (e.g. after a read fails: the segment may be
+        a stale incarnation)."""
+        a = self._cached.pop(name, None)
+        if a is None:
+            return False
+        a.close()
+        return True
+
+    def close(self) -> None:
+        for a in self._cached.values():
+            a.close()
+        self._cached = OrderedDict()

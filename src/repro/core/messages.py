@@ -20,6 +20,24 @@ scalars — ROS 2 messages are exactly primitives + arrays, §IV-A).  Message
 
 ``serialize``/``deserialize`` implement the *conventional* path (the
 ROS 2/DDS CDR analogue) used by the baseline transport and by the bridge.
+
+TZC-style partial serialization (the cross-host data plane) splits the
+same wire format into a **control part** and a **data part**:
+
+* ``serialize_parts`` returns ``(header, field_views)`` where ``header``
+  is the tiny pickled layout prefix and ``field_views`` are zero-copy
+  buffers straight over the message's arena (or heap) storage —
+  ``header + b"".join(views)`` is byte-identical to ``serialize``'s
+  output, so a scatter-gather writer (``BusClient.publish_parts``) can
+  emit the conventional frame with **no assembly copy** while every
+  legacy receiver keeps working unchanged.
+* ``deserialize(buf, copy=False)`` returns read-only ``frombuffer``
+  views over the caller's buffer instead of per-field ``.copy()``s —
+  the far-side half of partial serialization (the bridge copies each
+  field exactly once, from the view into its loan).
+* ``control_frame``/``ReceivedMessage.descriptor`` carry the field
+  layout (dtype/shape/offset words) out of band for the same-host
+  attach-by-name path, where no payload bytes transit the bus at all.
 """
 
 from __future__ import annotations
@@ -44,6 +62,7 @@ __all__ = [
     "TOKEN_BATCH",
     "BYTES_BLOB",
     "serialize",
+    "serialize_parts",
     "deserialize",
     "message_nbytes",
 ]
@@ -287,6 +306,9 @@ class ReceivedMessage:
     def __init__(self, arena: Arena, descriptor: dict):
         self.type_name = descriptor["type"]
         self.arena_name = arena.name  # identifies the publisher incarnation
+        self.descriptor = descriptor  # field layout: (kind, offset, shape,
+                                      # dtype) words — the attach-by-name
+                                      # control frame is built from this
         self._views: dict[str, np.ndarray] = {}
         for name, (kind, off, shape, dtstr) in descriptor["fields"].items():
             dt = np.dtype(dtstr)
@@ -350,24 +372,45 @@ class PlainMessage:
 _HDR = struct.Struct("<I")
 
 
-def serialize(msg) -> bytes:
-    """Flatten a message to bytes: header (pickled layout, tiny) + raw field
-    bytes. The byte-copy cost is the serialization the paper measures."""
+def serialize_parts(msg) -> tuple[bytes, list]:
+    """TZC-style partial serialization: ``(header, field_views)``.
+
+    ``header`` is the tiny pickled-layout prefix; ``field_views`` are
+    zero-copy contiguous buffers over the message's own storage (arena
+    views for loaned/received messages).  ``header + b"".join(views)``
+    is byte-identical to :func:`serialize`'s output — the split exists
+    so a scatter-gather writer can put the views on the wire without
+    ever assembling them (no per-field ``tobytes``, no join copy)."""
     fields = msg.fields() if not isinstance(msg, LoanedMessage) else {
         name: msg.get(name) for name in msg.mtype.fields
     }
     layout = []
-    chunks = []
+    views = []
     for name, arr in fields.items():
         arr = np.asarray(arr)
         layout.append((name, arr.dtype.str, arr.shape))
-        chunks.append(np.ascontiguousarray(arr).tobytes())  # the copy
+        if not arr.flags.c_contiguous:
+            arr = np.ascontiguousarray(arr)  # rare: strided caller array
+        views.append(arr.reshape(-1).view(np.uint8).data)
     head = pickle.dumps((getattr(msg, "type_name", None) or msg.mtype.name, layout), protocol=5)
-    return _HDR.pack(len(head)) + head + b"".join(chunks)
+    return _HDR.pack(len(head)) + head, views
 
 
-def deserialize(buf: bytes | memoryview) -> dict[str, np.ndarray]:
-    """Rebuild arrays from bytes (deserialization copy)."""
+def serialize(msg) -> bytes:
+    """Flatten a message to bytes: header (pickled layout, tiny) + raw field
+    bytes. The byte-copy cost is the serialization the paper measures."""
+    header, views = serialize_parts(msg)
+    return header + b"".join(views)  # the assembly copy parts-writers skip
+
+
+def deserialize(buf: bytes | memoryview, *, copy: bool = True) -> dict[str, np.ndarray]:
+    """Rebuild arrays from bytes.
+
+    ``copy=True`` (default) materialises independent arrays — the
+    conventional deserialization copy the paper measures.  ``copy=False``
+    returns **read-only ``frombuffer`` views over the caller's buffer**:
+    zero-copy, valid only while that buffer lives — the bridge copy-in
+    path uses it so each field moves exactly once (view → loan)."""
     buf = memoryview(buf)
     (hlen,) = _HDR.unpack(buf[:4])
     _, layout = pickle.loads(bytes(buf[4 : 4 + hlen]))
@@ -378,7 +421,13 @@ def deserialize(buf: bytes | memoryview) -> dict[str, np.ndarray]:
         n = dt.itemsize
         for s in shape:
             n *= s
-        out[name] = np.frombuffer(buf[pos : pos + n], dtype=dt).reshape(shape).copy()
+        arr = np.frombuffer(buf[pos : pos + n], dtype=dt).reshape(shape)
+        if copy:
+            arr = arr.copy()
+        elif arr.flags.writeable:  # writable source buffer: views stay RO
+            arr = arr[...]
+            arr.flags.writeable = False
+        out[name] = arr
         pos += n
     return out
 

@@ -107,10 +107,35 @@ Two extensions ride on the same plane:
   the shared topic header; the serving plane uses it to detect wedged
   (alive but stuck) replicas.
 
+Two more extensions serve the cross-host data plane (layout v5,
+:mod:`repro.core.routing`'s attach-by-name path):
+
+* **Cross-bridge pins with lease expiry**: a bridge that advertises an
+  entry's payload *by reference* (arena name + offsets in a control
+  frame, no bus payload) must keep the source entry alive until the
+  remote side has read it — the remote reader holds no ``held`` bit in
+  this registry.  ``pin(tidx, pidx, seq, lease_s)`` bumps a per-entry
+  pin count and extends a monotonic-clock deadline; a pin-active entry
+  is treated as *held* by ``publish`` (QueueFull instead of keep-last
+  drop), ``can_publish`` and ``reclaimable``.  ``unpin`` drops the
+  count and wakes a blocked owner.  The lease is the crash backstop:
+  if the pinning bridge dies before unpinning, the entry un-pins
+  itself when ``now > pin_deadline_ns`` — lease-expiry reclaim needs
+  no janitor pass, every owner-side reclaim check applies it.
+* **Cross-arena entries** (``xarena``): an entry whose descriptor's
+  offsets live in *another* publisher's arena (named per entry), so a
+  same-host bridge can re-publish a remote message without copying its
+  payload — subscribers attach ``xarena`` instead of the publishing
+  bridge's own arena.  Lifetime of the foreign payload is the pin/ack
+  protocol's job (routing layer); the registry only carries the name.
+
 Layout history: v4 raises ``MAX_TOPICS`` 64 → 1024, widens entries with
 ``released`` bytes, adds ``wseq``/``gen`` to topic rows and the name-hash
-table to the header.  The magic is bumped (``0x…04``); there is no
-in-place upgrade — v3 attachers are rejected and must be restarted.
+table to the header.  v5 widens entries again with ``pins`` /
+``pin_deadline_ns`` / ``xarena`` (cross-host data plane).  The magic is
+bumped (``0x…05``); there is no in-place upgrade — v4 attachers are
+rejected and must be restarted (segments are ephemeral per-run shm, so
+this costs a restart).
 """
 
 from __future__ import annotations
@@ -140,7 +165,7 @@ MAX_PUBS = 8           # a sharded results topic fans in one pub per replica
 MAX_SUBS = 64          # one bit per subscriber in uint64 masks
 DEPTH_MAX = 64
 HASH_CAP = 2048        # topic-name hash table: 2x MAX_TOPICS, power of two
-_MAGIC = 0xA6_0C_0D_04  # layout v4: seqlock + released bytes + name hash
+_MAGIC = 0xA6_0C_0D_05  # layout v5: v4 + entry pins/lease + xarena refs
 
 # Escape hatch for benchmarking the lock-free fast plane against the v3
 # locked protocol on identical code: when true, every read/release takes
@@ -190,6 +215,11 @@ ENTRY_DT = np.dtype(
         ("released", "u1", (MAX_SUBS,)),  # lock-free release intent, one byte
                                           # per subscriber (single-writer each);
                                           # folded into ``held`` under the lock
+        ("pins", "u4"),             # cross-bridge pin count (attach-by-name)
+        ("_pad2", "u4"),
+        ("pin_deadline_ns", "u8"),  # monotonic lease: pins ignored past this
+        ("xarena", "S32"),          # descriptor offsets live in THIS arena
+                                    # (empty = the publisher's own arena)
     ]
 )
 
@@ -232,6 +262,8 @@ class Entry:
     hops: int = 0
     src_tag: int = 0
     route_seq: int = 0
+    xarena: str = ""  # nonempty: descriptor offsets live in this arena,
+                      # not the publisher's own (same-host zero-copy relay)
 
 
 def domain_lock_path(reg: str) -> str:
@@ -817,6 +849,9 @@ class Registry:
                     t["pub_waiters"][:] = 0
                 self.entries[tidx]["state"] = ST_FREE
                 self.entries[tidx]["released"] = 0
+                self.entries[tidx]["pins"] = 0
+                self.entries[tidx]["pin_deadline_ns"] = 0
+                self.entries[tidx]["xarena"] = b""
             self._hash_remove(key, tidx)
             with self._pub_fds_mu:
                 for p in range(MAX_PUBS):
@@ -1042,6 +1077,19 @@ class Registry:
             return int(e["held"])
         return int(e["held"]) & ~int(_rel_masks(rel))
 
+    @staticmethod
+    def _pin_active(e) -> bool:
+        """Is a cross-bridge pin keeping this entry alive?  False once the
+        lease deadline passes — lease-expiry reclaim is this comparison,
+        applied wherever liveness is decided (no sweeper needed)."""
+        return (int(e["pins"]) > 0
+                and time.monotonic_ns() < int(e["pin_deadline_ns"]))
+
+    def _entry_busy(self, e) -> bool:
+        """Held by a subscriber OR pinned by a live cross-bridge lease —
+        the condition under which a ring slot must not be recycled."""
+        return bool(self._effective_held(e)) or self._pin_active(e)
+
     def _fold_releases(self, tidx: int, pidx: int | None = None) -> None:
         """Fold lock-free release bytes into the ``held`` masks.  Caller
         holds topic ``tidx``'s lock.  Unjournaled by design: the byte array
@@ -1069,7 +1117,7 @@ class Registry:
             depth = int(t["pub_depth"][pidx]) or 1
             slot = int(t["pub_next_seq"][pidx]) % depth
             e = self.entries[tidx, pidx, slot]
-            return not (int(e["state"]) == ST_USED and self._effective_held(e))
+            return not (int(e["state"]) == ST_USED and self._entry_busy(e))
         if not FORCE_LOCKED_HOTPATH:
             val = self._read_hint(tidx, read)
             if val is not self._NO_HINT:
@@ -1090,15 +1138,29 @@ class Registry:
         with self._locked(tidx, write=False):
             return read()
 
+    def _prune_mask(self, ring) -> np.ndarray:
+        """Vectorized "owner may reclaim" mask: fully released, fully
+        received, no publisher refs, and no live cross-bridge pin (an
+        expired lease counts as no pin — that IS the lease reclaim)."""
+        unpinned = (ring["pins"] == 0) | \
+                   (ring["pin_deadline_ns"] <= np.uint64(time.monotonic_ns()))
+        return ((ring["state"] == ST_USED) & (ring["unreceived"] == 0) &
+                (ring["held"] == 0) & (ring["pub_refs"] == 0) & unpinned)
+
     def publish(self, tidx: int, pidx: int, desc_off: int, desc_len: int,
                 *, origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
                 hops: int = 0, src_tag: int = 0,
-                route_seq: int = 0, gen: int | None = None) -> tuple[int, list[int]]:
+                route_seq: int = 0, gen: int | None = None,
+                xarena: str = "") -> tuple[int, list[int]]:
         """Enqueue an entry; returns (seq, freeable_seqs_for_owner).
 
         QoS keep-last(depth): an *unreceived* occupant of the target slot is
-        dropped; a *held* occupant means subscribers are holding every slot —
+        dropped; a *held* (or pin-active: a remote bridge is reading it by
+        reference) occupant means every slot is still alive —
         AgnocastQueueFull (cf. loaned-chunk exhaustion in iceoryx).
+
+        ``xarena`` names the arena the descriptor's offsets live in when it
+        is not the publisher's own (same-host zero-copy relay).
         """
         freeable: list[int] = []
         with self._locked(tidx):
@@ -1112,7 +1174,7 @@ class Registry:
             slot = seq % depth
             e = self.entries[tidx, pidx, slot]
             if int(e["state"]) == ST_USED:
-                if int(e["held"]):
+                if int(e["held"]) or self._pin_active(e):
                     raise AgnocastQueueFull(
                         f"topic {tidx} pub {pidx}: ring slot {slot} still referenced"
                     )
@@ -1125,9 +1187,7 @@ class Registry:
                 freeable.append(int(e["seq"]))
             # prune: any fully-released older entries the owner may reclaim
             ring = self.entries[tidx, pidx]
-            done = (ring["state"] == ST_USED) & (ring["unreceived"] == 0) & \
-                   (ring["held"] == 0) & (ring["pub_refs"] == 0)
-            for s in np.nonzero(done)[0]:
+            for s in np.nonzero(self._prune_mask(ring))[0]:
                 freeable.append(int(ring[s]["seq"]))
                 ring[s]["state"] = ST_FREE
             sub_mask = int(t["sub_alive"])
@@ -1145,6 +1205,9 @@ class Registry:
                 e["route_seq"] = np.uint64(route_seq)
                 e["pub_refs"] = 0  # move semantics: rvalue publish (§VII-A)
                 e["released"][:] = 0  # fresh entry: no release intent yet
+                e["pins"] = 0
+                e["pin_deadline_ns"] = 0
+                e["xarena"] = xarena.encode()
                 e["state"] = ST_USED
                 t["pub_next_seq"][pidx] = seq + 1
         return seq, freeable
@@ -1209,7 +1272,8 @@ class Registry:
                       int(row["desc_len"]), int(row["origin"]),
                       pidx, hops=int(row["hops"]),
                       src_tag=int(row["src_tag"]),
-                      route_seq=int(row["route_seq"]))
+                      route_seq=int(row["route_seq"]),
+                      xarena=bytes(row["xarena"]).rstrip(b"\0").decode())
             )
         return got
 
@@ -1276,17 +1340,64 @@ class Registry:
 
     def reclaimable(self, tidx: int, pidx: int) -> list[int]:
         """Owner-side query: seqs whose payload may now be freed (both
-        counters zero — the paper's deallocation condition, Fig. 7)."""
+        counters zero — the paper's deallocation condition, Fig. 7 —
+        and no live cross-bridge pin; an expired pin lease reclaims
+        here, which is what bounds a crashed pinner's damage)."""
         out: list[int] = []
         with self._locked(tidx):
             self._fold_releases(tidx, pidx)
             ring = self.entries[tidx, pidx]
-            done = (ring["state"] == ST_USED) & (ring["unreceived"] == 0) & \
-                   (ring["held"] == 0) & (ring["pub_refs"] == 0)
-            for s in np.nonzero(done)[0]:
+            for s in np.nonzero(self._prune_mask(ring))[0]:
                 out.append(int(ring[s]["seq"]))
                 ring[s]["state"] = ST_FREE
         return out
+
+    # -- cross-bridge pins (attach-by-name data plane) -------------------------
+
+    def pin(self, tidx: int, pidx: int, seq: int, lease_s: float,
+            *, gen: int | None = None) -> bool:
+        """Pin entry ``seq`` against release/recycling for up to ``lease_s``
+        seconds: the bridge-side half of advertising the entry's payload by
+        reference.  Returns ``False`` when the entry is already gone (the
+        caller must fall back to a by-value send).  Re-pinning extends the
+        deadline monotonically."""
+        deadline = time.monotonic_ns() + int(lease_s * 1e9)
+        with self._locked(tidx):
+            t = self.topics[tidx]
+            if gen is not None and int(t["gen"]) != gen:
+                return False
+            slot = seq % (int(t["pub_depth"][pidx]) or 1)
+            e = self.entries[tidx, pidx, slot]
+            if int(e["seq"]) != seq or int(e["state"]) != ST_USED:
+                return False
+            with self._Txn(self, tidx, pidx, slot, entry=True):
+                e["pins"] = int(e["pins"]) + 1
+                e["pin_deadline_ns"] = max(int(e["pin_deadline_ns"]), deadline)
+        return True
+
+    def unpin(self, tidx: int, pidx: int, seq: int,
+              *, gen: int | None = None) -> None:
+        """Drop one pin on entry ``seq``.  When this (with held==0) makes
+        the entry reclaimable, the owner gets a slot-freed wakeup — a
+        publisher blocked on a pin-held ring can make progress."""
+        freed = False
+        with self._locked(tidx):
+            t = self.topics[tidx]
+            if gen is not None and int(t["gen"]) != gen:
+                return
+            self._fold_releases(tidx, pidx)
+            slot = seq % (int(t["pub_depth"][pidx]) or 1)
+            e = self.entries[tidx, pidx, slot]
+            if int(e["seq"]) != seq or int(e["state"]) != ST_USED:
+                return
+            if int(e["pins"]) > 0:
+                with self._Txn(self, tidx, pidx, slot, entry=True):
+                    e["pins"] = int(e["pins"]) - 1
+                    if int(e["pins"]) == 0:
+                        e["pin_deadline_ns"] = 0
+            freed = int(e["pins"]) == 0 and int(e["held"]) == 0
+        if freed:
+            self._notify_owner(tidx, pidx)
 
     # -- process-exit hook analogue -------------------------------------------
 

@@ -70,25 +70,64 @@ once (bounded) on the endpoint publisher's slot-freed FIFO — a freed
 reference is what lets ``reclaim()`` return bytes to the arena — and
 retries before giving up; the frame's dedup key is released on the final
 drop so another route can still deliver it.
+
+Data planes (``data_plane=`` on :class:`DomainBridge` / :class:`Router`):
+
+* ``"serialized"`` — the PR-5 baseline: ``serialize()`` assembles one
+  payload buffer, ``deserialize()`` + per-field copy on the far side.
+* ``"parts"`` (default) — scatter-gather: the same byte stream, but sent
+  via ``BusClient.publish_parts`` (one ``sendmsg`` straight off the loaned
+  numpy views, no assembly buffer) and copied in from zero-copy
+  ``deserialize(..., copy=False)`` views.  Wire-identical to
+  ``"serialized"``, so the two interoperate freely.
+* ``"attach"`` — same-host TZC split: only a *control frame* (arena name +
+  field layout, a few hundred bytes) transits the bus; the receiving
+  bridge attaches the source arena read-only (cached, see
+  :class:`~repro.core.arena.ArenaAttachCache`) and either republishes the
+  descriptor by reference (``attach_mode="ref"``, true zero-copy — the
+  entry is tagged ``xarena`` so subscribers resolve offsets in the source
+  arena) or copies fields directly into its own loan
+  (``attach_mode="copy"``).
+
+Pin/ack protocol (what makes the attach plane abort-safe): before sending
+a control frame the bridge *pins* the source entry in its registry
+(``Registry.pin`` — refcount + monotonic lease), then releases its own
+message reference; the pin alone keeps the entry alive.  Each receiver
+answers with an ACK (data consumed: after the copy in ``copy`` mode;
+when the local republication is reclaimed in ``ref`` mode — which makes
+chain relays transitively safe) or a NACK (attach/read failed: the
+source arena is gone or the lease is nearly out).  The bus echoes a
+FANOUT receipt telling the sender how many ACKs to await.  The sender
+unpins when fully acked; on a NACK or an ack timeout it re-sends the
+message *serialized* under the same ``(src_tag, route_seq)`` identity —
+receivers that already delivered drop it as a duplicate, the one that
+nacked has forgotten the key and admits it — so every failure mode
+degrades to exactly-once by-value delivery, never a drop.  A crashed
+pinner cannot wedge the source ring: the lease expiry lets the owner
+reclaim (``Registry._prune_mask``).  ``ref`` mode assumes consumers
+release within the lease; ``copy`` mode has no such constraint.
 """
 
 from __future__ import annotations
 
 import itertools
+import pickle
 import secrets
 import select
 import threading
+import time
 import zlib
 from collections import OrderedDict, deque
 from typing import NamedTuple
 
 import numpy as np
 
-from .arena import OutOfArenaMemory
-from .messages import MessageType, Ragged, deserialize, serialize
+from .arena import ArenaAttachCache, OutOfArenaMemory
+from .messages import (MessageType, Ragged, ReceivedMessage, deserialize,
+                       serialize, serialize_parts)
 from .registry import ORIGIN_BRIDGE, AgnocastQueueFull
 from .topic import Domain, Publisher, Subscription
-from .transport import BusClient, Frame
+from .transport import K_ACK, K_CTRL, K_FANOUT, BusClient, Frame, _FANOUT
 
 __all__ = ["RoutingRule", "RoutingTable", "DomainBridge", "Router",
            "Bridge", "domain_tag"]
@@ -240,6 +279,26 @@ class _Pending(NamedTuple):
     route_seq: int
 
 
+class _Await:
+    """Sender-side state for one in-flight attach control frame: the pin we
+    hold on the source entry, the message (for the serialized fallback),
+    and the ack bookkeeping (``need`` arrives via the FANOUT receipt)."""
+
+    __slots__ = ("ep", "msg", "pin", "hops", "need", "acks",
+                 "fallback_at", "fell_back")
+
+    def __init__(self, ep: _Endpoint, msg, pin: tuple, hops: int,
+                 fallback_at: float):
+        self.ep = ep
+        self.msg = msg
+        self.pin = pin  # (tidx, pidx, seq, gen) in OUR registry
+        self.hops = hops
+        self.need: int | None = None  # acks expected; None until the receipt
+        self.acks = 0
+        self.fallback_at = fallback_at
+        self.fell_back = False
+
+
 class DomainBridge:
     """Bridge between one agnocast domain and one remote bus, federating a
     set of topics.  Usually owned by a :class:`Router`; standalone use (one
@@ -247,15 +306,30 @@ class DomainBridge:
 
     def __init__(self, dom: Domain, bus_path: str, *, name: str = "remote",
                  router: "Router | None" = None, depth: int = 10,
-                 max_hops: int = DEFAULT_MAX_HOPS):
+                 max_hops: int = DEFAULT_MAX_HOPS,
+                 data_plane: str = "parts", attach_mode: str = "ref",
+                 pin_lease_s: float = 5.0):
+        if data_plane not in ("serialized", "parts", "attach"):
+            raise ValueError(f"unknown data_plane {data_plane!r}")
+        if attach_mode not in ("ref", "copy"):
+            raise ValueError(f"unknown attach_mode {attach_mode!r}")
         self.dom = dom
         self.name = name
         self.router = router
         self.tag = router.tag if router is not None else domain_tag(dom.name)
         self.depth = depth
         self.max_hops = router.max_hops if router is not None else max_hops
+        self.data_plane = data_plane
+        self.attach_mode = attach_mode
+        self.pin_lease_s = pin_lease_s
         self.bus = BusClient(bus_path)
         self.endpoints: dict[str, _Endpoint] = {}
+        # attach plane state: cached foreign-arena mappings, the in-flight
+        # control frames we hold pins for, and the ref-mode republications
+        # whose acks are deferred to local reclaim
+        self._attach_cache = ArenaAttachCache()
+        self._awaiting: dict[tuple[str, int, int], _Await] = {}
+        self._ref_pending: dict[tuple[str, int], tuple[int, int]] = {}
         # per-endpoint parking: topic -> the one parked loan, plus a bounded
         # FIFO backlog of raw frames that arrived behind it (bounded by the
         # endpoint's own ring depth)
@@ -275,6 +349,11 @@ class DomainBridge:
         self.oom_retries = 0       # copy-ins that hit arena pressure once
         self.dropped_oom = 0       # frames dropped after the bounded retry
         self.dropped_backlog = 0   # frames beyond a parked topic's backlog
+        self.attach_out = 0        # control frames sent (pin held)
+        self.attach_in = 0         # control frames delivered locally
+        self.attach_nacks = 0      # attach/read failures we NACKed
+        self.ack_timeouts = 0      # awaited acks that never came
+        self.attach_fallbacks = 0  # serialized re-sends (nack or timeout)
 
     # -- federation surface ---------------------------------------------------
 
@@ -288,6 +367,9 @@ class DomainBridge:
             d = depth or self.depth
             pub = self.dom.create_publisher(mtype, topic, depth=d)
             sub = self.dom.create_subscription(mtype, topic)
+            # ref-mode attach acks ride the reclaim of our republication:
+            # the source entry must stay pinned until our readers are done
+            pub.on_reclaimed = lambda seqs, t=topic: self._ref_reclaimed(t, seqs)
             ep = _Endpoint(mtype, topic, pub, sub, d)
             self.endpoints[topic] = ep
             self.bus.subscribe(topic)
@@ -316,11 +398,16 @@ class DomainBridge:
     # -- agnocast -> conventional ----------------------------------------------
 
     def pump_agnocast(self, topic: str | None = None) -> int:
-        """Serialize pending agnocast messages onto the bus (Fig. 11 cost).
+        """Relay pending agnocast messages onto the bus.
 
-        Locally originated messages get fresh route metadata; messages a
-        sibling bridge copied in keep theirs (hop count incremented)."""
+        ``data_plane`` picks the cost: ``serialized`` assembles one buffer
+        (the Fig. 11 cost), ``parts`` scatter-gathers the loaned views in
+        one ``sendmsg``, ``attach`` sends only a control frame and pins the
+        entry (see module docstring).  Locally originated messages get
+        fresh route metadata; messages a sibling bridge copied in keep
+        theirs (hop count incremented)."""
         n = 0
+        self._tick_awaiting()
         eps = ([self.endpoints[topic]] if topic is not None
                else list(self.endpoints.values()))
         for ep in eps:
@@ -347,15 +434,95 @@ class DomainBridge:
                             _origin_salt(ptr.msg.arena_name, ep.sub.tidx,
                                          ptr.pub_idx),
                             ptr.seq)
-                    payload = serialize(ptr.msg)  # the Fig. 11 serialization
-                    self.bus.publish(ep.topic, payload, origin=1,
-                                     hops=hops + 1, src_tag=src,
-                                     route_seq=rseq)
+                    if (self.data_plane == "attach"
+                            and self._attach_out(ep, ptr, hops, src, rseq)):
+                        n += 1
+                        continue  # pin (not the ptr) keeps the entry alive
+                    header, views = serialize_parts(ptr.msg)
+                    if self.data_plane == "serialized":
+                        self.bus.publish(ep.topic, header + b"".join(views),
+                                         origin=1, hops=hops + 1, src_tag=src,
+                                         route_seq=rseq)
+                    else:  # "parts": zero-assembly scatter-gather
+                        self.bus.publish_parts(ep.topic, header, views,
+                                               origin=1, hops=hops + 1,
+                                               src_tag=src, route_seq=rseq)
                     n += 1
                 finally:
                     ptr.release()
         self.relayed_out += n
         return n
+
+    # -- attach plane: sender side ---------------------------------------------
+
+    def _attach_out(self, ep: _Endpoint, ptr, hops: int, src: int,
+                    rseq: int) -> bool:
+        """Send one attach control frame: pin the source entry in our
+        registry, ship (arena name, descriptor) instead of payload bytes,
+        and hold the pin until acked.  False = caller should fall back to
+        a by-value send (entry already gone, or no descriptor)."""
+        desc = getattr(ptr.msg, "descriptor", None)
+        if desc is None:
+            return False
+        if not self.dom.registry.pin(ep.sub.tidx, ptr.pub_idx, ptr.seq,
+                                     self.pin_lease_s, gen=ep.sub.tgen):
+            return False
+        # receivers must stop starting reads before our lease runs out —
+        # CLOCK_MONOTONIC is system-wide, so the deadline travels verbatim
+        stale_ns = time.monotonic_ns() + int(self.pin_lease_s * 0.90e9)
+        ctrl = pickle.dumps({"arena": ptr.msg.arena_name, "desc": desc,
+                             "stale_ns": stale_ns}, protocol=5)
+        key = (ep.topic, src, rseq)
+        self._awaiting[key] = _Await(
+            ep, ptr.msg, (ep.sub.tidx, ptr.pub_idx, ptr.seq, ep.sub.tgen),
+            hops, time.monotonic() + self.pin_lease_s * 0.95)
+        try:
+            self.bus.publish_ctrl(ep.topic, ctrl, origin=1, hops=hops + 1,
+                                  src_tag=src, route_seq=rseq)
+        except OSError:
+            self._settle(key)  # bus gone: unpin, let the caller's path fail
+            raise
+        self.attach_out += 1
+        return True
+
+    def _tick_awaiting(self) -> None:
+        """Expire overdue in-flight control frames: re-send serialized (the
+        message still pinned in our arena — exactly why the fallback is
+        taken strictly *before* the pin lease runs out) and unpin."""
+        if not self._awaiting:
+            return
+        now = time.monotonic()
+        for key, aw in list(self._awaiting.items()):
+            if aw.need is not None and aw.acks >= aw.need:
+                self._settle(key)
+            elif now >= aw.fallback_at:
+                self.ack_timeouts += 1
+                self._send_fallback(key, aw)
+                self._settle(key)
+
+    def _send_fallback(self, key: tuple, aw: _Await) -> None:
+        """Degrade one attach send to by-value, same route identity:
+        receivers that delivered dedup it, the one that nacked admits it."""
+        if aw.fell_back:
+            return
+        aw.fell_back = True
+        self.attach_fallbacks += 1
+        topic, src, rseq = key
+        try:
+            self.bus.publish(topic, serialize(aw.msg), origin=1,
+                             hops=aw.hops + 1, src_tag=src, route_seq=rseq)
+        except OSError:
+            pass  # bus gone; the pin release below still must happen
+
+    def _settle(self, key: tuple) -> None:
+        aw = self._awaiting.pop(key, None)
+        if aw is None:
+            return
+        tidx, pidx, seq, gen = aw.pin
+        try:
+            self.dom.registry.unpin(tidx, pidx, seq, gen=gen)
+        except Exception:
+            pass  # registry torn down mid-close
 
     # -- conventional -> agnocast ------------------------------------------------
 
@@ -368,6 +535,14 @@ class DomainBridge:
         copied in immediately — intake never stops for the whole bridge."""
         n = 0
         seen = 0
+        self._tick_awaiting()
+        if self._ref_pending:
+            # deferred ref-mode acks ride reclaim: sweep the endpoints that
+            # still owe one so a quiet topic's ack isn't deferred forever
+            for t in {t for (t, _) in self._ref_pending}:
+                ep = self.endpoints.get(t)
+                if ep is not None:
+                    ep.pub.reclaim()
         self.retry_pending()
         while True:
             fr = self.bus.recv_frame(timeout if seen == 0 else 0.0)
@@ -378,7 +553,14 @@ class DomainBridge:
 
     def _intake_frame(self, fr: Frame) -> int:
         """Route one received frame: deliver now, or queue it behind its
-        topic's parked copy-in."""
+        topic's parked copy-in.  ACK/FANOUT frames are control-plane
+        answers to *our* sends — handled immediately, never backlogged."""
+        if fr.kind == K_ACK:
+            self._ack_in(fr)
+            return 0
+        if fr.kind == K_FANOUT:
+            self._fanout_in(fr)
+            return 0
         ep = self.endpoints.get(fr.topic)
         if ep is None:
             return 0
@@ -405,6 +587,8 @@ class DomainBridge:
                 return 0
         else:  # conventional publisher: this domain adopts the message
             src, rseq = self.tag, self._next_rseq()
+        if fr.kind == K_CTRL:
+            return self._attach_in(ep, fr, src, rseq)
         try:
             self._copy_in_bounded(ep, fr, src, rseq)
         except Exception as e:
@@ -451,7 +635,15 @@ class DomainBridge:
             raise
 
     def _copy_in(self, ep: _Endpoint, fr: Frame, src: int, rseq: int) -> None:
-        fields = deserialize(fr.payload)
+        # copy=False: frombuffer views over the received frame — the one
+        # copy left on this path is the field write into the loan
+        fields = deserialize(fr.payload, copy=False)
+        loan = self._fill_loan(ep, fields)
+        self._publish_or_park(ep, loan, fr.hops, src, rseq)
+
+    def _fill_loan(self, ep: _Endpoint, fields: dict):
+        """Borrow a loan and copy ``fields`` into it; abort-safe (the arena
+        blocks are returned if any field write raises)."""
         loan = ep.pub.borrow_loaded_message()
         try:
             for name, spec in ep.mtype.fields.items():
@@ -464,7 +656,86 @@ class DomainBridge:
         except Exception:
             loan.dealloc()  # abort path: return the arena blocks
             raise
-        self._publish_or_park(ep, loan, fr.hops, src, rseq)
+        return loan
+
+    # -- attach plane: receiver side ---------------------------------------------
+
+    def _attach_in(self, ep: _Endpoint, fr: Frame, src: int, rseq: int) -> int:
+        """Deliver one attach control frame: attach the source arena by
+        name and read the fields in place.  Any failure — segment gone,
+        stale lease, full ring — un-admits the dedup key and NACKs, so the
+        sender's serialized fallback is delivered exactly once."""
+        arena_name = None
+        try:
+            ctrl = pickle.loads(fr.payload)
+            arena_name = ctrl["arena"]
+            if time.monotonic_ns() >= int(ctrl["stale_ns"]):
+                raise TimeoutError("attach lease nearly expired")
+            arena = self._attach_cache.attach(arena_name)
+            if self.attach_mode == "ref":
+                # true zero-copy: republish the descriptor verbatim, tagged
+                # with the source arena; ack deferred to our entry's reclaim
+                seq = ep.pub.publish_descriptor(
+                    ctrl["desc"], xarena=arena_name, origin=ORIGIN_BRIDGE,
+                    exclude_sub=ep.sub.sidx, hops=fr.hops,
+                    src_tag=src, route_seq=rseq)
+                self._ref_pending[(ep.topic, seq)] = (src, rseq)
+            else:  # "copy": read fields straight from the source entry
+                msg = ReceivedMessage(arena, ctrl["desc"])
+                loan = self._fill_loan(ep, msg.fields())
+                # the source entry is consumed the moment the copy lands —
+                # ack now, park/retry later cannot touch it again
+                self.bus.publish_ack(ep.topic, True, src_tag=src,
+                                     route_seq=rseq)
+                self._publish_or_park(ep, loan, fr.hops, src, rseq)
+        except Exception:
+            self.attach_nacks += 1
+            self._forget(src, rseq)
+            if arena_name is not None:
+                self._attach_cache.evict(arena_name)  # maybe stale segment
+            try:
+                self.bus.publish_ack(ep.topic, False, src_tag=src,
+                                     route_seq=rseq)
+            except OSError:
+                pass
+            return 0
+        self.attach_in += 1
+        self.relayed_in += 1
+        return 1
+
+    def _ack_in(self, fr: Frame) -> None:
+        aw = self._awaiting.get((fr.topic, fr.src_tag, fr.route_seq))
+        if aw is None:
+            return  # not ours (sibling's message), or already settled
+        key = (fr.topic, fr.src_tag, fr.route_seq)
+        if fr.payload[:1] == b"\x00":  # NACK: degrade to by-value now,
+            self._send_fallback(key, aw)  # but keep the pin for other
+            aw.acks += 1                  # receivers still mid-read
+        else:
+            aw.acks += 1
+        if aw.need is not None and aw.acks >= aw.need:
+            self._settle(key)
+
+    def _fanout_in(self, fr: Frame) -> None:
+        key = (fr.topic, fr.src_tag, fr.route_seq)
+        aw = self._awaiting.get(key)
+        if aw is None:
+            return
+        (aw.need,) = _FANOUT.unpack(fr.payload[:_FANOUT.size])
+        if aw.acks >= aw.need:
+            self._settle(key)  # 0 receivers (or acks beat the receipt)
+
+    def _ref_reclaimed(self, topic: str, seqs) -> None:
+        """Our ref-mode republication was reclaimed — every local reader is
+        done with the source entry; ack so the sender can unpin."""
+        for s in seqs:
+            rec = self._ref_pending.pop((topic, s), None)
+            if rec is not None:
+                try:
+                    self.bus.publish_ack(topic, True, src_tag=rec[0],
+                                         route_seq=rec[1])
+                except OSError:
+                    pass  # bus gone: the sender's lease expiry covers it
 
     def _publish_or_park(self, ep: _Endpoint, loan, hops: int, src: int,
                          rseq: int) -> None:
@@ -612,6 +883,12 @@ class DomainBridge:
             "dropped_oom": self.dropped_oom,
             "dropped_backlog": self.dropped_backlog,
             "parked": len(self._pending),
+            "attach_out": self.attach_out,
+            "attach_in": self.attach_in,
+            "attach_nacks": self.attach_nacks,
+            "ack_timeouts": self.ack_timeouts,
+            "attach_fallbacks": self.attach_fallbacks,
+            "awaiting": len(self._awaiting),
         }
 
     def close(self) -> None:
@@ -629,6 +906,15 @@ class DomainBridge:
             self._forget(pending.src_tag, pending.route_seq)
         self._pending = {}
         self._backlog = {}
+        # flush unresolved attach sends by value (receivers that already
+        # delivered dedup the re-send), then drop every pin we hold — a
+        # closing bridge must never leave the source ring wedged
+        for key, aw in list(self._awaiting.items()):
+            if aw.need is None or aw.acks < aw.need:
+                self._send_fallback(key, aw)
+            self._settle(key)
+        self._ref_pending = {}
+        self._attach_cache.close()
         self.bus.close()
 
 
@@ -652,10 +938,15 @@ class Router:
 
     def __init__(self, dom: Domain, *, tag: int | None = None,
                  max_hops: int = DEFAULT_MAX_HOPS,
-                 seen_limit: int = _SEEN_LIMIT):
+                 seen_limit: int = _SEEN_LIMIT,
+                 data_plane: str = "parts", attach_mode: str = "ref",
+                 pin_lease_s: float = 5.0):
         self.dom = dom
         self.tag = tag if tag is not None else domain_tag(dom.name)
         self.max_hops = max_hops
+        self.data_plane = data_plane
+        self.attach_mode = attach_mode
+        self.pin_lease_s = pin_lease_s
         self.table = RoutingTable()
         self.bridges: dict[str, DomainBridge] = {}
         self._seen = _DedupWindow(seen_limit)
@@ -663,12 +954,16 @@ class Router:
 
     # -- topology -------------------------------------------------------------
 
-    def add_remote(self, name: str, bus_path: str, *,
-                   depth: int = 10) -> DomainBridge:
+    def add_remote(self, name: str, bus_path: str, *, depth: int = 10,
+                   data_plane: str | None = None,
+                   attach_mode: str | None = None) -> DomainBridge:
         if name in self.bridges:
             raise ValueError(f"remote {name!r} already exists")
         br = DomainBridge(self.dom, bus_path, name=name, router=self,
-                          depth=depth)
+                          depth=depth,
+                          data_plane=data_plane or self.data_plane,
+                          attach_mode=attach_mode or self.attach_mode,
+                          pin_lease_s=self.pin_lease_s)
         self.bridges[name] = br
         return br
 

@@ -148,6 +148,10 @@ class Publisher:
         self.tgen = dom.registry.topic_gen(self.tidx)  # name-ABA guard
         self.pidx = dom.registry.add_publisher(self.tidx, os.getpid(), dom.arena.name, depth)
         self._inflight: dict[int, tuple[int, int, list[int]]] = {}  # seq -> (desc_off, desc_len, payload offs)
+        # optional hook(seqs) fired when published entries are reclaimed —
+        # the attach-by-name bridge acks its upstream pin from here (ref
+        # mode: the source entry must outlive our local republication)
+        self.on_reclaimed = None
         self._fifo_fds: dict[int, int] = {}
         # owner-side "slot freed" reverse FIFO: releasers (Registry.release /
         # the janitor) write a byte when a ring slot becomes reusable.  The
@@ -197,9 +201,40 @@ class Publisher:
         self._notify()
         return seq
 
+    def publish_descriptor(self, desc, *, xarena: str,
+                           origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
+                           hops: int = 0, src_tag: int = 0,
+                           route_seq: int = 0) -> int:
+        """Publish a message whose payload bytes live in a *foreign* arena.
+
+        Same-host zero-copy relay: the bridge republishes a received
+        descriptor verbatim, tagging the entry with ``xarena`` (the source
+        publisher's arena name) so subscribers resolve offsets against that
+        segment instead of ours.  Only the pickled descriptor is written to
+        our arena; no payload bytes move.  The caller is responsible for
+        keeping the source entry pinned until this entry is reclaimed
+        (see :attr:`on_reclaimed`)."""
+        raw = pickle.dumps(desc, protocol=5)
+        off = self.dom.arena.alloc(len(raw))
+        self.dom.arena.write_bytes(off, raw)
+        try:
+            seq, freeable = self.dom.registry.publish(
+                self.tidx, self.pidx, off, len(raw), origin=origin,
+                exclude_sub=exclude_sub, hops=hops, src_tag=src_tag,
+                route_seq=route_seq, gen=self.tgen, xarena=xarena
+            )
+        except Exception:
+            self.dom.arena.free(off)
+            raise
+        self._inflight[seq] = (off, len(raw), [])
+        self._reclaim(freeable)
+        self._notify()
+        return seq
+
     # -- owner-side deallocation (Fig. 7 timing) ----------------------------------
 
     def _reclaim(self, seqs) -> None:
+        freed: list[int] = []
         for seq in seqs:
             rec = self._inflight.pop(seq, None)
             if rec is None:
@@ -208,6 +243,9 @@ class Publisher:
             self.dom.arena.free(desc_off)
             for o in offs:
                 self.dom.arena.free(o)
+            freed.append(seq)
+        if freed and self.on_reclaimed is not None:
+            self.on_reclaimed(freed)
 
     def reclaim(self) -> int:
         seqs = self.dom.registry.reclaimable(self.tidx, self.pidx)
@@ -396,11 +434,20 @@ class Subscription:
             return out
         pubs = dict(self.dom.registry.publishers(self.tidx))
         for e in entries:
-            arena_name = pubs.get(e.pub_idx)
-            if arena_name is None:
+            desc_arena = pubs.get(e.pub_idx)
+            if desc_arena is None:
                 continue  # publisher died; entry payload is gone
-            arena = self.dom.attach_arena(arena_name)
-            raw = arena.read_bytes(e.desc_off, e.desc_len)
+            # xarena: a bridge republished a foreign descriptor by reference
+            # — payload offsets resolve in the *source* arena, while the
+            # pickled descriptor itself lives in the republisher's arena
+            arena_name = e.xarena or desc_arena
+            try:
+                arena = self.dom.attach_arena(arena_name)
+                darena = (arena if arena_name == desc_arena
+                          else self.dom.attach_arena(desc_arena))
+            except (FileNotFoundError, OSError):
+                continue  # source arena gone (lease expired upstream)
+            raw = darena.read_bytes(e.desc_off, e.desc_len)
             desc = pickle.loads(raw)
             msg = ReceivedMessage(arena, desc)
             out.append(MessagePtr.first(msg, self.dom.registry, self.tidx,

@@ -1,9 +1,9 @@
 """Conventional transports — the paths Agnocast is compared against (§V).
 
 * :class:`Bus` / :class:`BusClient` — a loopback publish/subscribe bus over
-  Unix domain sockets with length-prefixed serialized frames.  This is the
-  "ROS 2 via CycloneDDS" analogue: every publish pays serialization + two
-  socket copies + deserialization, all O(payload).
+  Unix domain sockets with length-prefixed frames.  This is the "ROS 2 via
+  CycloneDDS" analogue: a plain publish pays serialization + two socket
+  copies + deserialization, all O(payload).
 * :class:`ShmRing` — a shared-memory ring.  In ``copy`` mode the producer
   serializes into a slot and the consumer deserializes out (the "IceOryx
   with unsized message types" case the paper measures: transparent
@@ -14,6 +14,46 @@
 
 These exist so the benchmarks reproduce Fig. 9/10/11's *comparisons*, and
 so the bridge (§IV-D) has a conventional space to relay to.
+
+Wire format — control/data frame split (TZC-style, cf. PAPERS.md)
+-----------------------------------------------------------------
+
+Every frame on the wire is ``<u32 length><u8 kind><PUBHDR><topic>...``
+where ``PUBHDR = <u16 topic_len><u8 origin><u8 hops><u64 src_tag>
+<u64 route_seq>`` carries the route metadata the multi-domain bridges
+(:mod:`repro.core.routing`) need for duplicate suppression and loop
+prevention.  The ``kind`` byte selects what follows the topic:
+
+=====  =========  ==========================================================
+kind   name       body after topic
+=====  =========  ==========================================================
+0      PUB        serialized payload (``messages.serialize`` bytes).  The
+                  scatter-gather fast path (:meth:`BusClient.publish_parts`)
+                  emits this *same* byte stream via ``socket.sendmsg`` with
+                  the layout header and each field's loaned numpy view as
+                  separate iovecs — no intermediate assembly buffer — so
+                  receivers cannot tell (and need not care) which path the
+                  sender used.
+1      SUB        topic name only (subscription registration).
+2      CTRL       an *attach control frame*: a pickled dict carrying the
+                  source arena name and per-field ``AllocRef`` words
+                  instead of payload bytes.  The data part never transits
+                  the bus — a same-host receiver attaches the source arena
+                  read-only and reads the fields in place (routing.py).
+3      ACK        1-byte status (``\\x01`` ack / ``\\x00`` nack) answering a
+                  CTRL frame; ``src_tag``/``route_seq`` name the message.
+                  Published on the CTRL's topic; non-owners ignore it.
+4      FANOUT     bus → CTRL-publisher receipt: ``<u32 n>`` = how many
+                  subscribers the CTRL frame was fanned out to, i.e. how
+                  many ACKs the sender should await before unpinning.
+=====  =========  ==========================================================
+
+The bus itself never inspects payloads; CTRL/ACK frames fan out exactly
+like PUB frames (kind ≠ SUB ⇒ fan out), so the control plane needs no bus
+routing state beyond topic subscriptions.  Fan-out is non-blocking: each
+connection owns an outbound buffer drained on ``EVENT_WRITE``; a receiver
+whose backlog exceeds ``max_backlog`` bytes has the frame dropped and
+counted (``Bus.dropped_backlog``) instead of stalling the event loop.
 """
 
 from __future__ import annotations
@@ -24,6 +64,7 @@ import selectors
 import socket
 import struct
 import threading
+from collections import deque
 from dataclasses import dataclass
 from multiprocessing import shared_memory
 
@@ -31,13 +72,22 @@ import numpy as np
 
 from .arena import _new_shm
 
-__all__ = ["Bus", "BusClient", "Frame", "ShmRing"]
+__all__ = ["Bus", "BusClient", "Frame", "ShmRing",
+           "K_PUB", "K_SUB", "K_CTRL", "K_ACK", "K_FANOUT"]
 
 _FRAME = struct.Struct("<I")
 # topic_len, origin, hops, src_tag, route_seq — the last three are the route
 # metadata the multi-domain bridges (repro.core.routing) need for duplicate
 # suppression and hop-count loop prevention; plain publishers leave them 0.
 _PUBHDR = struct.Struct("<HBBQQ")
+_FANOUT = struct.Struct("<I")
+
+# frame kinds (see module docstring)
+K_PUB = 0
+K_SUB = 1
+K_CTRL = 2
+K_ACK = 3
+K_FANOUT = 4
 
 
 @dataclass(frozen=True)
@@ -49,30 +99,56 @@ class Frame:
     hops: int        # bus hops taken so far (origin domain -> here)
     src_tag: int     # origin agnocast-domain tag (0 = conventional origin)
     route_seq: int   # origin-unique message id (dedup key with src_tag)
-    payload: bytes
+    payload: "bytes | memoryview"  # view over this frame's own recv buffer
+    kind: int = K_PUB  # frame kind (K_PUB/K_CTRL/K_ACK/K_FANOUT)
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
+def _recv_exact(sock: socket.socket, n: int) -> memoryview | None:
+    """Read exactly ``n`` bytes into one exact-size buffer (``recv_into`` —
+    no chunk list, no join copy, no final ``bytes()`` copy)."""
+    buf = memoryview(bytearray(n))
+    got = 0
+    while got < n:
+        r = sock.recv_into(buf[got:])
+        if not r:
             return None
-        buf += chunk
-    return bytes(buf)
+        got += r
+    return buf
+
+
+class _Conn:
+    """Per-connection bus state: parse buffer in, bounded backlog out."""
+
+    __slots__ = ("sock", "topics", "inbuf", "outq", "out_bytes")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.topics: set[str] = set()
+        self.inbuf = bytearray()
+        self.outq: deque = deque()  # memoryviews pending send
+        self.out_bytes = 0
 
 
 class Bus:
-    """Loopback pub/sub hub (the conventional-middleware stand-in)."""
+    """Loopback pub/sub hub (the conventional-middleware stand-in).
 
-    def __init__(self, path: str | None = None):
+    The event loop never blocks on any one connection: reads go through
+    per-connection parse buffers, fan-out goes through per-connection
+    outbound queues drained on ``EVENT_WRITE``.  A slow subscriber whose
+    backlog exceeds ``max_backlog`` bytes gets frames *dropped* (counted in
+    :attr:`dropped_backlog`) rather than stalling every other participant —
+    the head-of-line-blocking fix the routing plane's liveness depends on."""
+
+    def __init__(self, path: str | None = None, *, max_backlog: int = 64 << 20):
         self.path = path or f"\0agnobus-{secrets.token_hex(6)}"
+        self.max_backlog = max_backlog
+        self.dropped_backlog = 0  # frames dropped on over-backlog conns
         self._srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self._srv.bind(self.path)
         self._srv.listen(64)
         self._sel = selectors.DefaultSelector()
         self._sel.register(self._srv, selectors.EVENT_READ, None)
-        self._subs: dict[socket.socket, set[str]] = {}
+        self._conns: dict[socket.socket, _Conn] = {}
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
@@ -83,46 +159,111 @@ class Bus:
 
     def _run(self) -> None:
         while not self._stop.is_set():
-            for key, _ in self._sel.select(timeout=0.1):
+            for key, events in self._sel.select(timeout=0.1):
                 if key.data is None:
                     conn, _ = self._srv.accept()
-                    self._subs[conn] = set()
-                    self._sel.register(conn, selectors.EVENT_READ, "c")
-                else:
-                    self._handle(key.fileobj)
+                    conn.setblocking(False)
+                    c = _Conn(conn)
+                    self._conns[conn] = c
+                    self._sel.register(conn, selectors.EVENT_READ, c)
+                    continue
+                c = key.data
+                if events & selectors.EVENT_READ:
+                    self._readable(c)
+                if events & selectors.EVENT_WRITE and c.sock in self._conns:
+                    self._flush(c)
 
-    def _handle(self, conn: socket.socket) -> None:
+    # -- event-loop halves ---------------------------------------------------
+
+    def _readable(self, c: _Conn) -> None:
         try:
-            hdr = _recv_exact(conn, 4)
-            if hdr is None:
-                raise ConnectionError
-            (n,) = _FRAME.unpack(hdr)
-            frame = _recv_exact(conn, n)
-            if frame is None:
-                raise ConnectionError
-        except (ConnectionError, OSError):
-            self._sel.unregister(conn)
-            self._subs.pop(conn, None)
-            conn.close()
+            while True:
+                chunk = c.sock.recv(1 << 20)
+                if not chunk:
+                    self._drop(c)
+                    return
+                c.inbuf += chunk
+                if len(chunk) < (1 << 20):
+                    break
+        except BlockingIOError:
+            pass
+        except OSError:
+            self._drop(c)
             return
-        kind, body = frame[0], frame[1:]
-        if kind == 1:  # SUB topic
-            self._subs[conn].add(body.decode())
-        else:  # PUB: fan out to subscribers of the topic
-            tlen = _PUBHDR.unpack(body[: _PUBHDR.size])[0]
-            topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
-            out = _FRAME.pack(len(frame)) + frame
-            dead = []
-            for c, topics in self._subs.items():
-                if topic in topics and c is not conn:
-                    try:
-                        c.sendall(out)
-                    except OSError:
-                        dead.append(c)
-            for c in dead:
-                self._sel.unregister(c)
-                self._subs.pop(c, None)
-                c.close()
+        pos = 0
+        buf = c.inbuf
+        while len(buf) - pos >= 4:
+            (n,) = _FRAME.unpack_from(buf, pos)
+            if len(buf) - pos - 4 < n:
+                break
+            # hand a *view* into the parse buffer to dispatch; it copies the
+            # frame exactly once (prefix + body in one buffer) for fan-out
+            self._dispatch(c, memoryview(buf)[pos + 4 : pos + 4 + n])
+            pos += 4 + n
+            if c.sock not in self._conns:  # dispatch dropped us
+                return
+        if pos:
+            del buf[:pos]
+
+    def _dispatch(self, c: _Conn, frame: memoryview) -> None:
+        kind = frame[0]
+        if kind == K_SUB:
+            c.topics.add(bytes(frame[1:]).decode())
+            frame.release()  # inbuf compaction needs the view gone
+            return
+        tlen, _, _, src_tag, route_seq = _PUBHDR.unpack_from(frame, 1)
+        topic = bytes(frame[1 + _PUBHDR.size : 1 + _PUBHDR.size + tlen]).decode()
+        out = bytearray(_FRAME.pack(len(frame)))
+        out += frame  # the single fan-out copy (shared by every receiver)
+        frame.release()
+        fanout = 0
+        for oc in list(self._conns.values()):
+            if topic in oc.topics and oc is not c:
+                if self._enqueue(oc, out):
+                    fanout += 1
+        if kind == K_CTRL and c.sock in self._conns:
+            # receipt: tell the CTRL publisher how many ACKs to await
+            t = topic.encode()
+            body = (bytes([K_FANOUT])
+                    + _PUBHDR.pack(len(t), 0, 0, src_tag, route_seq)
+                    + t + _FANOUT.pack(fanout))
+            self._enqueue(c, _FRAME.pack(len(body)) + body)
+
+    def _enqueue(self, c: _Conn, out: bytes) -> bool:
+        if c.out_bytes + len(out) > self.max_backlog:
+            self.dropped_backlog += 1
+            return False
+        c.outq.append(memoryview(out))
+        c.out_bytes += len(out)
+        self._flush(c)
+        return c.sock in self._conns
+
+    def _flush(self, c: _Conn) -> None:
+        try:
+            while c.outq:
+                mv = c.outq[0]
+                sent = c.sock.send(mv)
+                c.out_bytes -= sent
+                if sent < len(mv):
+                    c.outq[0] = mv[sent:]
+                    break
+                c.outq.popleft()
+        except BlockingIOError:
+            pass
+        except OSError:
+            self._drop(c)
+            return
+        want = selectors.EVENT_READ | (selectors.EVENT_WRITE if c.outq else 0)
+        self._sel.modify(c.sock, want, c)
+
+    def _drop(self, c: _Conn) -> None:
+        if self._conns.pop(c.sock, None) is None:
+            return
+        try:
+            self._sel.unregister(c.sock)
+        except (KeyError, ValueError):
+            pass
+        c.sock.close()
 
     def stop(self) -> None:
         self._stop.set()
@@ -145,11 +286,51 @@ class BusClient:
         self._sock.sendall(_FRAME.pack(len(body)) + body)
 
     def publish(self, topic: str, payload: bytes, *, origin: int = 0,
-                hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
+                hops: int = 0, src_tag: int = 0, route_seq: int = 0,
+                kind: int = K_PUB) -> None:
         t = topic.encode()
-        body = (b"\x00" + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
+        body = (bytes([kind])
+                + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
                 + t + payload)
         self._sock.sendall(_FRAME.pack(len(body)) + body)
+
+    def publish_parts(self, topic: str, header: bytes, views, *, origin: int = 0,
+                      hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
+        """Scatter-gather publish: one ``sendmsg`` straight off the loaned
+        numpy views — no ``b"".join`` assembly buffer, no payload copy on
+        this side of the socket.  Emits a byte stream identical to
+        :meth:`publish` of ``header + b"".join(views)`` (see
+        ``messages.serialize_parts``), so receivers need no new code."""
+        t = topic.encode()
+        prefix = (bytes([K_PUB])
+                  + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
+                  + t + header)
+        total = len(prefix) + sum(v.nbytes for v in views)
+        bufs = [memoryview(_FRAME.pack(total) + prefix)]
+        bufs += [mv for v in views if (mv := memoryview(v)).nbytes]
+        while bufs:
+            sent = self._sock.sendmsg(bufs)
+            while sent:  # partial send: advance across the iovec list
+                if sent >= len(bufs[0]):
+                    sent -= len(bufs[0])
+                    bufs.pop(0)
+                else:
+                    bufs[0] = bufs[0][sent:]
+                    sent = 0
+
+    def publish_ctrl(self, topic: str, ctrl: bytes, *, origin: int = 0,
+                     hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
+        """Publish an attach control frame (kind 2): route metadata + the
+        pickled attach descriptor; payload bytes stay in the source arena."""
+        self.publish(topic, ctrl, origin=origin, hops=hops, src_tag=src_tag,
+                     route_seq=route_seq, kind=K_CTRL)
+
+    def publish_ack(self, topic: str, ok: bool, *, src_tag: int,
+                    route_seq: int) -> None:
+        """Answer a CTRL frame: ack (data read done, pin releasable) or
+        nack (attach/read failed — sender must fall back to serialized)."""
+        self.publish(topic, b"\x01" if ok else b"\x00",
+                     src_tag=src_tag, route_seq=route_seq, kind=K_ACK)
 
     def recv_frame(self, timeout: float | None = None) -> Frame | None:
         """Receive one frame with its route metadata (bridges use this)."""
@@ -168,11 +349,14 @@ class BusClient:
         frame = _recv_exact(self._sock, n)
         if frame is None:
             return None
-        body = frame[1:]
-        tlen, origin, hops, src_tag, route_seq = _PUBHDR.unpack(body[: _PUBHDR.size])
-        topic = body[_PUBHDR.size : _PUBHDR.size + tlen].decode()
+        tlen, origin, hops, src_tag, route_seq = _PUBHDR.unpack_from(frame, 1)
+        off = 1 + _PUBHDR.size
+        topic = bytes(frame[off : off + tlen]).decode()
+        # payload stays a view over the frame's own exact-size buffer: the
+        # 16 MiB case pays zero receive-side assembly copies (deserialize /
+        # pickle / struct all take bytes-likes)
         return Frame(topic, origin, hops, src_tag, route_seq,
-                     body[_PUBHDR.size + tlen :])
+                     frame[off + tlen :], kind=frame[0])
 
     def recv(self, timeout: float | None = None) -> tuple[str, int, bytes] | None:
         fr = self.recv_frame(timeout)

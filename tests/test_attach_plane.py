@@ -1,0 +1,308 @@
+"""Cross-host data plane: TZC-style control/data split.
+
+Covers the attach-by-name plane (ref + copy modes, pin/ack lifecycle,
+NACK → serialized-fallback exactly-once), the registry pin/lease
+semantics, the zero-assembly serialize/deserialize paths, and the bus's
+bounded-backlog fan-out (head-of-line fix).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    POINT_CLOUD2,
+    Bus,
+    BusClient,
+    Domain,
+    DomainBridge,
+    deserialize,
+    serialize,
+    serialize_parts,
+)
+from repro.core.messages import PlainMessage
+
+
+def _publish(pub, value, n=64):
+    m = pub.borrow_loaded_message()
+    m.data.extend(np.full(n, value, np.uint8))
+    m.set("stamp", float(value))
+    pub.reclaim()
+    pub.publish_blocking(m, timeout=10.0)
+
+
+def _pump_until(pred, *bridges, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        for br in bridges:
+            br.pump_agnocast()
+            br.pump_bus(0.01)
+        if pred():
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# serialize_parts / deserialize(copy=False)
+# ---------------------------------------------------------------------------
+
+
+def test_serialize_parts_wire_identical():
+    """header + joined views must be byte-identical to serialize(): the
+    scatter-gather send path needs zero receiver-side changes."""
+    m = PlainMessage(POINT_CLOUD2)
+    m.data = np.arange(1000, dtype=np.uint8).reshape(-1)[:1000] % 251
+    m.stamp = 42.5
+    header, views = serialize_parts(m)
+    assert header + b"".join(bytes(v) for v in views) == serialize(m)
+
+
+def test_deserialize_copy_false_returns_views():
+    m = PlainMessage(POINT_CLOUD2)
+    m.data = (np.arange(4096) % 256).astype(np.uint8)
+    m.stamp = 1.0
+    buf = serialize(m)
+    fields = deserialize(buf, copy=False)
+    np.testing.assert_array_equal(fields["data"],
+                                  (np.arange(4096) % 256).astype(np.uint8))
+    # zero-copy: the array is a read-only view over the caller's buffer
+    assert not fields["data"].flags.writeable
+    assert fields["data"].base is not None
+    # copy=True (default) stays a private, writable copy
+    owned = deserialize(buf)
+    owned["data"][0] = 7  # must not raise
+    assert owned["data"].flags.writeable
+
+
+# ---------------------------------------------------------------------------
+# registry pins (cross-bridge lease on loaned entries)
+# ---------------------------------------------------------------------------
+
+
+def test_pin_blocks_reclaim_until_unpin():
+    with Domain.create(arena_capacity=8 << 20) as dom:
+        pub = dom.create_publisher(POINT_CLOUD2, "t/pin", depth=4)
+        sub = dom.create_subscription(POINT_CLOUD2, "t/pin")
+        _publish(pub, 1)
+        ptr = sub.take()[0]
+        seq = ptr.seq
+        assert dom.registry.pin(pub.tidx, pub.pidx, seq, 10.0, gen=pub.tgen)
+        ptr.release()
+        # fully released, but the pin holds the entry for the remote reader
+        assert dom.registry.reclaimable(pub.tidx, pub.pidx) == []
+        dom.registry.unpin(pub.tidx, pub.pidx, seq, gen=pub.tgen)
+        assert dom.registry.reclaimable(pub.tidx, pub.pidx) == [seq]
+
+
+def test_pin_lease_expiry_reclaims():
+    """A crashed pinner cannot wedge the ring: past the lease deadline the
+    owner reclaims as if the pin were gone."""
+    with Domain.create(arena_capacity=8 << 20) as dom:
+        pub = dom.create_publisher(POINT_CLOUD2, "t/lease", depth=4)
+        sub = dom.create_subscription(POINT_CLOUD2, "t/lease")
+        _publish(pub, 1)
+        ptr = sub.take()[0]
+        seq = ptr.seq
+        assert dom.registry.pin(pub.tidx, pub.pidx, seq, 0.05, gen=pub.tgen)
+        ptr.release()
+        assert dom.registry.reclaimable(pub.tidx, pub.pidx) == []
+        time.sleep(0.08)
+        assert dom.registry.reclaimable(pub.tidx, pub.pidx) == [seq]
+
+
+def test_pin_missing_entry_returns_false():
+    with Domain.create(arena_capacity=8 << 20) as dom:
+        pub = dom.create_publisher(POINT_CLOUD2, "t/none", depth=4)
+        assert not dom.registry.pin(pub.tidx, pub.pidx, 99, 1.0, gen=pub.tgen)
+
+
+# ---------------------------------------------------------------------------
+# attach-by-name relay (same-host control/data split)
+# ---------------------------------------------------------------------------
+
+
+def _mk_pair(bus, topic, **kw):
+    domA = Domain.create(arena_capacity=16 << 20)
+    domB = Domain.create(arena_capacity=16 << 20)
+    brA = DomainBridge(domA, bus.path, name="A", **kw)
+    brB = DomainBridge(domB, bus.path, name="B", **kw)
+    brA.attach(POINT_CLOUD2, topic)
+    brB.attach(POINT_CLOUD2, topic)
+    return domA, domB, brA, brB
+
+
+@pytest.mark.parametrize("mode", ["ref", "copy"])
+def test_attach_relay_delivers(mode):
+    """data_plane="attach": only the control frame transits the bus; the
+    receiver reads the fields out of the source arena (ref: republishes the
+    descriptor verbatim — subscribers see the *source* arena)."""
+    topic = "t/attach"
+    bus = Bus().start()
+    domA, domB, brA, brB = _mk_pair(bus, topic, data_plane="attach",
+                                    attach_mode=mode, pin_lease_s=5.0)
+    try:
+        pub = domA.create_publisher(POINT_CLOUD2, topic, depth=8)
+        sub = domB.create_subscription(POINT_CLOUD2, topic)
+        time.sleep(0.2)  # SUB frames land
+        got = []
+        for i in range(3):
+            _publish(pub, i + 1)
+        assert _pump_until(lambda: len(got) >= 3 or _take(sub, got) >= 3,
+                           brA, brB)
+        assert [v for v, _ in got] == [1, 2, 3]
+        if mode == "ref":
+            # true zero-copy: the delivered views live in A's arena
+            assert all(a == domA.arena.name for _, a in got)
+        assert brA.attach_out == 3
+        assert brB.attach_in == 3
+        assert brA.attach_fallbacks == 0
+        # acks settle the pins (ref: after release+reclaim sweep)
+        assert _pump_until(lambda: not brA._awaiting, brA, brB, timeout=5.0)
+    finally:
+        brA.close()
+        brB.close()
+        domA.close()
+        domB.close()
+        bus.stop()
+
+
+def _take(sub, got):
+    for ptr in sub.take():
+        got.append((int(np.asarray(ptr.data)[0]), ptr.msg.arena_name))
+        ptr.release()
+    return len(got)
+
+
+def test_attach_fanout_zero_settles_without_fallback():
+    """A control frame with no remote subscriber behaves like conventional
+    pub/sub with no subscriber: the pin is dropped at the FANOUT receipt,
+    no fallback, no timeout."""
+    topic = "t/nobody"
+    bus = Bus().start()
+    dom = Domain.create(arena_capacity=8 << 20)
+    br = DomainBridge(dom, bus.path, name="A", data_plane="attach")
+    br.attach(POINT_CLOUD2, topic)
+    try:
+        pub = dom.create_publisher(POINT_CLOUD2, topic, depth=4)
+        _publish(pub, 9)
+        br.pump_agnocast()
+        assert len(br._awaiting) == 1
+        deadline = time.monotonic() + 5
+        while br._awaiting and time.monotonic() < deadline:
+            br.pump_bus(0.05)
+        assert not br._awaiting
+        assert br.attach_fallbacks == 0
+        assert br.ack_timeouts == 0
+    finally:
+        br.close()
+        dom.close()
+        bus.stop()
+
+
+def test_attach_failure_nacks_and_falls_back_exactly_once():
+    """Satellite: a control frame whose data read fails (source arena
+    unlinked before the receiver ever attached it) must forget() its dedup
+    key and be re-delivered over the serialized path exactly once — never
+    dropped, never duplicated."""
+    topic = "t/unlink"
+    bus = Bus().start()
+    domA, domB, brA, brB = _mk_pair(bus, topic, data_plane="attach",
+                                    attach_mode="copy", pin_lease_s=5.0)
+    try:
+        pub = domA.create_publisher(POINT_CLOUD2, topic, depth=8)
+        sub = domB.create_subscription(POINT_CLOUD2, topic)
+        time.sleep(0.2)
+        _publish(pub, 7)
+        brA.pump_agnocast()  # CTRL sent, pin held
+        assert len(brA._awaiting) == 1
+        # unlink the source arena NAME: A's own mapping (and the pinned
+        # payload) stays valid, but attach-by-name on B now fails
+        domA.arena.unlink()
+        brB.pump_bus(0.5)  # CTRL arrives -> attach fails -> NACK + forget
+        assert brB.attach_nacks == 1
+        assert brB.relayed_in == 0
+        brA.pump_bus(0.5)  # receipt + NACK -> serialized fallback, unpin
+        assert brA.attach_fallbacks == 1
+        assert not brA._awaiting
+        got = []
+        assert _pump_until(lambda: _take(sub, got) >= 1, brA, brB)
+        assert [v for v, _ in got] == [7]
+        # settle: the fallback must not deliver twice
+        for _ in range(5):
+            brA.pump_bus(0.02)
+            brB.pump_bus(0.02)
+        _take(sub, got)
+        assert [v for v, _ in got] == [7]
+    finally:
+        brA.close()
+        brB.close()
+        domA.close()
+        domB.close()
+        bus.stop()
+
+
+def test_ack_timeout_falls_back_when_receiver_dies():
+    """Receiver bridge killed after the CTRL was sent: the sender's ack
+    timeout degrades the message to a serialized re-send (picked up by a
+    replacement bridge) instead of leaking the pin."""
+    topic = "t/dead"
+    bus = Bus().start()
+    domA, domB, brA, brB = _mk_pair(bus, topic, data_plane="attach",
+                                    attach_mode="copy", pin_lease_s=0.4)
+    try:
+        pub = domA.create_publisher(POINT_CLOUD2, topic, depth=8)
+        time.sleep(0.2)
+        _publish(pub, 3)
+        brA.pump_agnocast()
+        assert len(brA._awaiting) == 1
+        time.sleep(0.2)  # CTRL fan-out reaches brB's socket (fanout = 1)
+        brB.close()  # dies without ever reading the CTRL
+        deadline = time.monotonic() + 5
+        while brA._awaiting and time.monotonic() < deadline:
+            brA.pump_bus(0.05)
+        assert not brA._awaiting
+        assert brA.attach_fallbacks == 1
+        # the pin is gone: the ring slot becomes reclaimable again
+        sub = domA.create_subscription(POINT_CLOUD2, topic)
+        assert pub.reclaim() >= 0  # no wedge; smoke that reclaim runs
+    finally:
+        brA.close()
+        domA.close()
+        domB.close()
+        bus.stop()
+
+
+# ---------------------------------------------------------------------------
+# bus head-of-line fix (bounded backlog fan-out)
+# ---------------------------------------------------------------------------
+
+
+def test_bus_slow_subscriber_does_not_block_others():
+    """One stalled subscriber must not stall the bus: its backlog is shed
+    (counted) while a draining subscriber receives everything."""
+    bus = Bus(max_backlog=1 << 20).start()
+    slow = BusClient(bus.path)
+    fast = BusClient(bus.path)
+    sender = BusClient(bus.path)
+    try:
+        slow.subscribe("t/hol")
+        fast.subscribe("t/hol")
+        time.sleep(0.2)
+        payload = b"\x5a" * (512 << 10)  # 512 KiB frames vs 1 MiB backlog
+        got = 0
+        for i in range(12):
+            sender.publish("t/hol", payload, route_seq=i)
+            fr = fast.recv_frame(5.0)  # drain fast so only slow backs up
+            assert fr is not None and fr.payload == payload
+            got += 1
+        assert got == 12
+        deadline = time.monotonic() + 5
+        while bus.dropped_backlog == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert bus.dropped_backlog > 0  # slow's overflow was shed, not fatal
+    finally:
+        slow.close()
+        fast.close()
+        sender.close()
+        bus.stop()
