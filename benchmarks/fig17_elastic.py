@@ -1,0 +1,304 @@
+"""Fig. 17: the elastic serving fleet under churn — kill + grow mid-load.
+
+One run, three phases on a single domain:
+
+* **steady** — K echo replicas behind the rid-hash router, closed-loop
+  load (≈2 fleets outstanding); per-rid latency (submit → eos) gives the
+  steady-state baseline;
+* **transition** — SIGKILL the deepest replica AND scale one fresh
+  replica up, mid-load, with the ``FleetController`` ticking on the head
+  executor: death detection → ring shrink + generation-stamped replay →
+  respawn → re-add on ready, while the scale-up shard joins the same way.
+  Latency of every rid submitted after the kill gives the transition
+  sample;
+* **admission** — a separate small fleet is offered a burst far over its
+  rid budget: policy ``shed`` must refuse the excess (counted, surfaced,
+  no crash) and complete exactly the admitted set; policy ``queue`` must
+  park the excess head-side and finish everything.
+
+Gates (``--smoke`` = CI):
+
+* zero request loss and exactly-once completion across the kill + grow
+  transition (hard, like fig16 — correctness does not depend on the
+  runner being quiet);
+* post-transition p99 ≤ 3x steady-state p99 (one bounded re-measure
+  absorbs shared-runner preemption bursts, the fig13/fig14 policy);
+* admission: ``shed + completed == offered`` with ``shed > 0`` under a
+  2x-budget burst, and queue mode completes the full offered set.
+
+    PYTHONPATH=src python -m benchmarks.fig17_elastic [--smoke] [--model echo]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import HEADER, Stats, save_json
+from repro.core import Domain, EventExecutor
+from repro.serving import (
+    FleetController,
+    ReplicaPool,
+    ResultsCollector,
+    ShardRouter,
+)
+
+K = 3
+MAX_NEW = 8
+SLOTS = 4
+ROUND_PERIOD_S = 0.02   # the device-round pace (host sleeps on epoll)
+PROMPT_LEN = 16
+N_STEADY = 24
+N_TRANSITION = 36
+ADMIT_BUDGET = 8
+ADMIT_OFFERED = 48
+P99_FACTOR = 3.0
+
+
+def run_transition(k: int = K, *, model: str = "echo",
+                   timeout: float = 240.0) -> dict:
+    """Steady-state load, then a mid-load kill + scale-up transition."""
+    dom = Domain.create(arena_capacity=64 << 20)
+    pool = ReplicaPool(dom, range(k), model=model, slots=SLOTS,
+                       round_period_s=ROUND_PERIOD_S, arena_mb=32)
+    try:
+        pool.wait_ready(timeout=120.0)
+        collector = ResultsCollector(dom, shards=range(k))
+        router = ShardRouter(dom, range(k), max_new=MAX_NEW)
+        controller = FleetController(
+            pool, router, collector, min_k=1, max_k=k + 2,
+            autoscale=False,           # the transition is scripted below
+            respawn=True, stall_replay_s=8.0, flush_timeout_s=5.0)
+        lat: dict[int, float] = {}
+        completions: dict[int, int] = {}
+        rng = np.random.default_rng(17)
+        backlog = [0]
+        rids: list[int] = []
+
+        def submit_more():
+            window = max(2 * len(router.ring) * SLOTS, 8)
+            while backlog[0] > 0 and len(router.inflight) < window:
+                rids.append(router.submit(
+                    rng.integers(0, 500, PROMPT_LEN, dtype=np.int32)))
+                backlog[0] -= 1
+            router.flush(timeout=5.0)
+
+        def on_complete(rid, tokens):
+            completions[rid] = completions.get(rid, 0) + 1
+            rec = router.inflight.get(rid)
+            if rec is not None:
+                lat[rid] = time.monotonic() - rec.stamp
+            router.complete(rid)
+            submit_more()
+
+        collector.on_complete = on_complete
+        collector.on_progress = router.touch
+        ex = EventExecutor(name="fig17-head")
+        collector.attach_executor(ex)
+        controller.attach_executor(ex, period_s=0.05)
+
+        # phase A: steady state
+        backlog[0] = N_STEADY
+        submit_more()
+        ex.spin(until=lambda: len(completions) >= N_STEADY, timeout=timeout)
+        if len(completions) < N_STEADY:
+            raise RuntimeError(f"steady phase stalled: {router.stats()} "
+                               f"{collector.stats()}")
+        steady = Stats.of("fig17_steady", [lat[r] for r in rids if r in lat])
+
+        # phase B: kill the deepest replica + scale one up, under load
+        backlog[0] = N_TRANSITION
+        submit_more()
+        per_shard: dict[int, int] = {}
+        for rec in router.inflight.values():
+            per_shard[rec.shard] = per_shard.get(rec.shard, 0) + 1
+        victim = max(per_shard, key=per_shard.get) if per_shard else 0
+        transition_rids = set(rids) - set(lat)   # in flight at the kill...
+        pool.kill(victim)
+        added = controller.scale_up()
+        mark = len(rids)
+        n_target = N_STEADY + N_TRANSITION
+        ex.spin(until=lambda: len(completions) >= n_target, timeout=timeout)
+        transition_rids |= set(rids[mark:])      # ...plus everything after
+        done = len(completions)
+        # let the respawn finish joining even if load drained first
+        ex.spin(until=lambda: (controller.respawns >= 1
+                               and victim in router.ring
+                               and added in router.ring),
+                timeout=60.0)
+        ex.shutdown()
+        if done < n_target:
+            raise RuntimeError(f"transition phase stalled: {router.stats()} "
+                               f"{controller.stats()} {collector.stats()}")
+
+        trans = Stats.of("fig17_transition",
+                         [lat[r] for r in transition_rids if r in lat])
+        results = dict(collector.pop_completed())
+        missing = [r for r in rids if r not in results]
+        dup = [r for r, n in completions.items() if n != 1]
+        out = {
+            "k": k,
+            "n_requests": len(rids),
+            "victim": victim,
+            "added_shard": added,
+            "missing_rids": len(missing),
+            "duplicate_completions": len(dup),
+            "bad_streams": sum(1 for r in rids
+                               if len(results.get(r, ())) != MAX_NEW),
+            "steady": steady.__dict__,
+            "transition": trans.__dict__,
+            "p99_ratio": trans.p99 / max(steady.p99, 1e-9),
+            "ring": [int(s) for s in router.ring.shards],
+            "respawns": controller.respawns,
+            "victim_incarnation": pool.incarnation(victim),
+            "router": router.stats(),
+            "controller": controller.stats(),
+            "collector": collector.stats(),
+            "pool": pool.stats(),
+        }
+        print(steady.row(), flush=True)
+        print(trans.row(), flush=True)
+        router.close()
+        collector.close()
+        return out
+    finally:
+        try:
+            pool.stop()
+        finally:
+            dom.close()
+
+
+def run_admission(*, policy: str, model: str = "echo",
+                  timeout: float = 120.0) -> dict:
+    """Offer a burst far beyond the fleet's rid budget."""
+    k = 2
+    dom = Domain.create(arena_capacity=32 << 20)
+    pool = ReplicaPool(dom, range(k), model=model, slots=SLOTS,
+                       round_period_s=ROUND_PERIOD_S, arena_mb=16)
+    try:
+        pool.wait_ready(timeout=120.0)
+        collector = ResultsCollector(dom, shards=range(k))
+        router = ShardRouter(dom, range(k), max_new=MAX_NEW,
+                             max_inflight_rids=ADMIT_BUDGET,
+                             admission=policy, queue_limit=ADMIT_OFFERED)
+        completions: dict[int, int] = {}
+
+        def on_complete(rid, tokens):
+            completions[rid] = completions.get(rid, 0) + 1
+            router.complete(rid)
+
+        collector.on_complete = on_complete
+        collector.on_progress = router.touch
+        ex = EventExecutor(name="fig17-admit")
+        collector.attach_executor(ex)
+        ex.add_timer(0.05, lambda: router.flush(timeout=5.0))
+        prompt = np.arange(PROMPT_LEN, dtype=np.int32)
+        admitted = [r for _ in range(ADMIT_OFFERED)
+                    if (r := router.submit(prompt)) is not None]
+        router.flush(timeout=5.0)
+        ex.spin(until=lambda: len(completions) >= len(admitted),
+                timeout=timeout)
+        ex.shutdown()
+        st = router.stats()
+        out = {
+            "policy": policy,
+            "offered": ADMIT_OFFERED,
+            "budget": ADMIT_BUDGET,
+            "admitted": len(admitted),
+            "completed": len(completions),
+            "duplicates": sum(1 for n in completions.values() if n != 1),
+            "shed": st["shed"],
+            "queued_total": st["queued_total"],
+            "router": st,
+        }
+        router.close()
+        collector.close()
+        return out
+    finally:
+        try:
+            pool.stop()
+        finally:
+            dom.close()
+
+
+def main(smoke: bool = False, model: str = "echo") -> dict:
+    print(f"# fig17-elastic: kill+grow transition, K={K}, "
+          f"{N_STEADY}+{N_TRANSITION} requests x {MAX_NEW} tokens, "
+          f"model={model}{', smoke' if smoke else ''}")
+    print(HEADER)
+    res: dict = {"ok": True, "checks": []}
+
+    def check(name: str, passed: bool, detail: str = ""):
+        res["checks"].append({"name": name, "ok": bool(passed),
+                              "detail": detail})
+        if not passed:
+            res["ok"] = False
+            print(f"# FAIL {name}: {detail}")
+
+    r = run_transition(K, model=model)
+    # a shared runner's preemption burst inside the short transition window
+    # can blow the latency sample without meaning anything — re-measure once
+    # (fig13/fig14 policy); zero-loss/exactly-once are never retried away,
+    # they gate on every run (the retry run replaces the whole sample)
+    if (r["p99_ratio"] > P99_FACTOR and r["missing_rids"] == 0
+            and r["duplicate_completions"] == 0):
+        print(f"# transition p99 noisy ({r['p99_ratio']:.2f}x), re-measuring")
+        r = run_transition(K, model=model)
+    res["transition"] = r
+    check("zero_loss", r["missing_rids"] == 0,
+          f"{r['missing_rids']} rids never completed")
+    check("exactly_once", r["duplicate_completions"] == 0,
+          f"{r['duplicate_completions']} rids completed more than once")
+    check("streams_exact", r["bad_streams"] == 0,
+          f"{r['bad_streams']} wrong-length streams")
+    check("respawned_and_rejoined",
+          r["respawns"] >= 1 and r["victim"] in r["ring"]
+          and r["victim_incarnation"] >= 1,
+          f"respawns={r['respawns']} ring={r['ring']}")
+    check("scaled_up", r["added_shard"] in r["ring"],
+          f"shard {r['added_shard']} not in ring {r['ring']}")
+    check("p99_bounded", r["p99_ratio"] <= P99_FACTOR,
+          f"transition p99 {r['p99_ratio']:.2f}x steady "
+          f"(> {P99_FACTOR:.0f}x)")
+    print(f"# transition p99 = {r['p99_ratio']:.2f}x steady "
+          f"(respawns={r['respawns']}, steals={r['router']['steals']})")
+
+    a = run_admission(policy="shed", model=model)
+    res["admission_shed"] = a
+    check("admission_sheds", a["shed"] > 0 and a["admitted"] < a["offered"],
+          f"shed={a['shed']} admitted={a['admitted']}/{a['offered']}")
+    check("admission_shed_exact",
+          a["completed"] == a["admitted"] and a["duplicates"] == 0
+          and a["shed"] + a["admitted"] == a["offered"],
+          f"completed={a['completed']} admitted={a['admitted']} "
+          f"shed={a['shed']}")
+    q = run_admission(policy="queue", model=model)
+    res["admission_queue"] = q
+    check("admission_queue_drains",
+          q["completed"] == q["offered"] and q["duplicates"] == 0
+          and q["queued_total"] > 0,
+          f"completed={q['completed']}/{q['offered']} "
+          f"queued_total={q['queued_total']}")
+    print(f"# admission: shed {a['shed']}/{a['offered']} at budget "
+          f"{a['budget']}; queue drained {q['completed']}/{q['offered']}")
+
+    save_json("fig17_elastic", res)
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI gate: kill+grow transition with "
+                         "bounded p99 + zero loss, admission shed/queue")
+    ap.add_argument("--model", default="echo",
+                    help="'echo' (control-plane focus) or 'jax'")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke, model=args.model)
+    if not out["ok"]:
+        raise SystemExit("fig17-elastic checks failed: "
+                         + "; ".join(c["name"] for c in out["checks"]
+                                     if not c["ok"]))

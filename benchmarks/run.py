@@ -19,14 +19,14 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale smoke (CI gate): fig11/fig14/fig15/"
-                         "fig16/hotpath/serving only unless --only says "
-                         "otherwise")
+                         "fig16/fig17/hotpath/serving only unless --only "
+                         "says otherwise")
     ap.add_argument("--only", default="",
                     help="comma list: fig9,fig10,fig11,fig12,fig13,fig14,"
-                         "fig15,fig16,hotpath,serving,roofline")
+                         "fig15,fig16,fig17,hotpath,serving,roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "fig11,fig14,fig15,fig16,hotpath,serving"
+        args.only = "fig11,fig14,fig15,fig16,fig17,hotpath,serving"
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
     n10 = 600 if args.full else (60 if args.quick else 200)
@@ -127,6 +127,17 @@ def main(argv=None) -> int:
             for c in res["checks"]:
                 if not c["ok"]:
                     print(f"# FAIL serving/{c['name']}: {c['detail']}")
+            failures += 1
+    if want("fig17"):
+        from benchmarks import fig17_elastic
+        # elastic-fleet churn: kill + scale-up mid-load.  Zero loss and
+        # exactly-once are hard gates like fig16; the transition-p99 bound
+        # gets one bounded re-measure inside main() before it can fail
+        res = fig17_elastic.main(smoke=args.smoke or args.quick)
+        if not res["ok"]:
+            for c in res["checks"]:
+                if not c["ok"]:
+                    print(f"# FAIL fig17/{c['name']}: {c['detail']}")
             failures += 1
     if want("roofline"):
         from benchmarks import roofline

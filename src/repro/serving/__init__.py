@@ -1,38 +1,75 @@
-"""Sharded serving plane: rid-hash routing, replica pool, reassembly.
+"""Elastic sharded serving plane: routing, admission, reassembly, and the
+fleet control loop (respawn / autoscale / admission control / stealing).
 
 The first subsystem composed *on top of* the agnocast core rather than
 inside it: the Fig. 13 pipeline shape (many nodes, large messages,
 selective zero-copy paths) applied to production-style serving.  K server
 replicas each own one request shard topic; payloads stay in shared memory
-from router to replica to collector.
+from router to replica to collector — and K is no longer static: the
+control loop grows, shrinks, and heals the fleet under load.
 
-    router (head)            replicas (K procs)          collector (head)
-    ShardRouter ──serve/req/k──▶ EchoServer /      ──serve/res──▶ ResultsCollector
+    router (head)            replicas (K procs, elastic)   collector (head)
+    ShardRouter ──serve/req/k──▶ EchoServer /      ──serve/res/k──▶ ResultsCollector
       consistent hash on rid     InferenceServer               seq window +
-      publish_blocking/shard     one EventExecutor each        gap detection +
-      replay gen+1 on loss       lease heartbeats              gen supersede
+      admission shed/queue       one EventExecutor each        gap detection +
+      replay gen+1 on loss       lease heartbeats +            gen supersede
+      steal to drained shards    idle-depth beacon             per-shard snapshot
+                 ▲                          ▲
+                 └────── FleetController ───┘
+                   respawn dead shards (fresh incarnation, re-add on ready)
+                   scale K up/down on sustained depth (ring moves ~1/K rids)
+                   steal cold rids deep→drained through the generation gate
+
+The elastic loop in one pass (see :mod:`repro.serving.controller`):
+**respawn** — a dead replica's shard leaves the ring (its in-flight rids
+replay onto survivors, generation+1), a fresh incarnation spawns with its
+own ready/stop events, and the shard rejoins the ring only once the new
+process subscribed; **autoscale** — sustained outstanding-rids-per-replica
+above/below thresholds spawns/retires replicas between ``min_k`` and
+``max_k``, with consistent hashing bounding every membership change's rid
+movement to ~1/K; **admission control** — the router sheds (or queues) new
+rids at a byte/rid budget instead of hashing bursts into a saturated
+fleet; **work stealing** — a drained replica pulls cold rids from the
+deepest shard, racing it through the same generation gate that makes
+death-replay exactly-once.
+
+Liveness-cache invalidation rules: the pool caches each shard's request
+topic index for the lease poll, but trusts it only while the topic row's
+generation matches the value captured at resolve time (layout v4 recycles
+topic slots); the cache is also dropped eagerly on every death, respawn,
+and retire.  Process handles (``Process``/ready/stop) are keyed off the
+*current incarnation* — after a respawn, ``kill``/``wait_ready`` can never
+target a dead predecessor's objects.
 
 * :mod:`repro.serving.hashring` — consistent rid→shard assignment: only
   ~1/K of rids move when the replica set changes;
 * :mod:`repro.serving.messages` — ``SERVE_REQ``/``SERVE_RES`` unsized
-  schemas (ragged token rows + per-row rid/gen/seq/eos metadata);
+  schemas (ragged token rows + per-row rid/gen/seq/eos metadata) and the
+  shared :class:`GenerationGate`;
 * :mod:`repro.serving.router` — ``ShardRouter``: per-shard batched
   publishes with event-driven backpressure, in-flight tracking, replay
-  (generation+1) on replica loss or stalled streams, optional load-aware
-  tie-breaking off the collector's per-shard snapshot;
+  (generation+1) on replica loss or stalled streams, admission
+  shed/queue at a rid/byte budget, directed work stealing, and
+  flush-time (rid, generation, shard) reconciliation so superseded
+  buffered rows never double-publish;
 * :mod:`repro.serving.replica` — the replica process entrypoint (real
   ``InferenceServer`` or the jax-free ``EchoServer``), streaming each
-  decode round's tokens as one results publish;
+  decode round's tokens as one results publish, heartbeating its lease
+  and an idle-depth beacon;
 * :mod:`repro.serving.collector` — ``ResultsCollector``: windowed
   in-order per-rid reassembly, exactly-once completion, per-shard
-  depth/latency stats;
-* :mod:`repro.serving.pool` — ``ReplicaPool``: spawn/own the replicas,
-  detect loss by PID death *and* registry subscriber leases, drive the
-  re-hash + replay.
+  depth/latency stats, late-joining shard topics via ``watch``;
+* :mod:`repro.serving.pool` — ``ReplicaPool``: spawn/respawn/retire the
+  replica processes (one incarnation at a time per shard), detect loss
+  by PID death *and* generation-validated registry subscriber leases;
+* :mod:`repro.serving.controller` — ``FleetController``: the tick that
+  closes the loop (death handling, ready re-adds, autoscale, stealing,
+  stall replay, flush).
 """
 
 from .attach import attach_server_executor
 from .collector import ResultsCollector
+from .controller import FleetController
 from .hashring import HashRing
 from .messages import (
     SERVE_REQ,
@@ -53,5 +90,5 @@ __all__ = [
     "pack_requests", "iter_requests", "pack_results", "iter_results",
     "HashRing", "ShardRouter", "InFlight",
     "ResultsCollector", "ReplicaPool", "EchoServer", "replica_main",
-    "attach_server_executor",
+    "FleetController", "attach_server_executor",
 ]

@@ -79,6 +79,8 @@ class ResultsCollector:
         self.on_complete = on_complete      # callable(rid, tokens)
         self.on_progress = on_progress      # callable(rid)
         self.window_limit = window_limit
+        self._executor = None               # remembered by attach_executor so
+        self._group = None                  # watch() can wire late shards in
         self._streams: dict[int, _Stream] = {}
         self._completed: OrderedDict[int, list[int]] = OrderedDict()
         self._done_rids: OrderedDict[int, bool] = OrderedDict()  # bounded
@@ -96,9 +98,28 @@ class ResultsCollector:
 
     def attach_executor(self, executor, *, group=None):
         """Multiplex every results subscription into an EventExecutor loop
-        (one handle per shard topic; returns them all)."""
+        (one handle per shard topic; returns them all).  The executor is
+        remembered so :meth:`watch` can wire later-joining shards in."""
+        self._executor, self._group = executor, group
         return [executor.add_subscription(sub, self._on_msg, group=group)
                 for sub in self.subs]
+
+    def watch(self, shard: int) -> bool:
+        """Subscribe to one more shard's results topic (``<topic>/<k>``) —
+        the elastic-fleet hook: a freshly scaled-up replica publishes on a
+        topic no constructor-time subscription covers.  Idempotent (a
+        respawned shard reuses its old topic, so its subscription already
+        exists); only meaningful in sharded mode.  Returns True when a new
+        subscription was created."""
+        name = f"{self.topic}/{int(shard)}"
+        if any(s.topic == name for s in self.subs):
+            return False
+        sub = self.dom.create_subscription(SERVE_RES, name)
+        self.subs.append(sub)
+        if self._executor is not None:
+            self._executor.add_subscription(sub, self._on_msg,
+                                            group=self._group)
+        return True
 
     def pump(self, timeout: float = 0.05) -> int:
         """Standalone take loop (tests / executor-less heads): drain every

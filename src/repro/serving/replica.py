@@ -287,9 +287,29 @@ def replica_main(dom_name: str, shard: int, req_topic: str, res_topic: str, *,
             ingest=lambda ptr: server.ingest_serve_message(ptr,
                                                            max_new=max_new),
             on_round_end=round_flush)
-    # idle heartbeat: take() stamps the lease while busy; this covers quiet
-    ex.add_timer(lease_period_s,
-                 lambda: dom.registry.refresh_lease(sub.tidx, sub.sidx))
+    # idle heartbeat: take() stamps the lease while busy; this covers quiet.
+    # It also beacons an empty SERVE_RES once per drain transition — the
+    # collector's per-shard depth snapshot otherwise only updates on result
+    # publishes, so a drained replica would look as deep as its last busy
+    # round forever, and the controller's steal / scale-down decisions key
+    # off depth reaching zero.
+    last_depth = [-1]
+
+    def heartbeat():
+        dom.registry.refresh_lease(sub.tidx, sub.sidx)
+        depth = len(server.queue) + len(server._active)
+        if depth == 0 and not rows and last_depth[0] != 0:
+            loan = res_pub.borrow_loaded_message()
+            pack_results(loan, [], shard=shard, depth=0,
+                         stamp=time.monotonic())
+            try:
+                res_pub.publish(loan)
+            except AgnocastQueueFull:
+                loan.dealloc()  # collector lagging: it has fresher problems
+                return
+        last_depth[0] = depth
+
+    ex.add_timer(lease_period_s, heartbeat)
     if ready_event is not None:
         ready_event.set()
     try:

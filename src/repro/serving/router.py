@@ -1,4 +1,4 @@
-"""rid-hash router: the serving plane's ingest sharder.
+"""rid-hash router: the serving plane's ingest sharder + admission gate.
 
 One ``ShardRouter`` owns a publisher per request shard topic
 (``<prefix>/<k>``) and consistent-hashes every request id onto the live
@@ -15,9 +15,36 @@ The router is also the replay authority.  It records every in-flight rid
   in-flight rids onto the survivors, each with ``generation+1`` — the
   replica-side generation gate and the collector's supersede rule turn
   "at least once" into "exactly once";
+* a respawned or freshly scaled-up replica joins through ``add_shard``
+  (consistent hashing bounds future-rid movement to ~1/K; in-flight rids
+  keep their recorded assignment) — its publisher is *revived from the
+  parked set* when the shard served before, because registry publisher
+  slots free only with the process: closing + re-creating one per death
+  would leak a slot per respawn cycle (MAX_PUBS is finite);
 * a rid whose stream stalls (lost result chunks, e.g. a QoS drop under
   extreme collector lag) can be replayed individually (``replay``) after
-  ``stalled`` flags it.
+  ``stalled`` flags it;
+* a drained replica can *steal* queued work: ``steal`` re-targets
+  not-yet-progressed rids from the deepest shard onto the drained one
+  with ``generation+1`` — the same SERVE_REQ generation gate that makes
+  death-replay exactly-once makes a steal race (both replicas decode the
+  rid) resolve to exactly one completion.
+
+Replay records and buffered rows are reconciled at flush time: every
+pending row is published only if its (rid, generation, shard) still
+matches the live replay record, and duplicate (rid, generation) rows are
+dropped — a row parked in ``_pending`` by a flush stall and then
+superseded by ``replay``/``steal``/``remove_shard`` can therefore never
+ship alongside its replacement (the double-buffering bug a static fleet
+never exercises).
+
+**Admission control**: with ``max_inflight_rids``/``max_inflight_bytes``
+set, ``submit`` stops hashing new work into a saturated fleet.  Policy
+``"shed"`` refuses (returns ``None``, counted in ``shed``); ``"queue"``
+parks up to ``queue_limit`` requests head-side and admits them as
+completions free budget (beyond the queue limit it sheds).  Both are
+surfaced via ``stats()`` — a burst beyond the fleet's budget degrades to
+refusals, never to unbounded in-flight state or a crash.
 
 Load-aware tie-breaking (optional): with ``load_aware=True`` a new rid
 may take the ring's *second* candidate when the primary is deeper than
@@ -35,6 +62,7 @@ from __future__ import annotations
 
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -58,26 +86,42 @@ class InFlight:
     tokens: np.ndarray
     stamp: float                      # first submit (latency measurements)
     last_progress: float = field(default=0.0)  # last in-order chunk advance
+    progressed: bool = field(default=False)    # any chunk landed since the
+    #                                            current (re)assignment —
+    #                                            steal only takes cold rids
 
 
 class ShardRouter:
     def __init__(self, dom: Domain, shards, *, prefix: str = "serve/req",
                  depth: int = 8, max_new: int = 16, vnodes: int = 64,
                  load_aware: bool = False, load_slack: int = 4,
-                 stats_fn=None):
+                 stats_fn=None, max_inflight_rids: int | None = None,
+                 max_inflight_bytes: int | None = None,
+                 admission: str = "shed", queue_limit: int = 1024):
+        if admission not in ("shed", "queue"):
+            raise ValueError("admission must be 'shed' or 'queue'")
         self.dom = dom
         self.prefix = prefix
+        self.depth = depth
         self.max_new = max_new
         self.load_aware = load_aware
         self.load_slack = load_slack
         self.stats_fn = stats_fn
+        self.max_inflight_rids = max_inflight_rids
+        self.max_inflight_bytes = max_inflight_bytes
+        self.admission = admission
+        self.queue_limit = queue_limit
         self.ring = HashRing(shards, vnodes=vnodes)
         self.pubs: dict[int, Publisher] = {
             k: dom.create_publisher(SERVE_REQ, self.topic(k), depth=depth)
             for k in self.ring.shards
         }
+        self._parked: dict[int, Publisher] = {}  # ex-shard pubs, revivable
         self.inflight: dict[int, InFlight] = {}
+        self.inflight_bytes = 0
         self._pending: dict[int, list[ReqRow]] = {}
+        self._queue: deque[tuple[int, np.ndarray, float]] = deque()
+        self._queued_rids: set[int] = set()
         self._shard_load: dict[int, int] = {k: 0 for k in self.ring.shards}
         self._rid_counter = itertools.count(1)
         # counters (observability + tests)
@@ -86,6 +130,11 @@ class ShardRouter:
         self.completions = 0
         self.tie_breaks = 0
         self.flush_stalls = 0
+        self.shed = 0
+        self.shed_bytes = 0
+        self.queued_total = 0
+        self.steals = 0
+        self.dropped_superseded = 0
 
     # -- assignment -----------------------------------------------------------
 
@@ -109,37 +158,94 @@ class ShardRouter:
             return alt
         return primary
 
-    # -- submission -----------------------------------------------------------
+    # -- submission + admission -----------------------------------------------
 
-    def submit(self, tokens, *, rid: int | None = None,
-               shard: int | None = None) -> int:
-        """Buffer one request for its hashed shard (``flush`` publishes).
-        ``shard`` pins the assignment (warmup / tests)."""
-        rid = self.next_rid() if rid is None else int(rid)
-        if rid in self.inflight:
-            raise ValueError(f"rid {rid} is already in flight")
+    def _within_budget(self, nbytes: int) -> bool:
+        if (self.max_inflight_rids is not None
+                and len(self.inflight) >= self.max_inflight_rids):
+            return False
+        if (self.max_inflight_bytes is not None
+                and self.inflight_bytes + nbytes > self.max_inflight_bytes):
+            return False
+        return True
+
+    def _admit(self, rid: int, toks: np.ndarray, stamp: float,
+               shard: int | None = None) -> None:
         shard = self.route(rid) if shard is None else shard
-        toks = np.asarray(tokens, np.int32).copy()
         now = time.monotonic()
-        self.inflight[rid] = InFlight(rid, shard, 0, toks, now, now)
+        self.inflight[rid] = InFlight(rid, shard, 0, toks, stamp, now)
+        self.inflight_bytes += toks.nbytes
         self._pending.setdefault(shard, []).append(ReqRow(rid, 0, toks))
         self._shard_load[shard] = self._shard_load.get(shard, 0) + 1
         self.routed += 1
+
+    def submit(self, tokens, *, rid: int | None = None,
+               shard: int | None = None) -> int | None:
+        """Buffer one request for its hashed shard (``flush`` publishes).
+        ``shard`` pins the assignment AND bypasses admission (warmup /
+        tests).  Returns the rid — or ``None`` when admission control shed
+        the request (budget exceeded, policy ``"shed"`` or queue full)."""
+        rid = self.next_rid() if rid is None else int(rid)
+        if rid in self.inflight or rid in self._queued_rids:
+            raise ValueError(f"rid {rid} is already in flight")
+        toks = np.asarray(tokens, np.int32).copy()
+        if shard is None and not self._within_budget(toks.nbytes):
+            if (self.admission == "queue"
+                    and len(self._queue) < self.queue_limit):
+                self._queue.append((rid, toks, time.monotonic()))
+                self._queued_rids.add(rid)
+                self.queued_total += 1
+                return rid
+            self.shed += 1
+            self.shed_bytes += toks.nbytes
+            return None
+        self._admit(rid, toks, time.monotonic(), shard)
         return rid
+
+    def admit_queued(self) -> int:
+        """Drain the admission queue into the pending buffers while budget
+        lasts (called on every completion and at flush time)."""
+        n = 0
+        while self._queue and self._within_budget(self._queue[0][1].nbytes):
+            rid, toks, stamp = self._queue.popleft()
+            self._queued_rids.discard(rid)
+            self._admit(rid, toks, stamp)
+            n += 1
+        return n
+
+    def _validate_rows(self, shard: int, rows: list[ReqRow]) -> list[ReqRow]:
+        """Keep only rows whose replay record still points at this shard
+        with this generation; dedup (rid, gen).  Everything else was
+        superseded (completed, replayed, stolen, re-hashed) while the row
+        sat in ``_pending`` — shipping it would double-publish."""
+        out: list[ReqRow] = []
+        seen: set[tuple[int, int]] = set()
+        for r in rows:
+            rec = self.inflight.get(r.rid)
+            key = (r.rid, r.gen)
+            if (rec is None or rec.gen != r.gen or rec.shard != shard
+                    or key in seen):
+                self.dropped_superseded += 1
+                continue
+            seen.add(key)
+            out.append(r)
+        return out
 
     def flush(self, *, timeout: float | None = 30.0, should_stop=None) -> int:
         """Publish every buffered row: one ``SERVE_REQ`` per shard, with
         event-driven per-shard backpressure (``publish_blocking``)."""
+        self.admit_queued()
         pending, self._pending = self._pending, {}
         published = 0
         for shard, rows in pending.items():
+            rows = self._validate_rows(shard, rows)
+            if not rows:
+                continue
             pub = self.pubs.get(shard)
             if pub is None or shard not in self.ring:
                 # shard died between buffering and flush: re-hash the rows
                 for r in rows:
-                    rec = self.inflight.get(r.rid)
-                    if rec is not None:
-                        self._replay_locked(rec)
+                    self._replay_locked(self.inflight[r.rid])
                 continue
             loan = pub.borrow_loaded_message()
             pack_requests(loan, rows, stamp=time.monotonic(),
@@ -155,7 +261,9 @@ class ShardRouter:
                 # return the loan and re-buffer — a periodic flush (the head
                 # janitor) retries, and the stall-replay path re-hashes rids
                 # that stay stuck.  Never let shard backpressure crash the
-                # head's event loop.
+                # head's event loop.  Re-buffered rows go back through
+                # _validate_rows on the next flush, so a replay that fires
+                # while they sit here cannot double-publish them.
                 loan.dealloc()
                 self._pending.setdefault(shard, []).extend(rows)
                 self.flush_stalls += 1
@@ -163,34 +271,44 @@ class ShardRouter:
             published += len(rows)
         return published
 
-    # -- completion / replay --------------------------------------------------
+    # -- completion / replay / steal ------------------------------------------
 
     def touch(self, rid: int) -> None:
         """Progress report from the collector (an in-order chunk landed)."""
         rec = self.inflight.get(rid)
         if rec is not None:
             rec.last_progress = time.monotonic()
+            rec.progressed = True
 
     def complete(self, rid: int) -> None:
         """The collector assembled this rid's full stream: drop the replay
-        record (its prompt bytes are no longer needed)."""
+        record (its prompt bytes are no longer needed) and let the freed
+        budget pull queued admissions in."""
         rec = self.inflight.pop(rid, None)
         if rec is not None:
             self.completions += 1
+            self.inflight_bytes -= rec.tokens.nbytes
             self._shard_load[rec.shard] = max(
                 0, self._shard_load.get(rec.shard, 0) - 1)
+            self.admit_queued()
 
-    def _replay_locked(self, rec: InFlight) -> int:
+    def _retarget(self, rec: InFlight, shard: int) -> int:
+        """Move one record to ``shard`` with generation+1 and buffer the
+        fresh row (the shared core of replay and steal)."""
         rec.gen += 1
         old = rec.shard
-        rec.shard = self.route(rec.rid)
+        rec.shard = shard
         rec.last_progress = time.monotonic()
+        rec.progressed = False
         self._pending.setdefault(rec.shard, []).append(
             ReqRow(rec.rid, rec.gen, rec.tokens))
         self._shard_load[old] = max(0, self._shard_load.get(old, 0) - 1)
         self._shard_load[rec.shard] = self._shard_load.get(rec.shard, 0) + 1
-        self.replays += 1
         return rec.shard
+
+    def _replay_locked(self, rec: InFlight) -> int:
+        self.replays += 1
+        return self._retarget(rec, self.route(rec.rid))
 
     def replay(self, rid: int) -> int | None:
         """Re-hash and re-buffer one in-flight rid with generation+1
@@ -199,24 +317,64 @@ class ShardRouter:
         rec = self.inflight.get(rid)
         return None if rec is None else self._replay_locked(rec)
 
+    def steal(self, to_shard: int, from_shard: int, limit: int = 2) -> list[int]:
+        """Work stealing: re-target up to ``limit`` *cold* rids (no chunk
+        landed since their current assignment) from ``from_shard`` onto a
+        drained ``to_shard``, generation+1 each.  The deep replica's stale
+        copy still decodes — the generation gate plus the collector's
+        supersede/dedup keep completion exactly-once, identical to the
+        death-replay race.  Returns the moved rids; caller flushes."""
+        if to_shard not in self.ring or to_shard not in self.pubs:
+            return []
+        moved: list[int] = []
+        for rec in list(self.inflight.values()):
+            if len(moved) >= limit:
+                break
+            if rec.shard != from_shard or rec.progressed:
+                continue
+            self._retarget(rec, to_shard)
+            moved.append(rec.rid)
+        self.steals += len(moved)
+        return moved
+
+    # -- ring membership ------------------------------------------------------
+
+    def add_shard(self, shard: int) -> None:
+        """Grow the ring (respawned or freshly scaled-up replica) —
+        idempotent.  Only call once the replica is subscribed (pool
+        ``ready``): rows published before any subscriber exists are
+        dropped by QoS keep-last, never delivered.  A parked publisher
+        (this shard served before) is revived instead of re-created —
+        registry publisher slots free only with the process, so
+        close+recreate would leak one slot per respawn cycle."""
+        shard = int(shard)
+        if shard not in self.pubs:
+            pub = self._parked.pop(shard, None)
+            if pub is None:
+                pub = self.dom.create_publisher(SERVE_REQ, self.topic(shard),
+                                                depth=self.depth)
+            self.pubs[shard] = pub
+        self.ring.add(shard)
+        self._shard_load.setdefault(shard, 0)
+
     def remove_shard(self, shard: int) -> list[int]:
-        """A replica died: shrink the ring and replay exactly its in-flight
-        rids onto the survivors (generation+1 each).  Returns the replayed
-        rids.  Caller flushes."""
+        """A replica died (or is being scaled down): shrink the ring and
+        replay exactly its in-flight rids onto the survivors
+        (generation+1 each).  Returns the replayed rids.  Caller flushes."""
         self.ring.remove(shard)
         if not len(self.ring):
             raise RuntimeError("no live shard left to replay onto")
-        # release the dead shard's publisher now (fds + notify cache) — a
-        # long-lived head sees many replica deaths; its registry pub slot
-        # itself frees only with this process (no remove-publisher ioctl)
+        # park the dead shard's publisher: its registry pub slot frees only
+        # with this process, and a respawned incarnation of the same shard
+        # revives it through add_shard instead of burning a fresh slot
         pub = self.pubs.pop(shard, None)
         if pub is not None:
-            pub.close()
+            self._parked[shard] = pub
         self._shard_load.pop(shard, None)
         replayed = [rec.rid for rec in self.inflight.values()
                     if rec.shard == shard]
-        # rows still buffered for the dead shard re-hash at flush time; the
-        # in-flight replay below covers them too, so drop the stale buffer
+        # rows still buffered for the dead shard are superseded by the
+        # replay below; _validate_rows drops them at the next flush
         self._pending.pop(shard, None)
         for rid in replayed:
             self._replay_locked(self.inflight[rid])
@@ -234,15 +392,25 @@ class ShardRouter:
     def stats(self) -> dict:
         return {
             "inflight": len(self.inflight),
+            "inflight_bytes": self.inflight_bytes,
             "routed": self.routed,
             "replays": self.replays,
             "completions": self.completions,
             "tie_breaks": self.tie_breaks,
             "flush_stalls": self.flush_stalls,
+            "shed": self.shed,
+            "shed_bytes": self.shed_bytes,
+            "queued": len(self._queue),
+            "queued_total": self.queued_total,
+            "steals": self.steals,
+            "dropped_superseded": self.dropped_superseded,
             "shards": list(self.ring.shards),
         }
 
     def close(self) -> None:
         for pub in self.pubs.values():
             pub.close()
+        for pub in self._parked.values():
+            pub.close()
         self.pubs = {}
+        self._parked = {}

@@ -15,6 +15,7 @@ from repro.serving import (
     SERVE_REQ,
     SERVE_RES,
     EchoServer,
+    FleetController,
     HashRing,
     ReplicaPool,
     ResRow,
@@ -393,3 +394,303 @@ def test_lease_refresh_on_take_and_staleness(dom):
     reg.topics[t]["sub_lease_ns"][s] = 0
     reg.refresh_lease(t, s)                # the idle heartbeat path
     assert reg.lease_ages(t)[s] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# admission control: shed / queue at the rid + byte budget
+# ---------------------------------------------------------------------------
+
+
+def test_router_admission_sheds_over_budget(dom):
+    router = ShardRouter(dom, [0], max_new=4, max_inflight_rids=2)
+    try:
+        p = np.arange(8, dtype=np.int32)
+        r1, r2 = router.submit(p), router.submit(p)
+        assert r1 is not None and r2 is not None
+        assert router.submit(p) is None           # budget hit: shed
+        assert router.shed == 1 and router.shed_bytes == p.nbytes
+        # pinned submissions (warmup / tests) bypass admission entirely,
+        # though they do occupy budget once in flight
+        pinned = router.submit(p, shard=0)
+        assert pinned is not None
+        router.complete(pinned)
+        # a completion frees budget for the next submit
+        router.complete(r1)
+        assert router.submit(p) is not None
+        assert router.shed == 1                   # no further sheds
+        assert router.stats()["shed"] == 1
+    finally:
+        router.close()
+
+
+def test_router_admission_byte_budget(dom):
+    p = np.arange(8, dtype=np.int32)              # 32 bytes
+    router = ShardRouter(dom, [0], prefix="adm/req", max_new=4,
+                         max_inflight_bytes=p.nbytes + 8)
+    try:
+        assert router.submit(p) is not None
+        assert router.submit(p) is None           # 64 > 40: shed
+        assert router.shed == 1 and router.inflight_bytes == p.nbytes
+    finally:
+        router.close()
+
+
+def test_router_admission_queue_drains_on_completion(dom):
+    router = ShardRouter(dom, [0], max_new=4, max_inflight_rids=1,
+                         admission="queue", queue_limit=2)
+    try:
+        p = np.arange(6, dtype=np.int32)
+        r1 = router.submit(p)
+        r2 = router.submit(p)                     # over budget: queued
+        r3 = router.submit(p)                     # queued
+        assert None not in (r1, r2, r3)
+        assert router.submit(p) is None           # queue full: shed
+        assert router.stats()["queued"] == 2 and router.queued_total == 2
+        assert len(router.inflight) == 1
+        with pytest.raises(ValueError):
+            router.submit(p, rid=r2)              # queued rids are in flight
+        router.complete(r1)                       # frees budget -> admits r2
+        assert r2 in router.inflight and r3 not in router.inflight
+        assert router.stats()["queued"] == 1
+        router.complete(r2)
+        assert r3 in router.inflight and router.stats()["queued"] == 0
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# regression: a flush-stall re-buffered row must not double-publish after
+# the rid is replayed (the _pending double-buffering bug)
+# ---------------------------------------------------------------------------
+
+
+def test_flush_stall_rebuffer_then_replay_publishes_once(dom):
+    router = ShardRouter(dom, [0], depth=1, max_new=4)
+    sub = dom.create_subscription(SERVE_REQ, router.topic(0))
+    try:
+        p1, p2 = (np.arange(4, dtype=np.int32), np.arange(5, dtype=np.int32))
+        rid1 = router.submit(p1)
+        assert router.flush(timeout=5.0) == 1     # occupies the depth-1 ring
+        held = sub.take_all()                     # take WITHOUT releasing:
+        assert len(held) == 1                     # the slot stays pinned
+        rid2 = router.submit(p2)
+        assert router.flush(timeout=0.2) == 0     # slot pinned: stall
+        assert router.flush_stalls == 1           # rid2's row parked in _pending
+        # the stall-replay path fires while the row is parked: gen 0 row in
+        # _pending is now superseded by the gen 1 replay row
+        assert router.replay(rid2) == 0
+        held[0].release()                         # free the ring slot
+        assert router.flush(timeout=5.0) == 1     # ONE row ships, not two
+        assert router.dropped_superseded == 1
+        rows = []
+        for ptr in sub.take_all():
+            rows.extend(iter_requests(ptr))
+            ptr.release()
+        assert [(r.rid, r.gen) for r in rows] == [(rid2, 1)]
+        assert router.inflight[rid1].gen == 0     # untouched bystander
+    finally:
+        sub.close()
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# work stealing: cold rids only, generation gate keeps the race exactly-once
+# ---------------------------------------------------------------------------
+
+
+def test_steal_moves_only_cold_rids_and_gate_dedups(dom):
+    MAX_NEW = 4
+    router = ShardRouter(dom, [0, 1], max_new=MAX_NEW)
+    sub0 = dom.create_subscription(SERVE_REQ, router.topic(0))
+    sub1 = dom.create_subscription(SERVE_REQ, router.topic(1))
+    completions: dict[int, int] = {}
+    collector = ResultsCollector(
+        dom, on_complete=lambda rid, t: completions.__setitem__(
+            rid, completions.get(rid, 0) + 1))
+    try:
+        rng = np.random.default_rng(11)
+        prompts = {}
+        for _ in range(4):                        # all pinned to shard 0
+            p = rng.integers(0, 999, 6)
+            prompts[router.submit(p, shard=0)] = p
+        router.flush(timeout=5.0)
+        rids = sorted(prompts)
+        hot = rids[0]
+        router.touch(hot)                         # a chunk landed: not cold
+        moved = router.steal(1, 0, limit=10)
+        assert sorted(moved) == rids[1:]          # the hot rid stays put
+        assert router.steals == 3
+        assert router.inflight[hot].shard == 0
+        assert router.inflight[hot].gen == 0
+        for r in moved:
+            assert router.inflight[r].shard == 1
+            assert router.inflight[r].gen == 1
+        router.flush(timeout=5.0)                 # ships the stolen rows
+
+        # both replicas now decode the stolen rids (shard 0 holds the stale
+        # gen-0 copies): the generation gate + collector supersede/dedup
+        # must resolve the race to exactly one completion per rid
+        def drain(sub, srv):
+            rows = []
+            srv.stream_sink = lambda rid, gen, seq, toks, eos: rows.append(
+                ResRow(int(rid), gen, seq, np.asarray(toks, np.int32), eos))
+            for ptr in sub.take_all():
+                srv.ingest_serve_message(ptr)
+                ptr.release()
+            while not srv.idle:
+                srv.step_rounds()
+            return rows
+
+        rows1 = drain(sub1, EchoServer(slots=4))  # the thief (gen 1)
+        rows0 = drain(sub0, EchoServer(slots=4))  # the victim (gen 0, stale)
+        assert {r.rid for r in rows1} == set(moved)
+        assert {r.rid for r in rows0} == set(rids)
+        for r in rows1:                           # thief wins the race
+            collector.ingest(r)
+        for r in rows0:                           # stale copies arrive late
+            collector.ingest(r)
+        assert completions == {r: 1 for r in rids}
+        assert collector.stale_gen > 0 or collector.duplicates > 0
+        for rid, p in prompts.items():
+            assert collector.result(rid) == echo_tokens(p, MAX_NEW)
+    finally:
+        sub0.close()
+        sub1.close()
+        collector.close()
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# regression: the pool's cached topic index must die with the topic's
+# generation (layout v4 recycles topic slots)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_lease_cache_invalidated_on_topic_recycle(dom):
+    pool = ReplicaPool(dom, [])                   # no replicas: cache machinery
+    reg = dom.registry
+    try:
+        t0 = reg.topic_index("serve/req/0")
+        s0 = reg.add_subscriber(t0, 1)            # fake pid: lease API only
+        assert not pool._lease_stale(0)           # fresh lease, cache primed
+        assert pool._tidx[0] == (t0, reg.topic_gen(t0))
+        reg.topics[t0]["sub_lease_ns"][s0] = 0    # epoch-old lease
+        assert pool._lease_stale(0)               # wedged detection works
+        # recycle the slot under the cache: destroy, re-create as ANOTHER
+        # topic in the same row (gen bumps), give it an epoch-old lease —
+        # the stale cached index would misread it as shard 0's wedged lease
+        reg.destroy_topic("serve/req/0")
+        assert reg.topic_index("unrelated/topic") == t0
+        s1 = reg.add_subscriber(t0, 1)
+        reg.topics[t0]["sub_lease_ns"][s1] = 0
+        assert not pool._lease_stale(0)           # gen mismatch: not our topic
+        assert 0 not in pool._tidx                # cache dropped, not re-primed
+        # the next incarnation re-creates the shard topic in a fresh slot:
+        # the poll must re-resolve and track the new (tidx, gen)
+        t1 = reg.topic_index("serve/req/0")
+        assert t1 != t0
+        s2 = reg.add_subscriber(t1, 1)
+        assert not pool._lease_stale(0)
+        assert pool._tidx[0] == (t1, reg.topic_gen(t1))
+        reg.topics[t1]["sub_lease_ns"][s2] = 0
+        assert pool._lease_stale(0)
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# regression: wait_ready / kill key off the CURRENT incarnation after respawn
+# ---------------------------------------------------------------------------
+
+
+def test_pool_respawn_fresh_incarnation_wait_and_kill():
+    dom = Domain.create(arena_capacity=32 << 20)
+    pool = ReplicaPool(dom, [0], model="echo", slots=2, round_period_s=0.005)
+    try:
+        pool.wait_ready(60)
+        assert pool.incarnation(0) == 0
+        pid0 = pool._procs[0].pid
+        pool.kill(0)
+        assert pool.poll() == [0] and not pool.is_alive(0)
+        pool.respawn(0)
+        assert pool.incarnation(0) == 1
+        # the dead predecessor's ready event was set long ago — wait_ready
+        # must block on the FRESH incarnation's event, not return on the
+        # stale one (the new replica needs real time to subscribe)
+        pool.wait_ready(60, shards=[0])
+        pid1 = pool._procs[0].pid
+        assert pid1 != pid0 and pool.is_alive(0)
+        assert pool.poll() == []                  # new incarnation is healthy
+        # kill after respawn must target the NEW process, not the corpse
+        pool.kill(0)
+        assert not pool._procs[0].is_alive()
+        assert pool.poll() == [0]
+    finally:
+        pool.stop()
+        dom.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-process elastic loop: kill -> respawn -> re-add -> exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_controller_respawns_dead_replica_and_rejoins_exactly_once():
+    dom = Domain.create(arena_capacity=32 << 20)
+    K, N, MAX_NEW = 2, 16, 4
+    pool = ReplicaPool(dom, range(K), model="echo", slots=2,
+                       round_period_s=0.005)
+    try:
+        pool.wait_ready(60)
+        router = ShardRouter(dom, range(K), max_new=MAX_NEW)
+        completions: dict[int, int] = {}
+
+        def on_complete(rid, toks):
+            completions[rid] = completions.get(rid, 0) + 1
+            router.complete(rid)
+
+        collector = ResultsCollector(dom, shards=range(K),
+                                     on_complete=on_complete,
+                                     on_progress=router.touch)
+        controller = FleetController(pool, router, collector,
+                                     autoscale=False, respawn=True,
+                                     respawn_backoff_s=0.0,
+                                     stall_replay_s=5.0, flush_timeout_s=5.0)
+        ex = EventExecutor(name="elastic-head")
+        collector.attach_executor(ex)
+        controller.attach_executor(ex, period_s=0.05)
+        rng = np.random.default_rng(23)
+        prompts = {}
+        for _ in range(N):
+            p = rng.integers(0, 999, 8)
+            prompts[router.submit(p)] = p
+        router.flush()
+        ex.spin(until=lambda: collector.n_completed >= N // 4, timeout=30)
+        per_shard: dict[int, int] = {}
+        for rec in router.inflight.values():
+            per_shard[rec.shard] = per_shard.get(rec.shard, 0) + 1
+        victim = max(per_shard, key=per_shard.get)
+        pool.kill(victim)
+        ex.spin(until=lambda: collector.n_completed >= N, timeout=120)
+        # load may drain before the respawn finishes joining: keep ticking
+        ex.spin(until=lambda: (controller.respawns >= 1
+                               and victim in router.ring), timeout=60)
+        ex.shutdown()
+
+        assert collector.n_completed >= N
+        assert completions == {rid: 1 for rid in prompts}   # exactly once
+        for rid, p in prompts.items():
+            assert collector.result(rid) == echo_tokens(p, MAX_NEW) \
+                or collector.result(rid) is None  # popped via on_complete only
+        results = dict(collector.pop_completed())
+        assert sorted(results) == sorted(prompts)
+        for rid, p in prompts.items():
+            assert results[rid] == echo_tokens(p, MAX_NEW), rid
+        assert controller.deaths >= 1 and controller.respawns >= 1
+        assert pool.is_alive(victim) and pool.incarnation(victim) >= 1
+        assert victim in router.ring                        # healed fleet
+        router.close()
+        collector.close()
+    finally:
+        pool.stop()
+        dom.close()
