@@ -1,0 +1,336 @@
+"""Fig. 18 (ours): the observability plane's two contracts.
+
+1. **Overhead** — tracing is an always-compiled-in, env-gated feature
+   (``AGNOCAST_TRACE``), so its cost when ENABLED must stay negligible:
+   a traced closed publish→take→release loop (the topic-layer hot path,
+   4 trace records per cycle: publish/notify/take/release, the first two
+   written by one ``emit2`` call) must hold the untraced loop's median
+   per-cycle latency within 5%.  Noise policy: this box's absolute
+   ops/s swing ±30% between whole windows, and even two *identical*
+   topics in one process differ by ±3% (row/arena placement), so each
+   child measures both modes on ONE topic — the trace gate is latched
+   per pub/sub at construction, and the child toggles that cached
+   tracer reference between order-alternated batches — and the gate
+   statistic is the ratio of per-cycle latency p50s, which a scheduler
+   burst cannot move unless it contaminates half the samples.  The gate
+   is the MEDIAN child ratio, with bounded extra children on a noisy
+   verdict.
+
+2. **Reconstruction** — over a fig13-style K=4 echo serving run with
+   tracing on, the :class:`repro.obs.flows.FlowAggregator` must recover
+   every admitted rid's serving flow exactly once (head enqueue → flush
+   → replica enqueue → reassembled chunks, eos-terminated), every
+   per-stage latency non-negative, and the per-flow stage sum within
+   10% of the head's independently measured submit→complete wall time
+   (the stage deltas telescope, so their sum IS the traced e2e — this
+   cross-checks the trace clockline against a measurement that never
+   touched the rings).
+
+    PYTHONPATH=src python -m benchmarks.fig18_tracing [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import multiprocessing as mp
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import save_json
+
+WINDOW_S = 1.2
+SMOKE_WINDOW_S = 0.8
+BATCH = 60                  # cycles per mode batch inside one child
+PAYLOAD_BYTES = 16 << 10    # small end of the paper's sensor regime
+ROUNDS = 3
+MAX_EXTRA_ROUNDS = 2
+OVERHEAD_GATE = 0.95        # untraced p50 >= 95% of traced p50 (median)
+
+SERVE_K = 4
+SERVE_N = 24
+SERVE_MAX_NEW = 4
+STAGE_SUM_TOL = 0.10        # |stage sum - measured e2e| / e2e, mean
+
+
+# -- 1. overhead: traced vs untraced topic-layer closed loop -------------------
+
+def _cycle_worker(dom_name: str, topic: str, window_s: float, out_q) -> None:
+    """One child measuring BOTH modes on ONE topic (spawn-safe).
+
+    Two identical topics in one process differ by ±3% cycles/s on this
+    box (registry-row / arena placement idiosyncrasy) — more than the
+    effect under test — so the untraced mode is produced by clearing the
+    pub/sub's construction-latched tracer reference rather than by a
+    second topic.  That reference IS the runtime gate (the hot paths test
+    ``self._tr is not None``), so a cleared batch runs byte-identical
+    untraced code on identical state.
+
+    The statistic is the **median per-cycle latency** (p50), not
+    throughput: on this single-core box a scheduler burst landing inside
+    one mode's window skews a mean/throughput ratio by ±25%, while the
+    p50 of per-cycle latencies over order-alternated batches is immune to
+    any contamination short of half the samples.  Each cycle carries a
+    16 KiB payload write + read — the small end of the paper's
+    sensor-message regime, which is the *conservative* choice for a
+    relative gate (tracing cost is per-message, so small messages
+    maximize the ratio)."""
+    os.environ["AGNOCAST_TRACE"] = "1"
+    from repro.core.registry import AgnocastQueueFull
+    from repro.core.messages import BYTES_BLOB
+    from repro.core.topic import Domain
+
+    dom = Domain.join(dom_name, arena_capacity=32 << 20)
+    try:
+        pub = dom.create_publisher(BYTES_BLOB, topic, depth=16)
+        sub = dom.create_subscription(BYTES_BLOB, topic)
+        tr = pub._tr
+        assert tr is not None
+        payload = np.arange(PAYLOAD_BYTES, dtype=np.uint8)
+        pc = time.perf_counter_ns
+
+        def run_batch(traced: bool, n_cycles: int) -> list[int]:
+            pub._tr = sub._tr = (tr if traced else None)
+            lat = []
+            sink = 0
+            t0 = time.monotonic()
+            for _ in range(n_cycles):
+                a = pc()
+                loan = pub.borrow_loaded_message()
+                loan.data.extend(payload)
+                loan.set("stamp", t0)
+                try:
+                    pub.publish(loan)
+                except AgnocastQueueFull:
+                    loan.dealloc()      # self-loop races its own reclaim
+                for ptr in sub.take():
+                    sink += int(ptr.get("data")[-1])
+                    ptr.release()
+                lat.append(pc() - a)
+            return lat
+
+        for traced in (False, True):
+            run_batch(traced, BATCH)        # warm both loops
+        acc = {False: [], True: []}
+        deadline = time.monotonic() + 2 * window_s
+        i = 0
+        while time.monotonic() < deadline:
+            first = i % 2 == 0              # alternate batch order too
+            for traced in (first, not first):
+                acc[traced] += run_batch(traced, BATCH)
+            i += 1
+        off = sorted(acc[False])
+        on = sorted(acc[True])
+        out_q.put((off[len(off) // 2], on[len(on) // 2], len(off), len(on)))
+    finally:
+        dom.close()
+
+
+def _run_child(dom_name: str, topic: str, window_s: float) -> dict:
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    proc = ctx.Process(target=_cycle_worker,
+                       args=(dom_name, topic, window_s, out_q),
+                       daemon=True)
+    proc.start()
+    p50_off, p50_on, n_off, n_on = out_q.get(timeout=120)
+    proc.join(timeout=10)
+    return {"off": {"p50_us": p50_off / 1e3, "cycles": n_off},
+            "traced": {"p50_us": p50_on / 1e3, "cycles": n_on},
+            "ratio": p50_off / max(p50_on, 1)}
+
+
+def measure_overhead(window_s: float) -> dict:
+    from repro.core.topic import Domain
+    from repro.obs import trace as _trace
+
+    dom = Domain.create(arena_capacity=4 << 20)
+    out: dict = {"pairs": []}
+    try:
+        print("child,off_p50_us,traced_p50_us,ratio")
+
+        def child(i: int) -> dict:
+            p = _run_child(dom.name, f"fig18/cyc{i}/", window_s)
+            print(f"{i},{p['off']['p50_us']:.1f},"
+                  f"{p['traced']['p50_us']:.1f},{p['ratio']:.3f}")
+            return p
+
+        for i in range(ROUNDS):
+            out["pairs"].append(child(i))
+        ratios = sorted(p["ratio"] for p in out["pairs"])
+        ratio = ratios[len(ratios) // 2]
+        extra = 0
+        while ratio < OVERHEAD_GATE and extra < MAX_EXTRA_ROUNDS:
+            extra += 1
+            print(f"# overhead verdict noisy ({ratio:.3f}), extra child")
+            out["pairs"].append(child(ROUNDS + extra - 1))
+            ratios = sorted(p["ratio"] for p in out["pairs"])
+            ratio = ratios[len(ratios) // 2]
+        out["ratio_median"] = ratio
+        return out
+    finally:
+        name = dom.name
+        dom.close()
+        _trace.purge(name)
+
+
+# -- 2. flow reconstruction over a K-replica serving run -----------------------
+
+def run_serving_flows(k: int = SERVE_K, n_requests: int = SERVE_N) -> dict:
+    """K echo replicas under AGNOCAST_TRACE=1 (inherited by the spawned
+    children), n rids through router→replica→collector, then full flow
+    reconstruction off the shm rings."""
+    from repro.core.topic import Domain
+    from repro.obs import trace as _trace
+    from repro.obs.flows import FlowAggregator
+    from repro.serving import ReplicaPool, ResultsCollector, ShardRouter
+
+    prev = os.environ.get("AGNOCAST_TRACE")
+    os.environ["AGNOCAST_TRACE"] = "1"
+    dom = Domain.create(arena_capacity=32 << 20)
+    name = dom.name
+    try:
+        pool = ReplicaPool(dom, range(k), model="echo", arena_mb=8,
+                           round_period_s=0.002)
+        try:
+            pool.wait_ready(120)
+            router = ShardRouter(dom, range(k), max_new=SERVE_MAX_NEW)
+            t0: dict[int, int] = {}
+            t1: dict[int, int] = {}
+
+            def on_complete(rid, tokens):
+                t1[rid] = time.monotonic_ns()
+                router.complete(rid)
+
+            coll = ResultsCollector(dom, shards=range(k),
+                                    on_complete=on_complete,
+                                    on_progress=router.touch)
+            rng = np.random.default_rng(18)
+            rids = []
+            for _ in range(n_requests):
+                before = time.monotonic_ns()
+                rid = router.submit(rng.integers(0, 500, 8, dtype=np.int32))
+                t0[rid] = before
+                rids.append(rid)
+            router.flush()
+            deadline = time.monotonic() + 60
+            while len(t1) < n_requests and time.monotonic() < deadline:
+                coll.pump(0.05)
+            pool.stop()
+            completed = len(t1)
+        finally:
+            pool.stop()
+
+        agg = FlowAggregator(name)
+        flows = [f for f in agg.collect() if f.serving]
+        agg.close()
+
+        # every admitted rid's flow, exactly once (rid rides the hop-0
+        # serve_enqueue arg; trace ids are minted per admission)
+        by_rid: dict[int, list] = {}
+        for f in flows:
+            enq = f.first(_trace.Stage.SERVE_ENQ, 0)
+            if enq is not None:
+                by_rid.setdefault(enq[5], []).append(f)
+        dup = [r for r, fs in by_rid.items() if len(fs) > 1]
+        missing = [r for r in rids if r not in by_rid]
+        complete = [r for r in rids
+                    if r in by_rid and by_rid[r][0].complete]
+        nonneg = monotonic = 0
+        sums, meas = [], []
+        for r in complete:
+            f = by_rid[r][0]
+            bd = f.breakdown()
+            stages = [v for kk, v in bd.items() if kk != "e2e"]
+            if all(v >= 0 for v in stages):
+                nonneg += 1
+            if f.monotonic():
+                monotonic += 1
+            sums.append(sum(stages))
+            meas.append((t1[r] - t0[r]) / 1e9)
+        sum_mean = float(np.mean(sums)) if sums else 0.0
+        meas_mean = float(np.mean(meas)) if meas else 1e-9
+        return {
+            "k": k,
+            "n_requests": n_requests,
+            "completed": completed,
+            "serving_flows": len(flows),
+            "missing_flows": len(missing),
+            "duplicate_flows": len(dup),
+            "complete_flows": len(complete),
+            "nonneg_flows": nonneg,
+            "monotonic_flows": monotonic,
+            "stage_sum_mean_s": sum_mean,
+            "measured_e2e_mean_s": meas_mean,
+            "stage_sum_vs_e2e": abs(sum_mean - meas_mean) / meas_mean,
+        }
+    finally:
+        if prev is None:
+            os.environ.pop("AGNOCAST_TRACE", None)
+        else:
+            os.environ["AGNOCAST_TRACE"] = prev
+        dom.close()
+        _trace.purge(name)
+
+
+def main(smoke: bool = False) -> dict:
+    window = SMOKE_WINDOW_S if smoke else WINDOW_S
+    print(f"# fig18-tracing: overhead gate ({window:.1f}s windows) + "
+          f"K={SERVE_K} flow reconstruction{', smoke' if smoke else ''}")
+    res: dict = {"ok": True, "checks": []}
+
+    def check(name: str, passed: bool, detail: str = ""):
+        res["checks"].append({"name": name, "ok": bool(passed),
+                              "detail": detail})
+        if not passed:
+            res["ok"] = False
+            print(f"# FAIL fig18/{name}: {detail}")
+
+    ov = measure_overhead(window)
+    res["overhead"] = ov
+    print(f"# tracing overhead: traced/off median "
+          f"{ov['ratio_median']:.3f} over {len(ov['pairs'])} pairs")
+    check("overhead_le_5pct", ov["ratio_median"] >= OVERHEAD_GATE,
+          f"traced holds {ov['ratio_median']:.3f}x of untraced "
+          f"(gate {OVERHEAD_GATE:.2f})")
+
+    fl = run_serving_flows()
+    res["flows"] = fl
+    n = fl["n_requests"]
+    print(f"# flows: {fl['complete_flows']}/{n} complete, "
+          f"{fl['missing_flows']} missing, {fl['duplicate_flows']} dup; "
+          f"stage-sum {fl['stage_sum_mean_s']*1e3:.2f}ms vs measured "
+          f"{fl['measured_e2e_mean_s']*1e3:.2f}ms "
+          f"({fl['stage_sum_vs_e2e']*100:.1f}% off)")
+    check("all_rids_completed", fl["completed"] == n,
+          f"{fl['completed']}/{n} completed")
+    check("every_flow_exactly_once",
+          fl["missing_flows"] == 0 and fl["duplicate_flows"] == 0
+          and fl["complete_flows"] == n,
+          f"missing={fl['missing_flows']} dup={fl['duplicate_flows']} "
+          f"complete={fl['complete_flows']}/{n}")
+    check("stage_latencies_nonneg",
+          fl["nonneg_flows"] == fl["complete_flows"]
+          and fl["monotonic_flows"] == fl["complete_flows"],
+          f"nonneg={fl['nonneg_flows']} monotonic={fl['monotonic_flows']} "
+          f"of {fl['complete_flows']}")
+    check("stage_sum_within_10pct",
+          fl["stage_sum_vs_e2e"] <= STAGE_SUM_TOL,
+          f"{fl['stage_sum_vs_e2e']*100:.1f}% > {STAGE_SUM_TOL*100:.0f}%")
+
+    save_json("fig18_tracing", res)
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI gate: <=5% overhead + exact flow "
+                         "recovery")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    if not out["ok"]:
+        raise SystemExit("fig18-tracing checks failed: "
+                         + "; ".join(c["name"] for c in out["checks"]
+                                     if not c["ok"]))

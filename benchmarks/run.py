@@ -19,14 +19,14 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale smoke (CI gate): fig11/fig14/fig15/"
-                         "fig16/fig17/hotpath/serving only unless --only "
-                         "says otherwise")
+                         "fig16/fig17/fig18/hotpath/serving only unless "
+                         "--only says otherwise")
     ap.add_argument("--only", default="",
                     help="comma list: fig9,fig10,fig11,fig12,fig13,fig14,"
-                         "fig15,fig16,fig17,hotpath,serving,roofline")
+                         "fig15,fig16,fig17,fig18,hotpath,serving,roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "fig11,fig14,fig15,fig16,fig17,hotpath,serving"
+        args.only = "fig11,fig14,fig15,fig16,fig17,fig18,hotpath,serving"
 
     n9 = 1000 if args.full else (60 if args.quick else 300)
     n10 = 600 if args.full else (60 if args.quick else 200)
@@ -36,18 +36,33 @@ def main(argv=None) -> int:
 
     t0 = time.monotonic()
     failures = 0
+    # per-benchmark verdicts for the final summary table + JSON artifact:
+    # every entry is {name, status (PASS/FAIL/WARN/RAN), detail}
+    summary: list[dict] = []
 
     def want(name: str) -> bool:
         return only is None or name in only
+
+    def note(name: str, status: str, detail: str = "") -> None:
+        summary.append({"name": name, "status": status, "detail": detail})
+
+    def note_checks(name: str, res: dict, ratio: str = "") -> None:
+        """Summarize a checks-style result dict: PASS/FAIL + the failing
+        check names (or the key ratio when everything held)."""
+        bad = [c["name"] for c in res.get("checks", ()) if not c["ok"]]
+        note(name, "PASS" if res.get("ok", True) else "FAIL",
+             ratio if not bad else "; ".join(bad))
 
     if want("fig9"):
         from benchmarks import fig9_latency
         sizes = ({"10KB": 10 << 10, "1MB": 1 << 20} if args.quick else None)
         fig9_latency.main(n_msgs=n9, sizes=sizes)
+        note("fig9", "RAN")
     if want("fig10"):
         from benchmarks import fig10_load
         loads = (0.0, 0.9) if args.quick else fig10_load.LOADS
         fig10_load.main(n_msgs=n10, loads=loads)
+        note("fig10", "RAN")
     if want("fig11"):
         from benchmarks import fig11_bridge
         if args.smoke:
@@ -55,15 +70,18 @@ def main(argv=None) -> int:
         else:
             sizes = ({"100KB": 100 << 10, "1MB": 1 << 20} if args.quick else None)
             fig11_bridge.main(n_msgs=n11, sizes=sizes)
+        note("fig11", "RAN")
     if want("fig12"):
         from benchmarks import fig12_executor
         n12 = 60 if args.full else (8 if args.quick else 30)
         sizes = ({"1KB": 1 << 10, "1MB": 1 << 20} if args.quick else None)
         ks = (1, 4) if args.quick else fig12_executor.FANIN_KS
         fig12_executor.main(n_msgs=n12, sizes=sizes, ks=ks)
+        note("fig12", "RAN")
     if want("fig13"):
         from benchmarks import fig13_pipeline
         fig13_pipeline.main(frames=nf)
+        note("fig13", "RAN")
     if want("fig14"):
         from benchmarks import fig14_routing
         if args.smoke:
@@ -81,9 +99,11 @@ def main(argv=None) -> int:
              f"scatter-gather plane too slow "
              f"({res['planes']['parts_speedup_16MB']:.2f}x < 1.5x @16MB)"),
         ]
+        bad14 = []
         for bad, msg in gates14:
             if not bad:
                 continue
+            bad14.append(msg)
             if args.smoke:
                 # shared CI runners can eat multi-ms preemption stalls that
                 # WARM_S cannot bound; report loudly (the JSON artifact has
@@ -93,9 +113,17 @@ def main(argv=None) -> int:
             else:
                 print(f"# FAIL fig14: {msg}")
                 failures += 1
+        note("fig14",
+             "PASS" if not bad14 else ("WARN" if args.smoke else "FAIL"),
+             "; ".join(bad14) if bad14 else
+             f"hop_spread={res['agno_hop_spread']:.2f}x "
+             f"parts_16MB={res['planes']['parts_speedup_16MB']:.2f}x")
     if want("fig15"):
         from benchmarks import fig15_metadata
         res = fig15_metadata.main(smoke=args.smoke or args.quick)
+        note_checks("fig15", res,
+                    f"scaling={res['scaling']:.2f}x"
+                    if "scaling" in res else "")
         if not res["ok"]:
             for c in res["checks"]:
                 if not c["ok"]:
@@ -107,6 +135,7 @@ def main(argv=None) -> int:
         # even in smoke (unlike latency spreads, they don't depend on the
         # runner being quiet)
         res = fig16_crosshost.main(smoke=args.smoke or args.quick)
+        note_checks("fig16", res)
         if not res["ok"]:
             for c in res["checks"]:
                 if not c["ok"]:
@@ -115,6 +144,8 @@ def main(argv=None) -> int:
     if want("hotpath"):
         from benchmarks import hotpath
         res = hotpath.main(smoke=args.smoke or args.quick)
+        note_checks("hotpath", res,
+                    f"fast/locked={res.get('speedup', 0):.2f}x")
         if not res["ok"]:
             for c in res["checks"]:
                 if not c["ok"]:
@@ -123,6 +154,8 @@ def main(argv=None) -> int:
     if want("serving"):
         from benchmarks import fig13_serving
         res = fig13_serving.main(smoke=args.smoke or args.quick)
+        note_checks("serving", res,
+                    f"scaling={res.get('scaling', 0):.2f}x")
         if not res["ok"]:
             for c in res["checks"]:
                 if not c["ok"]:
@@ -134,17 +167,49 @@ def main(argv=None) -> int:
         # exactly-once are hard gates like fig16; the transition-p99 bound
         # gets one bounded re-measure inside main() before it can fail
         res = fig17_elastic.main(smoke=args.smoke or args.quick)
+        note_checks("fig17", res)
         if not res["ok"]:
             for c in res["checks"]:
                 if not c["ok"]:
                     print(f"# FAIL fig17/{c['name']}: {c['detail']}")
+            failures += 1
+    if want("fig18"):
+        from benchmarks import fig18_tracing
+        # trace-overhead hard gate (<=5%) + exactly-once flow recovery
+        res = fig18_tracing.main(smoke=args.smoke or args.quick)
+        ov = res.get("overhead", {}).get("ratio_median")
+        note_checks("fig18", res,
+                    f"traced/off={ov:.3f}" if ov is not None else "")
+        if not res["ok"]:
+            for c in res["checks"]:
+                if not c["ok"]:
+                    print(f"# FAIL fig18/{c['name']}: {c['detail']}")
             failures += 1
     if want("roofline"):
         from benchmarks import roofline
         for mesh in ("16x16", "2x16x16"):
             roofline.main(mesh=mesh)
 
-    print(f"# benchmarks done in {time.monotonic()-t0:.0f}s")
+    wall = time.monotonic() - t0
+    if summary:
+        from benchmarks.common import save_json
+        print(f"# ---- summary ({'smoke' if args.smoke else 'run'}, "
+              f"{wall:.0f}s, {failures} failing) ----")
+        width = max(len(s["name"]) for s in summary)
+        for s in summary:
+            line = f"# {s['name']:<{width}}  {s['status']:<4}"
+            if s["detail"]:
+                line += f"  {s['detail']}"
+            print(line)
+        save_json("smoke_summary", {
+            "mode": ("smoke" if args.smoke else
+                     "quick" if args.quick else
+                     "full" if args.full else "default"),
+            "wall_s": wall,
+            "failures": failures,
+            "results": summary,
+        })
+    print(f"# benchmarks done in {wall:.0f}s")
     return failures
 
 

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""agno_top: live per-topic / per-process view of one Agnocast domain.
+
+Read-only monitoring over the observability plane (repro.obs): the
+registry's seqlock topic snapshots (depth, held entries, drops,
+publisher/subscriber counts), publish throughput from ``pub_next_seq``
+deltas between refreshes, every process's exported metrics snapshot
+(``MetricsExporter`` shm segments — bus/bridge/router/collector drop and
+shed counters), and the domain's trace-ring census.  Nothing here takes
+a topic lock or touches a FIFO: monitoring must never contend with the
+data plane.
+
+    PYTHONPATH=src python scripts/agno_top.py <domain> [--once] [-i SECS]
+
+``--once`` prints a single snapshot and exits (scripts + tests); the
+default loops, redrawing every ``--interval`` seconds until ^C.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def topic_rows(reg, prev: dict[int, int], dt: float) -> list[dict]:
+    """One registry sweep: every in-use topic's occupancy + publish rate.
+    ``prev`` maps tidx -> last total published seq (mutated in place)."""
+    from repro.core.registry import MAX_TOPICS
+
+    rows = []
+    for tidx in range(MAX_TOPICS):
+        t = reg.topics[tidx]
+        if not int(t["in_use"]):
+            continue
+        name = bytes(t["name"]).split(b"\0", 1)[0].decode(errors="replace")
+        try:
+            st = reg.stats(tidx)
+        except Exception:
+            continue            # torn row mid-destroy: skip this refresh
+        total = int(t["pub_next_seq"].sum())
+        last = prev.get(tidx)
+        prev[tidx] = total
+        rate = (total - last) / dt if (last is not None and dt > 0) else None
+        rows.append({
+            "tidx": tidx,
+            "topic": name,
+            "pubs": st["pubs_alive"],
+            "subs": st["subs_alive"],
+            "depth": st["used_entries"],
+            "held": st["held_entries"],
+            "drops": sum(st["drops"]),
+            "published": total,
+            "per_s": rate,
+        })
+    return rows
+
+
+def render(domain: str, rows: list[dict], exports: dict[int, dict],
+           rings: int, out=sys.stdout) -> None:
+    w = max([len(r["topic"]) for r in rows] + [5])
+    print(f"# agno_top {domain}: {len(rows)} topics, "
+          f"{len(exports)} metric exporters, {rings} trace rings", file=out)
+    print(f"{'topic':<{w}}  pubs subs depth held  drops  published  per_s",
+          file=out)
+    for r in sorted(rows, key=lambda r: r["topic"]):
+        per_s = f"{r['per_s']:.0f}" if r["per_s"] is not None else "-"
+        print(f"{r['topic']:<{w}}  {r['pubs']:>4} {r['subs']:>4} "
+              f"{r['depth']:>5} {r['held']:>4}  {r['drops']:>5}  "
+              f"{r['published']:>9}  {per_s:>5}", file=out)
+    for pid in sorted(exports):
+        snap = exports[pid]
+        # surface the loss/shed counters first — they are why you're here
+        hot = {k: v for k, v in sorted(snap.items())
+               if any(s in k for s in ("drop", "shed", "oom", "superseded",
+                                       "death", "respawn"))
+               and isinstance(v, (int, float)) and v}
+        rest = {k: v for k, v in sorted(snap.items()) if k not in hot}
+        print(f"pid {pid}:", file=out)
+        for k, v in list(hot.items()) + list(rest.items()):
+            print(f"  {k} = {v}", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("domain", help="domain (= registry segment) name")
+    ap.add_argument("--once", action="store_true",
+                    help="print one snapshot and exit")
+    ap.add_argument("-i", "--interval", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    from repro.core.registry import Registry
+    from repro.obs.metrics import read_exports
+    from repro.obs.trace import ring_names
+
+    try:
+        reg = Registry.attach(args.domain)
+    except FileNotFoundError:
+        print(f"agno_top: no registry segment named {args.domain!r}",
+              file=sys.stderr)
+        return 1
+    prev: dict[int, int] = {}
+    last_t = time.monotonic()
+    try:
+        while True:
+            now = time.monotonic()
+            rows = topic_rows(reg, prev, now - last_t)
+            last_t = now
+            if not args.once:
+                sys.stdout.write("\x1b[2J\x1b[H")    # clear + home
+            render(args.domain, rows, read_exports(args.domain),
+                   len(ring_names(args.domain)))
+            if args.once:
+                return 0
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+    finally:
+        reg.close()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

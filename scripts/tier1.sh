@@ -6,5 +6,9 @@ cd "$(dirname "$0")/.."
 
 TIMEOUT="${TIER1_TIMEOUT:-3600}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# tier-1 runs with tracing OFF (the repro.obs default): the suite's own
+# tracing tests opt in per-test, and everything else must exercise the
+# untraced hot paths CI users actually ship
+export AGNOCAST_TRACE=0
 
 exec timeout "$TIMEOUT" python -m pytest -x -q "$@"

@@ -44,6 +44,9 @@ import time
 import traceback
 from collections import deque
 
+from repro.obs import metrics as _metrics
+from repro.obs.trace import Stage as _Stage
+
 __all__ = [
     "CallbackGroup",
     "MutuallyExclusiveCallbackGroup",
@@ -153,10 +156,21 @@ class _SubscriptionHandle(_Handle):
         return out
 
     def _runner(self, ptr):
+        # trace hooks resolved per dispatch, not per event: the subscription
+        # caches its ring, the ptr carries the flow id (zero when untraced)
+        tr = getattr(self.sub, "_tr", None)
+        tid = ptr.trace_id if tr is not None else 0
+
         def run():
+            if tid:
+                tr.emit(tid, ptr.hops, _Stage.CB_START)
             try:
                 self.callback(ptr)
             finally:
+                if tid:
+                    # CB_END strictly before the release so the
+                    # callback→release stage delta stays non-negative
+                    tr.emit(tid, ptr.hops, _Stage.CB_END)
                 ptr.release()  # idempotent; callbacks clone() to keep
 
         return run
@@ -338,7 +352,10 @@ class EventExecutor:
         self._shutdown = False
         self._spin_thread: threading.Thread | None = None
         self.default_group = CallbackGroup(MUTUALLY_EXCLUSIVE, name="default")
-        self.dispatched = 0
+        # unified metrics: workers and the inline dispatcher both increment
+        # this — the old bare ``+= 1`` raced across the pool
+        self._dispatched = _metrics.counter("executor.dispatched",
+                                            executor=name)
         # self-pipe: interrupts a blocking select on shutdown / cross-thread edits
         self._wake_r, self._wake_w = os.pipe()
         os.set_blocking(self._wake_r, False)
@@ -547,10 +564,15 @@ class EventExecutor:
                 self._cond.notify()
             self._cond.notify_all()  # wait_idle watchers
 
+    @property
+    def dispatched(self) -> int:
+        """Back-compat shim: callbacks completed without raising."""
+        return self._dispatched.value
+
     def _run_work(self, w: _Work, g: CallbackGroup) -> None:
         try:
             w.fn()
-            self.dispatched += 1
+            self._dispatched.inc()
         finally:
             self._finish(g)
 

@@ -132,10 +132,25 @@ Two more extensions serve the cross-host data plane (layout v5,
 Layout history: v4 raises ``MAX_TOPICS`` 64 → 1024, widens entries with
 ``released`` bytes, adds ``wseq``/``gen`` to topic rows and the name-hash
 table to the header.  v5 widens entries again with ``pins`` /
-``pin_deadline_ns`` / ``xarena`` (cross-host data plane).  The magic is
-bumped (``0x…05``); there is no in-place upgrade — v4 attachers are
-rejected and must be restarted (segments are ephemeral per-run shm, so
-this costs a restart).
+``pin_deadline_ns`` / ``xarena`` (cross-host data plane).  v6 adds one
+``trace_id`` u8 column to entries (``repro.obs`` message-flow tracing:
+the id minted at publish travels with the entry so take/callback/release
+events in other processes land in the same flow).  The magic is bumped
+per layout (``0x…06`` now); there is no in-place upgrade — older
+attachers are rejected and must be restarted (segments are ephemeral
+per-run shm, so this costs a restart).
+
+Trace record wire format (``repro.obs.trace``; kept next to the layout
+docs because the trace ring is the registry's observability sibling —
+same single-writer/seqlock-spirit discipline, separate shm segments):
+one ring per (process, domain) named ``agno-tr-<domainhash>-<pid>``;
+header ``magic u32 | cap u32 | head u64 | pid u32 | pad`` (32 bytes,
+``head`` = monotonic record count); records 24 bytes each, packed
+``'<QQHBBI'`` = ``trace_id u64 | t_ns u64 (CLOCK_MONOTONIC) | hop u16 |
+stage u8 | flags u8 | arg u32``.  Env knobs: ``AGNOCAST_TRACE`` (unset
+or ``0`` — the tier-1 default — disables all emission; call sites hold a
+``None`` tracer and pay one pointer test), ``AGNOCAST_TRACE_CAP`` (ring
+capacity in records, rounded up to a power of two, default 4096).
 """
 
 from __future__ import annotations
@@ -165,7 +180,7 @@ MAX_PUBS = 8           # a sharded results topic fans in one pub per replica
 MAX_SUBS = 64          # one bit per subscriber in uint64 masks
 DEPTH_MAX = 64
 HASH_CAP = 2048        # topic-name hash table: 2x MAX_TOPICS, power of two
-_MAGIC = 0xA6_0C_0D_05  # layout v5: v4 + entry pins/lease + xarena refs
+_MAGIC = 0xA6_0C_0D_06  # layout v6: v5 + entry trace_id (flow tracing)
 
 # Escape hatch for benchmarking the lock-free fast plane against the v3
 # locked protocol on identical code: when true, every read/release takes
@@ -220,6 +235,8 @@ ENTRY_DT = np.dtype(
         ("pin_deadline_ns", "u8"),  # monotonic lease: pins ignored past this
         ("xarena", "S32"),          # descriptor offsets live in THIS arena
                                     # (empty = the publisher's own arena)
+        ("trace_id", "u8"),     # repro.obs flow id minted at publish
+                                # (0 = untraced; ids are pid-salted nonzero)
     ]
 )
 
@@ -264,6 +281,7 @@ class Entry:
     route_seq: int = 0
     xarena: str = ""  # nonempty: descriptor offsets live in this arena,
                       # not the publisher's own (same-host zero-copy relay)
+    trace_id: int = 0  # repro.obs flow id (0 = untraced)
 
 
 def domain_lock_path(reg: str) -> str:
@@ -1151,7 +1169,7 @@ class Registry:
                 *, origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
                 hops: int = 0, src_tag: int = 0,
                 route_seq: int = 0, gen: int | None = None,
-                xarena: str = "") -> tuple[int, list[int]]:
+                xarena: str = "", trace_id: int = 0) -> tuple[int, list[int]]:
         """Enqueue an entry; returns (seq, freeable_seqs_for_owner).
 
         QoS keep-last(depth): an *unreceived* occupant of the target slot is
@@ -1208,6 +1226,7 @@ class Registry:
                 e["pins"] = 0
                 e["pin_deadline_ns"] = 0
                 e["xarena"] = xarena.encode()
+                e["trace_id"] = np.uint64(trace_id)
                 e["state"] = ST_USED
                 t["pub_next_seq"][pidx] = seq + 1
         return seq, freeable
@@ -1273,7 +1292,8 @@ class Registry:
                       pidx, hops=int(row["hops"]),
                       src_tag=int(row["src_tag"]),
                       route_seq=int(row["route_seq"]),
-                      xarena=bytes(row["xarena"]).rstrip(b"\0").decode())
+                      xarena=bytes(row["xarena"]).rstrip(b"\0").decode(),
+                      trace_id=int(row["trace_id"]))
             )
         return got
 

@@ -128,6 +128,8 @@ from .messages import (MessageType, Ragged, ReceivedMessage, deserialize,
 from .registry import ORIGIN_BRIDGE, AgnocastQueueFull
 from .topic import Domain, Publisher, Subscription
 from .transport import K_ACK, K_CTRL, K_FANOUT, BusClient, Frame, _FANOUT
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 __all__ = ["RoutingRule", "RoutingTable", "DomainBridge", "Router",
            "Bridge", "domain_tag"]
@@ -277,6 +279,7 @@ class _Pending(NamedTuple):
     hops: int
     src_tag: int
     route_seq: int
+    trace_id: int = 0  # flow id preserved across the park (repro.obs)
 
 
 class _Await:
@@ -285,10 +288,10 @@ class _Await:
     and the ack bookkeeping (``need`` arrives via the FANOUT receipt)."""
 
     __slots__ = ("ep", "msg", "pin", "hops", "need", "acks",
-                 "fallback_at", "fell_back")
+                 "fallback_at", "fell_back", "tid")
 
     def __init__(self, ep: _Endpoint, msg, pin: tuple, hops: int,
-                 fallback_at: float):
+                 fallback_at: float, tid: int = 0):
         self.ep = ep
         self.msg = msg
         self.pin = pin  # (tidx, pidx, seq, gen) in OUR registry
@@ -297,6 +300,7 @@ class _Await:
         self.acks = 0
         self.fallback_at = fallback_at
         self.fell_back = False
+        self.tid = tid  # flow id: the fallback re-send keeps the flow
 
 
 class DomainBridge:
@@ -340,20 +344,42 @@ class DomainBridge:
         self._seen = _DedupWindow() if router is None else None
         self._mint = _AdoptedIdMint() if router is None else None
         self._handle = None  # set by the executor's bridge handle
-        # counters (observability + tests)
+        self._tr = _trace.tracer_for(dom.name)  # repro.obs (None = off)
+        # counters (observability + tests).  The drop/retry counters live on
+        # the unified metrics registry because they are incremented on
+        # whichever thread pumps the bridge while tests/monitors read them
+        # from another — Counter.inc is lock-guarded; read-only property
+        # shims below keep the old attribute names working.
         self.relayed_out = 0       # agnocast -> bus
         self.relayed_in = 0        # bus -> agnocast
         self.dropped_loops = 0     # src_tag == own tag, or hop cap
         self.dropped_dups = 0      # (src_tag, route_seq) already admitted
         self.copy_errors = 0       # aborted copy-ins (loan returned)
-        self.oom_retries = 0       # copy-ins that hit arena pressure once
-        self.dropped_oom = 0       # frames dropped after the bounded retry
-        self.dropped_backlog = 0   # frames beyond a parked topic's backlog
+        self._oom_retries = _metrics.counter(
+            "bridge.oom_retries", bridge=name)     # arena pressure, retried
+        self._dropped_oom = _metrics.counter(
+            "bridge.dropped_oom", bridge=name)     # dropped after the retry
+        self._dropped_backlog = _metrics.counter(
+            "bridge.dropped_backlog", bridge=name)  # parked-backlog overflow
         self.attach_out = 0        # control frames sent (pin held)
         self.attach_in = 0         # control frames delivered locally
         self.attach_nacks = 0      # attach/read failures we NACKed
         self.ack_timeouts = 0      # awaited acks that never came
         self.attach_fallbacks = 0  # serialized re-sends (nack or timeout)
+
+    # -- back-compat counter shims (values live on repro.obs.metrics) ----------
+
+    @property
+    def oom_retries(self) -> int:
+        return self._oom_retries.value
+
+    @property
+    def dropped_oom(self) -> int:
+        return self._dropped_oom.value
+
+    @property
+    def dropped_backlog(self) -> int:
+        return self._dropped_backlog.value
 
     # -- federation surface ---------------------------------------------------
 
@@ -434,19 +460,26 @@ class DomainBridge:
                             _origin_salt(ptr.msg.arena_name, ep.sub.tidx,
                                          ptr.pub_idx),
                             ptr.seq)
+                    tid = ptr.trace_id
                     if (self.data_plane == "attach"
                             and self._attach_out(ep, ptr, hops, src, rseq)):
+                        if self._tr is not None and tid:
+                            self._tr.emit(tid, hops + 1,
+                                          _trace.Stage.BRIDGE_OUT)
                         n += 1
                         continue  # pin (not the ptr) keeps the entry alive
                     header, views = serialize_parts(ptr.msg)
                     if self.data_plane == "serialized":
                         self.bus.publish(ep.topic, header + b"".join(views),
                                          origin=1, hops=hops + 1, src_tag=src,
-                                         route_seq=rseq)
+                                         route_seq=rseq, trace_id=tid)
                     else:  # "parts": zero-assembly scatter-gather
                         self.bus.publish_parts(ep.topic, header, views,
                                                origin=1, hops=hops + 1,
-                                               src_tag=src, route_seq=rseq)
+                                               src_tag=src, route_seq=rseq,
+                                               trace_id=tid)
+                    if self._tr is not None and tid:
+                        self._tr.emit(tid, hops + 1, _trace.Stage.BRIDGE_OUT)
                     n += 1
                 finally:
                     ptr.release()
@@ -475,10 +508,12 @@ class DomainBridge:
         key = (ep.topic, src, rseq)
         self._awaiting[key] = _Await(
             ep, ptr.msg, (ep.sub.tidx, ptr.pub_idx, ptr.seq, ep.sub.tgen),
-            hops, time.monotonic() + self.pin_lease_s * 0.95)
+            hops, time.monotonic() + self.pin_lease_s * 0.95,
+            tid=ptr.trace_id)
         try:
             self.bus.publish_ctrl(ep.topic, ctrl, origin=1, hops=hops + 1,
-                                  src_tag=src, route_seq=rseq)
+                                  src_tag=src, route_seq=rseq,
+                                  trace_id=ptr.trace_id)
         except OSError:
             self._settle(key)  # bus gone: unpin, let the caller's path fail
             raise
@@ -510,7 +545,8 @@ class DomainBridge:
         topic, src, rseq = key
         try:
             self.bus.publish(topic, serialize(aw.msg), origin=1,
-                             hops=aw.hops + 1, src_tag=src, route_seq=rseq)
+                             hops=aw.hops + 1, src_tag=src, route_seq=rseq,
+                             trace_id=aw.tid)
         except OSError:
             pass  # bus gone; the pin release below still must happen
 
@@ -567,7 +603,7 @@ class DomainBridge:
         if fr.topic in self._pending:
             q = self._backlog.setdefault(fr.topic, deque())
             if len(q) >= max(ep.depth, 4):
-                self.dropped_backlog += 1  # bounded memory: shed, counted
+                self._dropped_backlog.inc()  # bounded memory: shed, counted
                 return 0
             q.append(fr)
             return 0
@@ -585,6 +621,8 @@ class DomainBridge:
             if not self._admit(src, rseq):
                 self.dropped_dups += 1
                 return 0
+            if self._tr is not None and fr.trace_id:
+                self._tr.emit(fr.trace_id, fr.hops, _trace.Stage.ROUTE)
         else:  # conventional publisher: this domain adopts the message
             src, rseq = self.tag, self._next_rseq()
         if fr.kind == K_CTRL:
@@ -619,7 +657,7 @@ class DomainBridge:
             self._copy_in(ep, fr, src, rseq)
             return
         except OutOfArenaMemory:
-            self.oom_retries += 1
+            self._oom_retries.inc()
         ep.pub.set_waiting(True)
         try:
             r, _, _ = select.select([ep.pub], [], [], OOM_RETRY_WAIT_S)
@@ -631,7 +669,7 @@ class DomainBridge:
         try:
             self._copy_in(ep, fr, src, rseq)
         except OutOfArenaMemory:
-            self.dropped_oom += 1
+            self._dropped_oom.inc()
             raise
 
     def _copy_in(self, ep: _Endpoint, fr: Frame, src: int, rseq: int) -> None:
@@ -639,7 +677,7 @@ class DomainBridge:
         # copy left on this path is the field write into the loan
         fields = deserialize(fr.payload, copy=False)
         loan = self._fill_loan(ep, fields)
-        self._publish_or_park(ep, loan, fr.hops, src, rseq)
+        self._publish_or_park(ep, loan, fr.hops, src, rseq, fr.trace_id)
 
     def _fill_loan(self, ep: _Endpoint, fields: dict):
         """Borrow a loan and copy ``fields`` into it; abort-safe (the arena
@@ -678,8 +716,11 @@ class DomainBridge:
                 seq = ep.pub.publish_descriptor(
                     ctrl["desc"], xarena=arena_name, origin=ORIGIN_BRIDGE,
                     exclude_sub=ep.sub.sidx, hops=fr.hops,
-                    src_tag=src, route_seq=rseq)
+                    src_tag=src, route_seq=rseq, trace_id=fr.trace_id)
                 self._ref_pending[(ep.topic, seq)] = (src, rseq)
+                if self._tr is not None and fr.trace_id:
+                    self._tr.emit(fr.trace_id, fr.hops,
+                                  _trace.Stage.BRIDGE_IN)
             else:  # "copy": read fields straight from the source entry
                 msg = ReceivedMessage(arena, ctrl["desc"])
                 loan = self._fill_loan(ep, msg.fields())
@@ -687,7 +728,8 @@ class DomainBridge:
                 # ack now, park/retry later cannot touch it again
                 self.bus.publish_ack(ep.topic, True, src_tag=src,
                                      route_seq=rseq)
-                self._publish_or_park(ep, loan, fr.hops, src, rseq)
+                self._publish_or_park(ep, loan, fr.hops, src, rseq,
+                                      fr.trace_id)
         except Exception:
             self.attach_nacks += 1
             self._forget(src, rseq)
@@ -738,19 +780,22 @@ class DomainBridge:
                     pass  # bus gone: the sender's lease expiry covers it
 
     def _publish_or_park(self, ep: _Endpoint, loan, hops: int, src: int,
-                         rseq: int) -> None:
+                         rseq: int, trace_id: int = 0) -> None:
         ep.pub.reclaim()
         try:
             ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
                            exclude_sub=ep.sub.sidx, hops=hops,
-                           src_tag=src, route_seq=rseq)
+                           src_tag=src, route_seq=rseq, trace_id=trace_id)
             self.relayed_in += 1
+            if self._tr is not None and trace_id:
+                self._tr.emit(trace_id, hops, _trace.Stage.BRIDGE_IN)
         except AgnocastQueueFull:
             # park THIS endpoint: the loan stays valid; the blocked
             # publisher's slot-freed FIFO is the wakeup source (executor-
             # multiplexed or select()ed).  Waiter flag up so releasers
             # write that FIFO at all.  Other endpoints keep flowing.
-            self._pending[ep.topic] = _Pending(ep, loan, hops, src, rseq)
+            self._pending[ep.topic] = _Pending(ep, loan, hops, src, rseq,
+                                               trace_id)
             ep.pub.set_waiting(True)
             # lost-wakeup guard (same rule as wait_for_slot): a release that
             # landed between the failed publish and the flag store produced
@@ -776,7 +821,7 @@ class DomainBridge:
             except Exception as e:
                 q = self._backlog.pop(topic, None)
                 if q:
-                    self.dropped_backlog += len(q)
+                    self._dropped_backlog.inc(len(q))
                 if err is None:
                     err = e
                 continue
@@ -792,12 +837,12 @@ class DomainBridge:
         pending = self._pending.get(topic)
         if pending is None:
             return True
-        ep, loan, hops, src, rseq = pending
+        ep, loan, hops, src, rseq, tid = pending
         ep.pub.reclaim()
         try:
             ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
                            exclude_sub=ep.sub.sidx, hops=hops,
-                           src_tag=src, route_seq=rseq)
+                           src_tag=src, route_seq=rseq, trace_id=tid)
         except AgnocastQueueFull:
             return False
         except Exception as e:
@@ -815,6 +860,8 @@ class DomainBridge:
             raise
         del self._pending[topic]
         self.relayed_in += 1
+        if self._tr is not None and tid:
+            self._tr.emit(tid, hops, _trace.Stage.BRIDGE_IN)
         ep.pub.set_waiting(False)
         return True
 

@@ -18,15 +18,21 @@ import weakref
 
 from .messages import ReceivedMessage
 from .registry import Entry, Registry
+from repro.obs.trace import Stage as _Stage
+
+# plain ints: decref pays no attribute chain per record
+_ST_TAKE = _Stage.TAKE
+_ST_RELEASE = _Stage.RELEASE
 
 __all__ = ["MessagePtr"]
 
 
 class _RefState:
-    __slots__ = ("count", "released", "registry", "tidx", "sidx", "entry", "gen")
+    __slots__ = ("count", "released", "registry", "tidx", "sidx", "entry",
+                 "gen", "tracer", "take_t")
 
     def __init__(self, registry: Registry, tidx: int, sidx: int, entry: Entry,
-                 gen: int | None = None):
+                 gen: int | None = None, tracer=None, take_t: int = 0):
         self.count = 1
         self.released = False
         self.registry = registry
@@ -35,16 +41,28 @@ class _RefState:
         self.entry = entry
         self.gen = gen  # topic generation at take: stale handles must not
                         # release into a recycled topic slot (name-ABA guard)
+        self.tracer = tracer  # this subscriber's trace ring (None = off)
+        self.take_t = take_t  # TAKE stamp, written with RELEASE (one emit2)
 
     def decref(self) -> None:
         self.count -= 1
         if self.count <= 0 and not self.released:
             self.released = True
+            e = self.entry
             try:
-                self.registry.release(self.tidx, self.entry.pub_idx, self.sidx,
-                                      self.entry.seq, gen=self.gen)
+                self.registry.release(self.tidx, e.pub_idx, self.sidx,
+                                      e.seq, gen=self.gen)
             except Exception:
                 pass  # registry torn down; janitor covers us
+            if self.tracer is not None and e.trace_id:
+                try:
+                    # TAKE back-stamped at its sampled time + RELEASE now;
+                    # one call writes the subscriber side's record pair
+                    self.tracer.emit2(e.trace_id, e.hops, _ST_TAKE,
+                                      self.take_t, _ST_RELEASE,
+                                      e.seq & 0xFFFF_FFFF)
+                except Exception:
+                    pass  # finalizer ran after atexit closed the ring
 
 
 def _finalizer(state: _RefState) -> None:
@@ -64,8 +82,10 @@ class MessagePtr:
 
     @classmethod
     def first(cls, msg: ReceivedMessage, registry: Registry, tidx: int, sidx: int,
-              entry: Entry, gen: int | None = None) -> "MessagePtr":
-        return cls(msg, _RefState(registry, tidx, sidx, entry, gen))
+              entry: Entry, gen: int | None = None, tracer=None,
+              take_t: int = 0) -> "MessagePtr":
+        return cls(msg, _RefState(registry, tidx, sidx, entry, gen, tracer,
+                                  take_t))
 
     # -- access ----------------------------------------------------------------
 
@@ -103,6 +123,10 @@ class MessagePtr:
     @property
     def route_seq(self) -> int:
         return self._state.entry.route_seq
+
+    @property
+    def trace_id(self) -> int:
+        return self._state.entry.trace_id
 
     # -- refcount management (create/duplicate/destroy, §IV-C) -----------------
 

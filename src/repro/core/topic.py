@@ -46,6 +46,14 @@ from .registry import (
     sub_fifo_path as _fifo_path,
 )
 from .smart_ptr import MessagePtr
+from repro.obs import trace as _trace
+
+# stage ids preloaded as plain ints: the traced hot path pays one
+# LOAD_GLOBAL per emit instead of a module+class attribute chain (which
+# costs as much as the record write itself on the fig18 closed loop)
+_ST_PUBLISH = _trace.Stage.PUBLISH
+_ST_NOTIFY = _trace.Stage.NOTIFY
+_ST_TAKE = _trace.Stage.TAKE
 
 __all__ = ["Domain", "Publisher", "Subscription"]
 
@@ -167,6 +175,9 @@ class Publisher:
         except FileExistsError:
             pass
         self._slot_fifo = os.open(path, os.O_RDWR | os.O_NONBLOCK)
+        # flow tracing (repro.obs): None when AGNOCAST_TRACE is off — the
+        # publish hot path then pays a single ``is not None`` test
+        self._tr = _trace.tracer_for(dom.name)
 
     # -- the Fig. 2 API ----------------------------------------------------------
 
@@ -175,14 +186,23 @@ class Publisher:
 
     def publish(self, loan: LoanedMessage, *, origin: int = ORIGIN_AGNOCAST,
                 exclude_sub: int = -1, hops: int = 0, src_tag: int = 0,
-                route_seq: int = 0) -> int:
+                route_seq: int = 0, trace_id: int = 0) -> int:
         """Move-publish: the loan is consumed (rvalue semantics, §VII-A).
 
         ``hops``/``src_tag``/``route_seq`` are route metadata for messages
         relayed in from other agnocast domains (see :mod:`repro.core.routing`);
-        locally originated messages leave them zero."""
+        locally originated messages leave them zero.  ``trace_id`` nonzero
+        preserves an in-flight flow id across a bridge hop; zero mints a
+        fresh one (when tracing is on).  The PUBLISH event is stamped at
+        entry — before the descriptor write — so a flow's stage deltas
+        telescope to the same interval a caller's own t0/t1 would measure."""
         if loan.arena is not self.dom.arena:
             raise ValueError("loan does not belong to this publisher's arena")
+        tr = self._tr
+        if tr is not None:
+            if not trace_id:
+                trace_id = _trace.next_trace_id()
+            t_pub = tr._mono()      # PUBLISH stamp; record written with NOTIFY
         desc = pickle.dumps(loan.descriptor(), protocol=5)  # constant-size metadata
         off = self.dom.arena.alloc(len(desc))
         self.dom.arena.write_bytes(off, desc)
@@ -190,7 +210,7 @@ class Publisher:
             seq, freeable = self.dom.registry.publish(
                 self.tidx, self.pidx, off, len(desc), origin=origin,
                 exclude_sub=exclude_sub, hops=hops, src_tag=src_tag,
-                route_seq=route_seq, gen=self.tgen
+                route_seq=route_seq, gen=self.tgen, trace_id=trace_id
             )
         except Exception:
             self.dom.arena.free(off)  # queue full: loan stays valid for retry
@@ -198,13 +218,16 @@ class Publisher:
         self._inflight[seq] = (off, len(desc), loan.alloc_offsets())
         loan._ragged, loan._fixed = {}, {}  # invalidate: ownership moved
         self._reclaim(freeable)
-        self._notify()
+        woke = self._notify()
+        if tr is not None:
+            # one call writes the PUBLISH (back-stamped) + NOTIFY pair
+            tr.emit2(trace_id, hops, _ST_PUBLISH, t_pub, _ST_NOTIFY, woke)
         return seq
 
     def publish_descriptor(self, desc, *, xarena: str,
                            origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
                            hops: int = 0, src_tag: int = 0,
-                           route_seq: int = 0) -> int:
+                           route_seq: int = 0, trace_id: int = 0) -> int:
         """Publish a message whose payload bytes live in a *foreign* arena.
 
         Same-host zero-copy relay: the bridge republishes a received
@@ -214,6 +237,11 @@ class Publisher:
         our arena; no payload bytes move.  The caller is responsible for
         keeping the source entry pinned until this entry is reclaimed
         (see :attr:`on_reclaimed`)."""
+        tr = self._tr
+        if tr is not None:
+            if not trace_id:
+                trace_id = _trace.next_trace_id()
+            t_pub = tr._mono()      # PUBLISH stamp; record written with NOTIFY
         raw = pickle.dumps(desc, protocol=5)
         off = self.dom.arena.alloc(len(raw))
         self.dom.arena.write_bytes(off, raw)
@@ -221,14 +249,17 @@ class Publisher:
             seq, freeable = self.dom.registry.publish(
                 self.tidx, self.pidx, off, len(raw), origin=origin,
                 exclude_sub=exclude_sub, hops=hops, src_tag=src_tag,
-                route_seq=route_seq, gen=self.tgen, xarena=xarena
+                route_seq=route_seq, gen=self.tgen, xarena=xarena,
+                trace_id=trace_id
             )
         except Exception:
             self.dom.arena.free(off)
             raise
         self._inflight[seq] = (off, len(raw), [])
         self._reclaim(freeable)
-        self._notify()
+        woke = self._notify()
+        if tr is not None:
+            tr.emit2(trace_id, hops, _ST_PUBLISH, t_pub, _ST_NOTIFY, woke)
         return seq
 
     # -- owner-side deallocation (Fig. 7 timing) ----------------------------------
@@ -318,7 +349,7 @@ class Publisher:
                          timeout: float | None = None, should_stop=None,
                          origin: int = ORIGIN_AGNOCAST, exclude_sub: int = -1,
                          hops: int = 0, src_tag: int = 0,
-                         route_seq: int = 0) -> int | None:
+                         route_seq: int = 0, trace_id: int = 0) -> int | None:
         """Publish with event-driven backpressure: on ``AgnocastQueueFull``
         wait on the slot-freed FIFO (never sleep-poll) and retry.
 
@@ -330,7 +361,7 @@ class Publisher:
             try:
                 return self.publish(loan, origin=origin, exclude_sub=exclude_sub,
                                     hops=hops, src_tag=src_tag,
-                                    route_seq=route_seq)
+                                    route_seq=route_seq, trace_id=trace_id)
             except AgnocastQueueFull:
                 if should_stop is not None and should_stop():
                     return None
@@ -343,13 +374,16 @@ class Publisher:
 
     # -- O(1) wake-ups -------------------------------------------------------------
 
-    def _notify(self) -> None:
+    def _notify(self) -> int:
+        """Wake every live subscriber; returns how many FIFO writes landed
+        (the trace NOTIFY event's ``arg``)."""
         reg = self.dom.registry
+        woke = 0
         # generation gate (name-ABA guard): if the topic row was destroyed
         # and recycled under our feet, its FIFO files belong to the new
         # tenant — a stale publisher must not wake somebody else's subs
         if reg.topic_gen(self.tidx) != self.tgen:
-            return
+            return woke
         t = reg.topics[self.tidx]
         alive = int(t["sub_alive"])
         s = 0
@@ -369,9 +403,11 @@ class Publisher:
                                         still_wanted=sub_live)
                     if fd is not None:
                         self._fifo_fds[s] = fd
+                        woke += 1
                 else:
                     try:
                         os.write(fd, b"\x01")
+                        woke += 1
                     except OSError as e:
                         if e.errno == errno.EPIPE:
                             os.close(fd)
@@ -385,7 +421,9 @@ class Publisher:
                                 still_wanted=sub_live)
                             if fd is not None:
                                 self._fifo_fds[s] = fd
+                                woke += 1
             s += 1
+        return woke
 
     def close(self) -> None:
         try:  # a handle may still have us armed as a waiter
@@ -423,6 +461,7 @@ class Subscription:
         self._fifo = os.open(path, os.O_RDONLY | os.O_NONBLOCK)
         self._arenas: dict[int, str] = {}
         self.hung_up = False  # EOF seen: no publisher holds the write end
+        self._tr = _trace.tracer_for(dom.name)  # None = tracing off
 
     # -- zero-copy take -------------------------------------------------------------
 
@@ -450,8 +489,14 @@ class Subscription:
             raw = darena.read_bytes(e.desc_off, e.desc_len)
             desc = pickle.loads(raw)
             msg = ReceivedMessage(arena, desc)
+            # TAKE is stamped here but *written* at release time, paired
+            # with RELEASE in one emit2 call (readers order by t_ns, so
+            # the wire view is identical; the hot path saves a call)
+            take_t = (self._tr._mono()
+                      if self._tr is not None and e.trace_id else 0)
             out.append(MessagePtr.first(msg, self.dom.registry, self.tidx,
-                                        self.sidx, e, gen=self.tgen))
+                                        self.sidx, e, gen=self.tgen,
+                                        tracer=self._tr, take_t=take_t))
         return out
 
     # -- event-loop surface (consumed by repro.core.executor) -----------------------

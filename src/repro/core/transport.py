@@ -20,9 +20,11 @@ Wire format — control/data frame split (TZC-style, cf. PAPERS.md)
 
 Every frame on the wire is ``<u32 length><u8 kind><PUBHDR><topic>...``
 where ``PUBHDR = <u16 topic_len><u8 origin><u8 hops><u64 src_tag>
-<u64 route_seq>`` carries the route metadata the multi-domain bridges
-(:mod:`repro.core.routing`) need for duplicate suppression and loop
-prevention.  The ``kind`` byte selects what follows the topic:
+<u64 route_seq><u64 trace_id>`` carries the route metadata the
+multi-domain bridges (:mod:`repro.core.routing`) need for duplicate
+suppression and loop prevention, plus the ``repro.obs`` flow id so a
+traced message keeps one flow across bridge hops (0 = untraced).  The
+``kind`` byte selects what follows the topic:
 
 =====  =========  ==========================================================
 kind   name       body after topic
@@ -71,15 +73,17 @@ from multiprocessing import shared_memory
 import numpy as np
 
 from .arena import _new_shm
+from repro.obs import metrics as _metrics
 
 __all__ = ["Bus", "BusClient", "Frame", "ShmRing",
            "K_PUB", "K_SUB", "K_CTRL", "K_ACK", "K_FANOUT"]
 
 _FRAME = struct.Struct("<I")
-# topic_len, origin, hops, src_tag, route_seq — the last three are the route
-# metadata the multi-domain bridges (repro.core.routing) need for duplicate
-# suppression and hop-count loop prevention; plain publishers leave them 0.
-_PUBHDR = struct.Struct("<HBBQQ")
+# topic_len, origin, hops, src_tag, route_seq, trace_id — src_tag/route_seq
+# are the route metadata the multi-domain bridges (repro.core.routing) need
+# for duplicate suppression and hop-count loop prevention; trace_id is the
+# repro.obs flow id; plain publishers leave them all 0.
+_PUBHDR = struct.Struct("<HBBQQQ")
 _FANOUT = struct.Struct("<I")
 
 # frame kinds (see module docstring)
@@ -101,6 +105,7 @@ class Frame:
     route_seq: int   # origin-unique message id (dedup key with src_tag)
     payload: "bytes | memoryview"  # view over this frame's own recv buffer
     kind: int = K_PUB  # frame kind (K_PUB/K_CTRL/K_ACK/K_FANOUT)
+    trace_id: int = 0  # repro.obs flow id carried across bridge hops
 
 
 def _recv_exact(sock: socket.socket, n: int) -> memoryview | None:
@@ -142,7 +147,9 @@ class Bus:
     def __init__(self, path: str | None = None, *, max_backlog: int = 64 << 20):
         self.path = path or f"\0agnobus-{secrets.token_hex(6)}"
         self.max_backlog = max_backlog
-        self.dropped_backlog = 0  # frames dropped on over-backlog conns
+        # unified metrics (repro.obs): incremented on the bus event thread,
+        # read from arbitrary threads — the Counter lock makes both safe
+        self._dropped_backlog = _metrics.counter("bus.dropped_backlog")
         self._srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self._srv.bind(self.path)
         self._srv.listen(64)
@@ -211,7 +218,7 @@ class Bus:
             c.topics.add(bytes(frame[1:]).decode())
             frame.release()  # inbuf compaction needs the view gone
             return
-        tlen, _, _, src_tag, route_seq = _PUBHDR.unpack_from(frame, 1)
+        tlen, _, _, src_tag, route_seq, _ = _PUBHDR.unpack_from(frame, 1)
         topic = bytes(frame[1 + _PUBHDR.size : 1 + _PUBHDR.size + tlen]).decode()
         out = bytearray(_FRAME.pack(len(frame)))
         out += frame  # the single fan-out copy (shared by every receiver)
@@ -225,13 +232,18 @@ class Bus:
             # receipt: tell the CTRL publisher how many ACKs to await
             t = topic.encode()
             body = (bytes([K_FANOUT])
-                    + _PUBHDR.pack(len(t), 0, 0, src_tag, route_seq)
+                    + _PUBHDR.pack(len(t), 0, 0, src_tag, route_seq, 0)
                     + t + _FANOUT.pack(fanout))
             self._enqueue(c, _FRAME.pack(len(body)) + body)
 
+    @property
+    def dropped_backlog(self) -> int:
+        """Back-compat shim: frames dropped on over-backlog connections."""
+        return self._dropped_backlog.value
+
     def _enqueue(self, c: _Conn, out: bytes) -> bool:
         if c.out_bytes + len(out) > self.max_backlog:
-            self.dropped_backlog += 1
+            self._dropped_backlog.inc()
             return False
         c.outq.append(memoryview(out))
         c.out_bytes += len(out)
@@ -287,15 +299,17 @@ class BusClient:
 
     def publish(self, topic: str, payload: bytes, *, origin: int = 0,
                 hops: int = 0, src_tag: int = 0, route_seq: int = 0,
-                kind: int = K_PUB) -> None:
+                kind: int = K_PUB, trace_id: int = 0) -> None:
         t = topic.encode()
         body = (bytes([kind])
-                + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
+                + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq,
+                               trace_id)
                 + t + payload)
         self._sock.sendall(_FRAME.pack(len(body)) + body)
 
     def publish_parts(self, topic: str, header: bytes, views, *, origin: int = 0,
-                      hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
+                      hops: int = 0, src_tag: int = 0, route_seq: int = 0,
+                      trace_id: int = 0) -> None:
         """Scatter-gather publish: one ``sendmsg`` straight off the loaned
         numpy views — no ``b"".join`` assembly buffer, no payload copy on
         this side of the socket.  Emits a byte stream identical to
@@ -303,7 +317,8 @@ class BusClient:
         ``messages.serialize_parts``), so receivers need no new code."""
         t = topic.encode()
         prefix = (bytes([K_PUB])
-                  + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq)
+                  + _PUBHDR.pack(len(t), origin, hops, src_tag, route_seq,
+                                 trace_id)
                   + t + header)
         total = len(prefix) + sum(v.nbytes for v in views)
         bufs = [memoryview(_FRAME.pack(total) + prefix)]
@@ -319,11 +334,12 @@ class BusClient:
                     sent = 0
 
     def publish_ctrl(self, topic: str, ctrl: bytes, *, origin: int = 0,
-                     hops: int = 0, src_tag: int = 0, route_seq: int = 0) -> None:
+                     hops: int = 0, src_tag: int = 0, route_seq: int = 0,
+                     trace_id: int = 0) -> None:
         """Publish an attach control frame (kind 2): route metadata + the
         pickled attach descriptor; payload bytes stay in the source arena."""
         self.publish(topic, ctrl, origin=origin, hops=hops, src_tag=src_tag,
-                     route_seq=route_seq, kind=K_CTRL)
+                     route_seq=route_seq, kind=K_CTRL, trace_id=trace_id)
 
     def publish_ack(self, topic: str, ok: bool, *, src_tag: int,
                     route_seq: int) -> None:
@@ -349,14 +365,15 @@ class BusClient:
         frame = _recv_exact(self._sock, n)
         if frame is None:
             return None
-        tlen, origin, hops, src_tag, route_seq = _PUBHDR.unpack_from(frame, 1)
+        tlen, origin, hops, src_tag, route_seq, trace_id = \
+            _PUBHDR.unpack_from(frame, 1)
         off = 1 + _PUBHDR.size
         topic = bytes(frame[off : off + tlen]).decode()
         # payload stays a view over the frame's own exact-size buffer: the
         # 16 MiB case pays zero receive-side assembly copies (deserialize /
         # pickle / struct all take bytes-likes)
         return Frame(topic, origin, hops, src_tag, route_seq,
-                     frame[off + tlen :], kind=frame[0])
+                     frame[off + tlen :], kind=frame[0], trace_id=trace_id)
 
     def recv(self, timeout: float | None = None) -> tuple[str, int, bytes] | None:
         fr = self.recv_frame(timeout)

@@ -39,6 +39,8 @@ from collections import OrderedDict, deque
 import numpy as np
 
 from repro.core.topic import Domain
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 from .messages import SERVE_RES, ResRow, iter_results
 
@@ -85,14 +87,26 @@ class ResultsCollector:
         self._completed: OrderedDict[int, list[int]] = OrderedDict()
         self._done_rids: OrderedDict[int, bool] = OrderedDict()  # bounded
         self._shard: dict[int, dict] = {}
-        # counters (observability + tests)
+        self._tr = _trace.tracer_for(dom.name)
+        # counters (observability + tests); the supersede/window pair is
+        # incremented from the executor's callback thread while the head
+        # janitor reads them — unified metrics make those increments
+        # lock-guarded, with read-only shims for existing readers
         self.chunks = 0
         self.duplicates = 0
         self.gaps = 0
-        self.superseded = 0
+        self._superseded = _metrics.counter("collector.superseded")
         self.stale_gen = 0
-        self.dropped_window = 0
+        self._dropped_window = _metrics.counter("collector.dropped_window")
         self.n_completed = 0
+
+    @property
+    def superseded(self) -> int:
+        return self._superseded.value
+
+    @property
+    def dropped_window(self) -> int:
+        return self._dropped_window.value
 
     # -- ingestion ------------------------------------------------------------
 
@@ -172,7 +186,7 @@ class ResultsCollector:
         elif row.gen > st.gen:
             # router replayed the rid: the fresh generation supersedes the
             # partial old stream wholesale (decode restarted from scratch)
-            self.superseded += 1
+            self._superseded.inc()
             st = self._streams[row.rid] = _Stream(row.gen)
         elif row.gen < st.gen:
             self.stale_gen += 1
@@ -180,6 +194,11 @@ class ResultsCollector:
         if row.seq < st.next_seq or row.seq in st.window:
             self.duplicates += 1
             return
+        # hop 2 = collector.  Emitted only for ACCEPTED chunks (buffered or
+        # appended) — a dropped row (duplicate, stale/superseded generation,
+        # window overflow) must leave no trace record, or a dead replica's
+        # late eos chunk would stamp the superseded attempt's flow as
+        # complete when reassembly in fact restarted under a fresh trace id
         if row.seq > st.next_seq:
             if not st.had_gap:
                 st.had_gap = True
@@ -187,10 +206,16 @@ class ResultsCollector:
             if len(st.window) >= self.window_limit:
                 # pathological stream: stop buffering, await replay — but
                 # never drop silently (same rule as the bridge's OOM path)
-                self.dropped_window += 1
+                self._dropped_window.inc()
                 return
+            if self._tr is not None and row.tid:
+                self._tr.emit(row.tid, 2, _trace.Stage.SERVE_REASM,
+                              arg=row.seq & 0xFFFF_FFFF)
             st.window[row.seq] = row
             return
+        if self._tr is not None and row.tid:
+            self._tr.emit(row.tid, 2, _trace.Stage.SERVE_REASM,
+                          arg=row.seq & 0xFFFF_FFFF)
         self._advance(row.rid, st, row)
 
     def _advance(self, rid: int, st: _Stream, row: ResRow) -> None:
@@ -199,6 +224,13 @@ class ResultsCollector:
             st.next_seq += 1
             st.had_gap = False
             if row.eos:
+                if self._tr is not None and row.tid:
+                    # the serving flow's TERMINAL record: emitted exactly
+                    # when reassembly completes, so complete-flow counting
+                    # matches the collector's exactly-once accounting
+                    self._tr.emit(row.tid, 2, _trace.Stage.SERVE_REASM,
+                                  arg=row.seq & 0xFFFF_FFFF,
+                                  flags=_trace.FLAG_EOS)
                 del self._streams[rid]
                 self._completed[rid] = st.tokens
                 self._done_rids[rid] = True  # late-duplicate detection

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import time
 
+from repro.obs import metrics as _metrics
+
 __all__ = ["FleetController"]
 
 
@@ -82,12 +84,33 @@ class FleetController:
         self._above_since: float | None = None
         self._below_since: float | None = None
         self._last_scale_at = 0.0
-        # counters (observability + tests)
-        self.deaths = 0
-        self.respawns = 0
-        self.scale_ups = 0
-        self.scale_downs = 0
+        # counters (observability + tests) — unified metrics registry,
+        # with read-only shims for every existing `ctl.deaths` reader
+        self._deaths = _metrics.counter("controller.deaths")
+        self._respawns = _metrics.counter("controller.respawns")
+        self._scale_ups = _metrics.counter("controller.scale_ups")
+        self._scale_downs = _metrics.counter("controller.scale_downs")
+        self._gauges = (
+            _metrics.gauge("controller.load", fn=self._load),
+            _metrics.gauge("controller.k", fn=lambda: len(self.router.ring)),
+        )
         self.abandoned: list[int] = []        # respawn budget exhausted
+
+    @property
+    def deaths(self) -> int:
+        return self._deaths.value
+
+    @property
+    def respawns(self) -> int:
+        return self._respawns.value
+
+    @property
+    def scale_ups(self) -> int:
+        return self._scale_ups.value
+
+    @property
+    def scale_downs(self) -> int:
+        return self._scale_downs.value
 
     # -- wiring ---------------------------------------------------------------
 
@@ -114,7 +137,7 @@ class FleetController:
 
     def _handle_deaths(self, now: float) -> None:
         for shard in self.pool.poll():
-            self.deaths += 1
+            self._deaths.inc()
             self._joining.discard(shard)  # died before (or after) joining
             if shard in self.router.ring:
                 if len(self.router.ring) > 1:
@@ -142,7 +165,7 @@ class FleetController:
             self.pool.respawn(shard)
             self.collector.watch(shard)
             self._joining.add(shard)
-            self.respawns += 1
+            self._respawns.inc()
 
     def _complete_joins(self) -> None:
         for shard in [s for s in self._joining if self.pool.ready(s)]:
@@ -215,7 +238,7 @@ class FleetController:
         self.collector.watch(shard)  # before any chunk can possibly publish
         self._joining.add(shard)
         self._last_scale_at = time.monotonic()
-        self.scale_ups += 1
+        self._scale_ups.inc()
         return shard
 
     def scale_down(self, shard: int | None = None) -> int | None:
@@ -232,7 +255,7 @@ class FleetController:
             self.router.remove_shard(shard)
         self.pool.retire(shard)
         self._last_scale_at = time.monotonic()
-        self.scale_downs += 1
+        self._scale_downs.inc()
         return shard
 
     # -- work stealing --------------------------------------------------------

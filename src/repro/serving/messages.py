@@ -9,7 +9,10 @@ to serving.
 * ``SERVE_REQ`` — a router→replica batch: ragged prompt tokens packed
   flat with per-row lengths, plus per-row router-assigned ``rids`` and
   replay ``gens`` (a replayed rid travels with generation+1 so replicas
-  and the collector can supersede/do exactly-once).
+  and the collector can supersede/do exactly-once).  ``tids`` carries
+  each row's ``repro.obs`` trace id (0 when tracing is off) so the
+  serving flow — head enqueue → flush → replica enqueue → reassembled
+  chunks — reconstructs across processes.
 * ``SERVE_RES`` — a replica→collector batch of per-rid token *chunks*:
   each row is ``(rid, gen, seq, tokens, eos)``; ``seq`` is the rid's
   chunk counter (the collector reassembles with a seq window + gap
@@ -39,6 +42,7 @@ SERVE_REQ = MessageType(
         "row_lengths": Ragged(np.int32),   # per-request prompt lengths
         "rids": Ragged(np.uint64),         # router-assigned request ids
         "gens": Ragged(np.uint32),         # replay generation per rid
+        "tids": Ragged(np.uint64),         # per-row trace ids (0 = untraced)
         "stamp": Fixed(np.float64),        # router submit time (monotonic)
         "max_new": Fixed(np.int32),        # decode budget for the batch
     },
@@ -53,6 +57,7 @@ SERVE_RES = MessageType(
         "gens": Ragged(np.uint32),
         "seqs": Ragged(np.uint32),         # per-rid chunk sequence number
         "eos": Ragged(np.uint8),           # 1 = final chunk of the stream
+        "tids": Ragged(np.uint64),         # per-row trace ids (0 = untraced)
         "shard": Fixed(np.int32),          # publishing replica
         "depth": Fixed(np.int32),          # replica queue depth at publish
         "stamp": Fixed(np.float64),        # replica publish time (monotonic)
@@ -109,6 +114,7 @@ class ReqRow(NamedTuple):
     rid: int
     gen: int
     tokens: np.ndarray
+    tid: int = 0                           # trace id (repro.obs; 0 = untraced)
 
 
 class ResRow(NamedTuple):
@@ -117,6 +123,7 @@ class ResRow(NamedTuple):
     seq: int
     tokens: np.ndarray
     eos: bool
+    tid: int = 0                           # trace id (repro.obs; 0 = untraced)
 
 
 def pack_requests(loan, rows: list[ReqRow], *, stamp: float,
@@ -127,6 +134,7 @@ def pack_requests(loan, rows: list[ReqRow], *, stamp: float,
         loan.row_lengths.extend(np.array([len(r.tokens)], np.int32))
         loan.rids.extend(np.array([r.rid], np.uint64))
         loan.gens.extend(np.array([r.gen], np.uint32))
+        loan.tids.extend(np.array([r.tid], np.uint64))
     loan.set("stamp", stamp)
     loan.set("max_new", max_new)
 
@@ -137,10 +145,13 @@ def iter_requests(msg) -> Iterator[ReqRow]:
     flat = np.asarray(msg.tokens, np.int32)
     rids = np.asarray(msg.rids, np.uint64)
     gens = np.asarray(msg.gens, np.uint32)
+    tids = np.asarray(msg.tids, np.uint64)
     off = 0
     for i, n in enumerate(lens):
         n = int(n)
-        yield ReqRow(int(rids[i]), int(gens[i]), flat[off:off + n].copy())
+        tid = int(tids[i]) if i < len(tids) else 0
+        yield ReqRow(int(rids[i]), int(gens[i]), flat[off:off + n].copy(),
+                     tid)
         off += n
 
 
@@ -155,6 +166,7 @@ def pack_results(loan, rows: list[ResRow], *, shard: int, depth: int,
         loan.gens.extend(np.array([r.gen], np.uint32))
         loan.seqs.extend(np.array([r.seq], np.uint32))
         loan.eos.extend(np.array([1 if r.eos else 0], np.uint8))
+        loan.tids.extend(np.array([r.tid], np.uint64))
     loan.set("shard", shard)
     loan.set("depth", depth)
     loan.set("stamp", stamp)
@@ -168,9 +180,11 @@ def iter_results(msg) -> Iterator[ResRow]:
     gens = np.asarray(msg.gens, np.uint32)
     seqs = np.asarray(msg.seqs, np.uint32)
     eos = np.asarray(msg.eos, np.uint8)
+    tids = np.asarray(msg.tids, np.uint64)
     off = 0
     for i, n in enumerate(lens):
         n = int(n)
+        tid = int(tids[i]) if i < len(tids) else 0
         yield ResRow(int(rids[i]), int(gens[i]), int(seqs[i]),
-                     flat[off:off + n].copy(), bool(eos[i]))
+                     flat[off:off + n].copy(), bool(eos[i]), tid)
         off += n

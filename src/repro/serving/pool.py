@@ -45,6 +45,7 @@ import signal
 import time
 
 from repro.core.topic import Domain
+from repro.obs import metrics as _metrics
 
 from .replica import replica_main
 
@@ -86,6 +87,13 @@ class ReplicaPool:
         self._incarnation: dict[int, int] = {}
         self._alive: set[int] = set()
         self._dead: set[int] = set()
+        # fleet-size gauges (weakly registered — the pool keeps them alive)
+        self._gauges = (
+            _metrics.gauge("pool.alive", fn=lambda: len(self._alive)),
+            _metrics.gauge("pool.dead", fn=lambda: len(self._dead)),
+            _metrics.gauge("pool.retiring", fn=lambda: len(self._retiring)),
+        )
+        self._spawns = _metrics.counter("pool.spawns")
         for k in shards:
             self._spawn(int(k))
 
@@ -118,6 +126,7 @@ class ReplicaPool:
         self._stops[shard] = stop
         self._incarnation[shard] = self._incarnation.get(shard, -1) + 1
         self._alive.add(shard)
+        self._spawns.inc()
 
     def spawn(self, shard: int) -> None:
         """Scale-up: launch a brand-new shard's replica (the caller adds it

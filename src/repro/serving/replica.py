@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.executor import EventExecutor
 from repro.core.registry import AgnocastQueueFull
 from repro.core.topic import Domain
+from repro.obs import trace as _trace
 
 from .messages import (
     SERVE_REQ,
@@ -232,9 +233,29 @@ def replica_main(dom_name: str, shard: int, req_topic: str, res_topic: str, *,
     eos_pending = [False]
     rounds_unflushed = [0]
 
+    # tracing (repro.obs): each SERVE_REQ row carries the head's trace id;
+    # record rid -> tid at ingest (hop 1 = this replica) so every chunk the
+    # sink emits travels back to the collector tagged with its flow.  The
+    # map is bounded: an entry retires with its rid's eos chunk.
+    tr = _trace.tracer_for(dom_name)
+    rid_tid: dict[int, int] = {}
+
+    def traced_ingest(ptr):
+        if tr is not None:
+            for row in iter_requests(ptr):
+                if row.tid:
+                    rid_tid[row.rid] = row.tid
+                    tr.emit(row.tid, 1, _trace.Stage.SERVE_ENQ,
+                            arg=row.rid & 0xFFFF_FFFF)
+        return server.ingest_serve_message(ptr, max_new=max_new)
+
     def sink(rid, gen, seq, tokens, eos):
-        rows.append(ResRow(int(rid), gen, seq,
-                           np.asarray(tokens, np.int32), eos))
+        rid = int(rid)
+        tid = rid_tid.get(rid, 0)
+        if eos:
+            rid_tid.pop(rid, None)
+        rows.append(ResRow(rid, gen, seq,
+                           np.asarray(tokens, np.int32), eos, tid))
         eos_pending[0] |= eos
 
     server.stream_sink = sink
@@ -276,16 +297,18 @@ def replica_main(dom_name: str, shard: int, req_topic: str, res_topic: str, *,
 
     ex = EventExecutor(name=f"replica-{shard}")
     if model == "echo":
-        server.attach_executor(ex, sub, max_new=max_new,
+        from .attach import attach_server_executor
+
+        attach_server_executor(server, ex, sub, max_new=max_new,
                                round_period_s=round_period_s,
+                               ingest=traced_ingest,
                                on_round_end=round_flush)
     else:
         from repro.runtime.server import attach_serving_executor
 
         attach_serving_executor(
             server, ex, sub, max_new=max_new, round_period_s=round_period_s,
-            ingest=lambda ptr: server.ingest_serve_message(ptr,
-                                                           max_new=max_new),
+            ingest=traced_ingest,
             on_round_end=round_flush)
     # idle heartbeat: take() stamps the lease while busy; this covers quiet.
     # It also beacons an empty SERVE_RES once per drain transition — the

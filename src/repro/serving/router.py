@@ -69,6 +69,8 @@ import numpy as np
 
 from repro.core.registry import AgnocastQueueFull
 from repro.core.topic import Domain, Publisher
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 from .hashring import HashRing
 from .messages import SERVE_REQ, ReqRow, pack_requests
@@ -89,6 +91,11 @@ class InFlight:
     progressed: bool = field(default=False)    # any chunk landed since the
     #                                            current (re)assignment —
     #                                            steal only takes cold rids
+    tid: int = field(default=0)       # trace id of the CURRENT generation —
+    #                                   replay/steal mint a fresh one, so a
+    #                                   superseded attempt's flow stays
+    #                                   truncated instead of absorbing the
+    #                                   successor's records
 
 
 class ShardRouter:
@@ -124,17 +131,40 @@ class ShardRouter:
         self._queued_rids: set[int] = set()
         self._shard_load: dict[int, int] = {k: 0 for k in self.ring.shards}
         self._rid_counter = itertools.count(1)
-        # counters (observability + tests)
+        self._tr = _trace.tracer_for(dom.name)
+        # counters (observability + tests); the admission/supersede trio
+        # lives in the unified metrics registry (repro.obs.metrics) — the
+        # head janitor timer and the collector callback both touch them,
+        # so bare `+= 1` could lose increments — with read-only attribute
+        # shims below for every existing `router.shed`-style reader
         self.routed = 0
         self.replays = 0
         self.completions = 0
         self.tie_breaks = 0
         self.flush_stalls = 0
-        self.shed = 0
-        self.shed_bytes = 0
+        self._shed = _metrics.counter("router.shed")
+        self._shed_bytes = _metrics.counter("router.shed_bytes")
+        self._dropped_superseded = _metrics.counter("router.dropped_superseded")
         self.queued_total = 0
         self.steals = 0
-        self.dropped_superseded = 0
+        # gauges are weakly registered: the router must hold them alive
+        self._gauges = (
+            _metrics.gauge("router.inflight", fn=lambda: len(self.inflight)),
+            _metrics.gauge("router.queued", fn=lambda: len(self._queue)),
+        )
+
+    # read-only back-compat shims over the migrated counters
+    @property
+    def shed(self) -> int:
+        return self._shed.value
+
+    @property
+    def shed_bytes(self) -> int:
+        return self._shed_bytes.value
+
+    @property
+    def dropped_superseded(self) -> int:
+        return self._dropped_superseded.value
 
     # -- assignment -----------------------------------------------------------
 
@@ -173,9 +203,16 @@ class ShardRouter:
                shard: int | None = None) -> None:
         shard = self.route(rid) if shard is None else shard
         now = time.monotonic()
-        self.inflight[rid] = InFlight(rid, shard, 0, toks, stamp, now)
+        tid = 0
+        tr = self._tr
+        if tr is not None:
+            # serving flows are minted here: hop 0 = the head router
+            tid = _trace.next_trace_id()
+            tr.emit(tid, 0, _trace.Stage.SERVE_ENQ, arg=rid & 0xFFFF_FFFF)
+        self.inflight[rid] = InFlight(rid, shard, 0, toks, stamp, now,
+                                      tid=tid)
         self.inflight_bytes += toks.nbytes
-        self._pending.setdefault(shard, []).append(ReqRow(rid, 0, toks))
+        self._pending.setdefault(shard, []).append(ReqRow(rid, 0, toks, tid))
         self._shard_load[shard] = self._shard_load.get(shard, 0) + 1
         self.routed += 1
 
@@ -196,8 +233,8 @@ class ShardRouter:
                 self._queued_rids.add(rid)
                 self.queued_total += 1
                 return rid
-            self.shed += 1
-            self.shed_bytes += toks.nbytes
+            self._shed.inc()
+            self._shed_bytes.inc(toks.nbytes)
             return None
         self._admit(rid, toks, time.monotonic(), shard)
         return rid
@@ -225,7 +262,7 @@ class ShardRouter:
             key = (r.rid, r.gen)
             if (rec is None or rec.gen != r.gen or rec.shard != shard
                     or key in seen):
-                self.dropped_superseded += 1
+                self._dropped_superseded.inc()
                 continue
             seen.add(key)
             out.append(r)
@@ -250,6 +287,15 @@ class ShardRouter:
             loan = pub.borrow_loaded_message()
             pack_requests(loan, rows, stamp=time.monotonic(),
                           max_new=self.max_new)
+            if self._tr is not None:
+                # emitted BEFORE the publish: the replica's hop-1 enqueue
+                # is causally after delivery, so flush->replica can never
+                # read negative; a stalled flush re-emits on its retry
+                # (first-record-wins in the breakdown)
+                for r in rows:
+                    if r.tid:
+                        self._tr.emit(r.tid, 0, _trace.Stage.SERVE_FLUSH,
+                                      arg=r.rid & 0xFFFF_FFFF)
             # no explicit reclaim: publish() itself prunes freed ring slots
             try:
                 got = pub.publish_blocking(loan, timeout=timeout,
@@ -300,8 +346,15 @@ class ShardRouter:
         rec.shard = shard
         rec.last_progress = time.monotonic()
         rec.progressed = False
+        if self._tr is not None:
+            # a retarget is a NEW causal attempt: fresh trace id, so the
+            # superseded attempt's flow stays truncated (the evidence of
+            # the death/steal) and this one reconstructs cleanly
+            rec.tid = _trace.next_trace_id()
+            self._tr.emit(rec.tid, 0, _trace.Stage.SERVE_ENQ,
+                          arg=rec.rid & 0xFFFF_FFFF)
         self._pending.setdefault(rec.shard, []).append(
-            ReqRow(rec.rid, rec.gen, rec.tokens))
+            ReqRow(rec.rid, rec.gen, rec.tokens, rec.tid))
         self._shard_load[old] = max(0, self._shard_load.get(old, 0) - 1)
         self._shard_load[rec.shard] = self._shard_load.get(rec.shard, 0) + 1
         return rec.shard
