@@ -11,4 +11,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # untraced hot paths CI users actually ship
 export AGNOCAST_TRACE=0
 
+# TIER1_AGNOLINT=1 runs the concurrency-protocol static analyzer first
+# (strict lint + layout drift; TIER1_AGNOLINT=model adds the bounded
+# interleaving checker's fast profile).  CI runs agnolint as its own
+# job; this flag gives local runs the same gate in one command.
+if [ "${TIER1_AGNOLINT:-0}" != "0" ]; then
+    AGNOLINT_ARGS=(src/repro --strict)
+    if [ "${TIER1_AGNOLINT}" = "model" ]; then
+        AGNOLINT_ARGS+=(--model fast)
+    fi
+    timeout "$TIMEOUT" scripts/agnolint.py "${AGNOLINT_ARGS[@]}"
+fi
+
 exec timeout "$TIMEOUT" python -m pytest -x -q "$@"

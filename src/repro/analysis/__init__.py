@@ -1,0 +1,24 @@
+"""repro.analysis — agnolint: concurrency-protocol static analysis.
+
+Three cooperating checkers, run together by ``scripts/agnolint.py`` and
+the ``agnolint`` CI job:
+
+* :mod:`repro.analysis.lint` — AST passes over ``src/repro`` enforcing
+  the registry's lock discipline (AGNO-LOCK-*), hot-path purity
+  (AGNO-HOT-*) and metrics-counter hygiene (AGNO-CNT-*).
+* :mod:`repro.analysis.layout` — extracts every hand-maintained shm /
+  wire layout constant and fails on drift without a version bump
+  (AGNO-LAYOUT-*).
+* :mod:`repro.analysis.model` — a bounded interleaving checker for the
+  publish/take/release/rollback/sweep protocol with SIGKILL injection
+  (AGNO-MODEL-*).
+
+The rule IDs are documented in ``scripts/agnolint.py --list-rules`` and
+cross-referenced from the "Invariants" section of
+``repro/core/registry.py``'s module docstring.
+"""
+
+from .lint import Finding, lint_paths, lint_source  # noqa: F401
+from .layout import check_layout  # noqa: F401
+
+__all__ = ["Finding", "lint_paths", "lint_source", "check_layout"]

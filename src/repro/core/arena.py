@@ -76,6 +76,7 @@ def _new_shm(name: str | None, create: bool, size: int = 0) -> shared_memory.Sha
         return shared_memory.SharedMemory(name=name, create=create, size=size)
 
 
+# agnolint: single-writer -- the owning publisher is the only allocator/writer; readers attach read-only (registry entry lifetime gates reuse)
 class Arena:
     """Fixed-capacity shared heap owned by a single publisher process."""
 

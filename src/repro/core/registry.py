@@ -151,6 +151,44 @@ stage u8 | flags u8 | arg u32``.  Env knobs: ``AGNOCAST_TRACE`` (unset
 or ``0`` — the tier-1 default — disables all emission; call sites hold a
 ``None`` tracer and pay one pointer test), ``AGNOCAST_TRACE_CAP`` (ring
 capacity in records, rounded up to a power of two, default 4096).
+
+Invariants (machine-checked by ``scripts/agnolint.py``)
+-------------------------------------------------------
+
+The disciplines above are enforced on every commit by the static
+analyzer in ``repro.analysis`` (CI job ``agnolint``); each carries a
+rule ID so a violation message points back at this spec:
+
+* ``AGNO-LOCK-001`` — every store into this segment happens inside
+  ``_locked(tidx)`` (seqlock'd write section), ``_topic_flock(tidx)``
+  (raw topic lock; the callee owns seqlock handling) or ``_lock`` (the
+  domain lock, name table/header only).  The *only* lock-free stores are
+  the allow-listed ones: the per-subscriber ``released`` byte (release
+  fast path), the owner's ``pub_waiters`` flag (``set_pub_waiter``), the
+  subscriber's own ``sub_lease_ns`` stamp (``refresh_lease``) and the
+  owner's magic store before the segment name is shared.  Helpers whose
+  *caller* holds the lock (``_recover``, ``_Txn``, ``_fold_releases``,
+  ``_drop_subscriber``, ``_hash_insert``/``_hash_remove``) are marked
+  ``# agnolint: locked-context`` at their ``def`` — the annotation is
+  the machine-readable form of their docstring's "caller holds the
+  lock" contract.
+* ``AGNO-LOCK-002`` — lock order is domain → topic, never the reverse,
+  and topic locks never nest with each other.
+* ``AGNO-LOCK-003`` — no blocking call (sleep / join / recv / flock …)
+  while any lock is held.  This module's two ``time.sleep`` calls —
+  the ``_open_and_wake`` FIFO retry and the ``_seqlock_read`` spin —
+  both run outside every lock, which is why they are legal.
+* ``AGNO-LAYOUT-001/002`` — the dtypes/constants above are fingerprinted
+  in ``repro/analysis/layout_lock.json``; changing any layout-bearing
+  constant without bumping ``_MAGIC`` (the v5→v6 precedent) fails CI,
+  as does any internal inconsistency (mask widths vs ``MAX_SUBS``,
+  journal image sizes vs row dtypes, the trace-record format quoted
+  above vs ``repro.obs.trace``'s actual struct).
+* ``AGNO-MODEL-*`` — the publish/take/release/rollback/sweep protocol
+  itself is exhaustively model-checked over 2–3-process interleavings
+  with SIGKILL injected at every step (``repro.analysis.model``):
+  no lost release, no double-take, seqlock parity restored, rollback
+  idempotent, no lost wakeup (the Dekker re-check in ``release``).
 """
 
 from __future__ import annotations
@@ -442,7 +480,7 @@ class Registry:
         self._pub_fds: dict[tuple[int, int], int] = {}  # (tidx,pidx) -> write fd
         self._pub_fds_mu = threading.Lock()  # executor worker threads share us
         if owner:
-            self._hdr[0] = _MAGIC
+            self._hdr[0] = _MAGIC  # agnolint: allow[AGNO-LOCK-001] -- owner's create-time store, before the segment name is shared
         elif int(self._hdr[0]) != _MAGIC:
             raise RegistryError(f"{name!r} is not an agnocast (layout v4) registry")
 
@@ -559,6 +597,7 @@ class Registry:
             finally:
                 t["wseq"] = int(t["wseq"]) + 1  # even: row quiescent
 
+    # agnolint: locked-context -- caller holds topic tidx's lock (see docstring)
     def _recover(self, tidx: int):
         """Roll back a dead writer's in-flight mutation on topic ``tidx``
         (before-images).  Caller holds topic ``tidx``'s lock — recovery is
@@ -572,7 +611,13 @@ class Registry:
         value strictly above both the current and restored counters.  A
         restored entry image is OR-merged with the current ``released``
         bytes: a subscriber's lock-free release intent is never undone by
-        someone else's rollback.  Finally, a writer that died *inside* its
+        someone else's rollback.  The same rule covers the topic row's
+        lock-free single-writer columns — ``pub_waiters`` is OR-merged and
+        ``sub_lease_ns`` keeps the newer stamp — because a verbatim
+        restore would wipe a waiter flag armed after the image was taken
+        (a permanent lost wakeup: releasers skip the FIFO write when the
+        flag reads clear) or age a live subscriber's lease into sweep
+        range.  Finally, a writer that died *inside* its
         critical section leaves ``wseq`` odd with no (or a clean) journal;
         the parity repair below un-wedges lock-free readers."""
         j = self._journal[tidx]
@@ -580,8 +625,22 @@ class Registry:
             t, p, s = int(j["tidx"]), int(j["pidx"]), int(j["slot"])
             if int(j["has_topic"]) and t >= 0:
                 cur = int(self.topics[t]["wseq"])
+                cur_waiters = self.topics[t]["pub_waiters"].copy()
+                cur_lease = self.topics[t]["sub_lease_ns"].copy()
                 self.topics[t] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
                 self.topics[t]["wseq"] = (max(cur, int(self.topics[t]["wseq"])) + 2) & ~1
+                # Lock-free single-writer columns are never undone by
+                # someone else's rollback (the topic-row analogue of the
+                # entry 'released' OR-merge below): a waiter that armed
+                # ``pub_waiters`` after the image was captured would
+                # otherwise be wiped back to 0 — and since releasers skip
+                # the slot-freed FIFO write when the flag is clear, that
+                # waiter parks in wait_for_slot forever.  Leases keep the
+                # *newer* stamp so a rollback can never age a live
+                # subscriber into sweep range.
+                self.topics[t]["pub_waiters"] |= cur_waiters
+                np.maximum(self.topics[t]["sub_lease_ns"], cur_lease,
+                           out=self.topics[t]["sub_lease_ns"])
             if int(j["has_entry"]) and t >= 0 and s >= 0:
                 cur_rel = self.entries[t, p, s]["released"].copy()
                 self.entries[t, p, s] = np.frombuffer(bytes(j["entry_img"]), dtype=ENTRY_DT)[0]
@@ -612,6 +671,7 @@ class Registry:
             self.reg, self.tidx, self.pidx, self.slot = reg, tidx, pidx, slot
             self.topic, self.entry = topic, entry
 
+        # agnolint: locked-context -- caller holds the topic lock; the journal slot is topic-lock-guarded
         def __enter__(self):
             # journal slot = the topic's own: guarded by the topic lock the
             # caller already holds, so sibling topics journal concurrently
@@ -628,6 +688,7 @@ class Registry:
             j[t]["state"] = _J_PENDING  # fence: images valid before PENDING
             return self
 
+        # agnolint: locked-context -- caller still holds the topic lock through __exit__
         def __exit__(self, et, ev, tb):
             if et is None:
                 self.reg._journal[self.tidx]["state"] = _J_CLEAN
@@ -640,9 +701,19 @@ class Registry:
             elif int(self.reg._journal[self.tidx]["state"]) == _J_PENDING:
                 j = self.reg._journal[self.tidx]
                 if int(j["has_topic"]):
-                    cur = int(self.reg.topics[self.tidx]["wseq"])
+                    row = self.reg.topics[self.tidx]
+                    cur = int(row["wseq"])
+                    cur_waiters = row["pub_waiters"].copy()
+                    cur_lease = row["sub_lease_ns"].copy()
                     self.reg.topics[self.tidx] = np.frombuffer(bytes(j["topic_img"]), dtype=TOPIC_DT)[0]
-                    self.reg.topics[self.tidx]["wseq"] = max(cur, int(self.reg.topics[self.tidx]["wseq"]))
+                    row = self.reg.topics[self.tidx]
+                    row["wseq"] = max(cur, int(row["wseq"]))
+                    # same single-writer-column preservation as _recover:
+                    # a concurrent lock-free waiter arm / lease refresh
+                    # must survive this rollback too
+                    row["pub_waiters"] |= cur_waiters
+                    np.maximum(row["sub_lease_ns"], cur_lease,
+                               out=row["sub_lease_ns"])
                 if int(j["has_entry"]):
                     cur_rel = self.reg.entries[self.tidx, self.pidx, self.slot]["released"].copy()
                     self.reg.entries[self.tidx, self.pidx, self.slot] = np.frombuffer(
@@ -737,6 +808,7 @@ class Registry:
                         return tidx
         return -1
 
+    # agnolint: locked-context -- caller holds the domain lock (name table writes)
     def _hash_insert(self, key: bytes, tidx: int) -> None:
         """Caller holds the domain lock.  Publishes ``tref`` last so a
         concurrent lock-free probe sees either no slot or a complete one.
@@ -771,6 +843,7 @@ class Registry:
         table[ins]["h"] = h
         table[ins]["tref"] = tidx + 1        # published last
 
+    # agnolint: locked-context -- caller holds the domain lock (name table writes)
     def _hash_remove(self, key: bytes, tidx: int) -> None:
         """Caller holds the domain lock: tombstone the slot for ``key``."""
         h = _name_hash(key)
@@ -940,6 +1013,7 @@ class Registry:
             owners = self._drop_subscriber(tidx, sidx)
         self._notify_owners(owners)
 
+    # agnolint: locked-context -- caller holds topic tidx's lock (see docstring)
     def _drop_subscriber(self, tidx: int, sidx: int) -> list[tuple[int, int]]:
         """Caller holds topic ``tidx``'s lock.  Returns the (tidx, pidx)
         owners to wake (dropping refs may have freed ring slots) — the FIFO
@@ -1036,6 +1110,7 @@ class Registry:
         races — a spurious set costs one redundant FIFO write or one
         locked-path release, and a clear-vs-release race is resolved by
         the waiter's post-set ``can_publish`` re-check."""
+        # agnolint: allow[AGNO-LOCK-001] -- lock-free by design: the owner is the byte's single writer; release's Dekker re-check pairs with it
         self.topics[tidx]["pub_waiters"][pidx] = 1 if waiting else 0
 
     def pub_waiter(self, tidx: int, pidx: int) -> bool:
@@ -1049,6 +1124,7 @@ class Registry:
     def refresh_lease(self, tidx: int, sidx: int) -> None:
         """Stamp subscriber ``sidx``'s lease now (idle replicas heartbeat
         through this; busy ones are stamped by every ``take``)."""
+        # agnolint: allow[AGNO-LOCK-001] -- lock-free by design: the subscriber is its lease stamp's single writer; staleness checks tolerate a torn read
         self.topics[tidx]["sub_lease_ns"][sidx] = time.monotonic_ns()
 
     def lease_ages(self, tidx: int) -> dict[int, float]:
@@ -1108,6 +1184,7 @@ class Registry:
         the condition under which a ring slot must not be recycled."""
         return bool(self._effective_held(e)) or self._pin_active(e)
 
+    # agnolint: locked-context -- caller holds topic tidx's lock; fold is idempotent by store order
     def _fold_releases(self, tidx: int, pidx: int | None = None) -> None:
         """Fold lock-free release bytes into the ``held`` masks.  Caller
         holds topic ``tidx``'s lock.  Unjournaled by design: the byte array
@@ -1329,6 +1406,7 @@ class Registry:
                     e = self.entries[tidx, pidx, seq % depth]
                     if (int(e["seq"]) == seq and int(e["state"]) == ST_USED
                             and (int(e["held"]) >> sidx) & 1):
+                        # agnolint: allow[AGNO-LOCK-001] -- THE lock-free release: one byte, single-writer per sidx, folded under the next lock holder
                         e["released"][sidx] = 1
                         # Dekker re-check: a waiter arming between our flag
                         # load and the byte store must not lose its wakeup
@@ -1352,7 +1430,13 @@ class Registry:
                 with self._Txn(self, tidx, pidx, slot, entry=True):
                     e["held"] = np.uint64(int(e["held"]) & ~int(bit))
                     e["released"][sidx] = 0
-                freed = int(e["held"]) == 0
+                # EFFECTIVE held, not raw: a sibling's lock-free release
+                # byte landing after our fold above still counts toward
+                # "this slot is now publishable" — deciding on the raw
+                # mask here would skip the FIFO write and strand a parked
+                # waiter (that sibling's fast path already returned, so
+                # nobody else will wake it)
+                freed = self._effective_held(e) == 0
         if freed:
             # outside the topic lock: the FIFO write is best-effort/non-
             # blocking and must not lengthen the critical section
@@ -1415,7 +1499,9 @@ class Registry:
                     e["pins"] = int(e["pins"]) - 1
                     if int(e["pins"]) == 0:
                         e["pin_deadline_ns"] = 0
-            freed = int(e["pins"]) == 0 and int(e["held"]) == 0
+            # effective held for the same reason as release(): a byte
+            # landing after our fold must not hide the freed transition
+            freed = int(e["pins"]) == 0 and self._effective_held(e) == 0
         if freed:
             self._notify_owner(tidx, pidx)
 

@@ -345,27 +345,37 @@ class DomainBridge:
         self._mint = _AdoptedIdMint() if router is None else None
         self._handle = None  # set by the executor's bridge handle
         self._tr = _trace.tracer_for(dom.name)  # repro.obs (None = off)
-        # counters (observability + tests).  The drop/retry counters live on
-        # the unified metrics registry because they are incremented on
-        # whichever thread pumps the bridge while tests/monitors read them
-        # from another — Counter.inc is lock-guarded; read-only property
-        # shims below keep the old attribute names working.
-        self.relayed_out = 0       # agnocast -> bus
-        self.relayed_in = 0        # bus -> agnocast
-        self.dropped_loops = 0     # src_tag == own tag, or hop cap
-        self.dropped_dups = 0      # (src_tag, route_seq) already admitted
-        self.copy_errors = 0       # aborted copy-ins (loan returned)
+        # counters (observability + tests): all on the unified metrics
+        # registry — they are incremented on whichever thread pumps the
+        # bridge while tests/monitors read them from another, so a bare
+        # `+= 1` is a racy lost update (agnolint AGNO-CNT-001).  Read-only
+        # property shims below keep the old attribute names working.
+        self._relayed_out = _metrics.counter(
+            "bridge.relayed_out", bridge=name)     # agnocast -> bus
+        self._relayed_in = _metrics.counter(
+            "bridge.relayed_in", bridge=name)      # bus -> agnocast
+        self._dropped_loops = _metrics.counter(
+            "bridge.dropped_loops", bridge=name)   # src_tag == own tag, or hop cap
+        self._dropped_dups = _metrics.counter(
+            "bridge.dropped_dups", bridge=name)    # (src_tag, route_seq) already admitted
+        self._copy_errors = _metrics.counter(
+            "bridge.copy_errors", bridge=name)     # aborted copy-ins (loan returned)
         self._oom_retries = _metrics.counter(
             "bridge.oom_retries", bridge=name)     # arena pressure, retried
         self._dropped_oom = _metrics.counter(
             "bridge.dropped_oom", bridge=name)     # dropped after the retry
         self._dropped_backlog = _metrics.counter(
             "bridge.dropped_backlog", bridge=name)  # parked-backlog overflow
-        self.attach_out = 0        # control frames sent (pin held)
-        self.attach_in = 0         # control frames delivered locally
-        self.attach_nacks = 0      # attach/read failures we NACKed
-        self.ack_timeouts = 0      # awaited acks that never came
-        self.attach_fallbacks = 0  # serialized re-sends (nack or timeout)
+        self._n_attach_out = _metrics.counter(
+            "bridge.attach_out", bridge=name)      # control frames sent (pin held)
+        self._n_attach_in = _metrics.counter(
+            "bridge.attach_in", bridge=name)       # control frames delivered locally
+        self._attach_nacks = _metrics.counter(
+            "bridge.attach_nacks", bridge=name)    # attach/read failures we NACKed
+        self._ack_timeouts = _metrics.counter(
+            "bridge.ack_timeouts", bridge=name)    # awaited acks that never came
+        self._attach_fallbacks = _metrics.counter(
+            "bridge.attach_fallbacks", bridge=name)  # serialized re-sends (nack or timeout)
 
     # -- back-compat counter shims (values live on repro.obs.metrics) ----------
 
@@ -380,6 +390,46 @@ class DomainBridge:
     @property
     def dropped_backlog(self) -> int:
         return self._dropped_backlog.value
+
+    @property
+    def relayed_out(self) -> int:
+        return self._relayed_out.value
+
+    @property
+    def relayed_in(self) -> int:
+        return self._relayed_in.value
+
+    @property
+    def dropped_loops(self) -> int:
+        return self._dropped_loops.value
+
+    @property
+    def dropped_dups(self) -> int:
+        return self._dropped_dups.value
+
+    @property
+    def copy_errors(self) -> int:
+        return self._copy_errors.value
+
+    @property
+    def attach_out(self) -> int:
+        return self._n_attach_out.value
+
+    @property
+    def attach_in(self) -> int:
+        return self._n_attach_in.value
+
+    @property
+    def attach_nacks(self) -> int:
+        return self._attach_nacks.value
+
+    @property
+    def ack_timeouts(self) -> int:
+        return self._ack_timeouts.value
+
+    @property
+    def attach_fallbacks(self) -> int:
+        return self._attach_fallbacks.value
 
     # -- federation surface ---------------------------------------------------
 
@@ -447,7 +497,7 @@ class DomainBridge:
                         # admission, where src names the frame's origin)
                         src, rseq = ptr.src_tag, ptr.route_seq
                         if hops >= self.max_hops:
-                            self.dropped_loops += 1
+                            self._dropped_loops.inc()
                             continue
                     else:  # local origin: first relay assigns identity.
                         # The salt comes from the message's own arena name
@@ -483,7 +533,7 @@ class DomainBridge:
                     n += 1
                 finally:
                     ptr.release()
-        self.relayed_out += n
+        self._relayed_out.inc(n)
         return n
 
     # -- attach plane: sender side ---------------------------------------------
@@ -517,7 +567,7 @@ class DomainBridge:
         except OSError:
             self._settle(key)  # bus gone: unpin, let the caller's path fail
             raise
-        self.attach_out += 1
+        self._n_attach_out.inc()
         return True
 
     def _tick_awaiting(self) -> None:
@@ -531,7 +581,7 @@ class DomainBridge:
             if aw.need is not None and aw.acks >= aw.need:
                 self._settle(key)
             elif now >= aw.fallback_at:
-                self.ack_timeouts += 1
+                self._ack_timeouts.inc()
                 self._send_fallback(key, aw)
                 self._settle(key)
 
@@ -541,7 +591,7 @@ class DomainBridge:
         if aw.fell_back:
             return
         aw.fell_back = True
-        self.attach_fallbacks += 1
+        self._attach_fallbacks.inc()
         topic, src, rseq = key
         try:
             self.bus.publish(topic, serialize(aw.msg), origin=1,
@@ -614,12 +664,12 @@ class DomainBridge:
         if ep is None:
             return 0
         if fr.src_tag == self.tag or fr.hops > self.max_hops:
-            self.dropped_loops += 1  # returned to origin, or runaway chain
+            self._dropped_loops.inc()  # returned to origin, or runaway chain
             return 0
         if fr.origin == 1:  # routed frame: identity travels with it
             src, rseq = fr.src_tag, fr.route_seq
             if not self._admit(src, rseq):
-                self.dropped_dups += 1
+                self._dropped_dups.inc()
                 return 0
             if self._tr is not None and fr.trace_id:
                 self._tr.emit(fr.trace_id, fr.hops, _trace.Stage.ROUTE)
@@ -633,7 +683,7 @@ class DomainBridge:
             if getattr(e, "_bridge_accounted", False):
                 return 0  # the inline parked-retry already counted + forgot
             if not isinstance(e, OutOfArenaMemory):
-                self.copy_errors += 1  # malformed frame: dropped, no leak
+                self._copy_errors.inc()  # malformed frame: dropped, no leak
             if fr.origin == 1:
                 # the message was NOT delivered: release its dedup key so a
                 # copy arriving over another path still can be (transient
@@ -731,7 +781,7 @@ class DomainBridge:
                 self._publish_or_park(ep, loan, fr.hops, src, rseq,
                                       fr.trace_id)
         except Exception:
-            self.attach_nacks += 1
+            self._attach_nacks.inc()
             self._forget(src, rseq)
             if arena_name is not None:
                 self._attach_cache.evict(arena_name)  # maybe stale segment
@@ -741,8 +791,8 @@ class DomainBridge:
             except OSError:
                 pass
             return 0
-        self.attach_in += 1
-        self.relayed_in += 1
+        self._n_attach_in.inc()
+        self._relayed_in.inc()
         return 1
 
     def _ack_in(self, fr: Frame) -> None:
@@ -786,7 +836,7 @@ class DomainBridge:
             ep.pub.publish(loan, origin=ORIGIN_BRIDGE,
                            exclude_sub=ep.sub.sidx, hops=hops,
                            src_tag=src, route_seq=rseq, trace_id=trace_id)
-            self.relayed_in += 1
+            self._relayed_in.inc()
             if self._tr is not None and trace_id:
                 self._tr.emit(trace_id, hops, _trace.Stage.BRIDGE_IN)
         except AgnocastQueueFull:
@@ -847,7 +897,7 @@ class DomainBridge:
             return False
         except Exception as e:
             del self._pending[topic]  # poisoned: drop the frame, free loan
-            self.copy_errors += 1
+            self._copy_errors.inc()
             loan.dealloc()
             ep.pub.set_waiting(False)
             # undelivered: release its dedup key so another route can still
@@ -859,7 +909,7 @@ class DomainBridge:
             e._bridge_accounted = True
             raise
         del self._pending[topic]
-        self.relayed_in += 1
+        self._relayed_in.inc()
         if self._tr is not None and tid:
             self._tr.emit(tid, hops, _trace.Stage.BRIDGE_IN)
         ep.pub.set_waiting(False)

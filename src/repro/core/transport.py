@@ -75,8 +75,15 @@ import numpy as np
 from .arena import _new_shm
 from repro.obs import metrics as _metrics
 
-__all__ = ["Bus", "BusClient", "Frame", "ShmRing",
+__all__ = ["Bus", "BusClient", "Frame", "ShmRing", "WIRE_REV",
            "K_PUB", "K_SUB", "K_CTRL", "K_ACK", "K_FANOUT"]
+
+# Wire-layout revision for everything that crosses a bus socket: the
+# _FRAME length prefix, _PUBHDR, the fan-out count and the K_* kinds.
+# Bump on ANY layout-bearing change — the agnolint layout verifier
+# fingerprints these constants against repro/analysis/layout_lock.json
+# and fails CI on drift under an unchanged WIRE_REV (AGNO-LAYOUT-001).
+WIRE_REV = 1
 
 _FRAME = struct.Struct("<I")
 # topic_len, origin, hops, src_tag, route_seq, trace_id — src_tag/route_seq
@@ -391,6 +398,7 @@ _RING_HDR = 64  # head (u8 x 8 reserved)
 _SLOT_HDR = 16  # seq u8, nbytes u8
 
 
+# agnolint: single-writer -- single-producer by construction; commit order (nbytes, seq, then head) is the consumer's consistency fence
 class ShmRing:
     """Single-producer shared-memory ring with ``loan`` and ``copy`` modes."""
 

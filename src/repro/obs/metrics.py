@@ -184,6 +184,7 @@ def snapshot() -> dict:
 
 _MX_MAGIC = 0xA6_3C_0D_01
 _MX_HDR = struct.Struct("<III")         # magic, wseq, len
+_MX_U32 = struct.Struct("<I")           # single-field stores (seqlock order)
 _MX_SIZE = 1 << 16
 
 
@@ -191,6 +192,7 @@ def export_name(domain_name: str, pid: int) -> str:
     return f"agno-mx-{_domain_hash(domain_name)}-{pid}"
 
 
+# agnolint: single-writer -- one export segment per pid; the seqlock wseq store order below is the readers' consistency fence
 class MetricsExporter:
     """Publish this process's registry snapshots into shm for external
     readers (``agno_top``).  Single writer; seqlock on ``wseq``."""
@@ -218,11 +220,19 @@ class MetricsExporter:
             payload = pickle.dumps(
                 {"_overflow": len(snap)}, protocol=5)
         buf = self._shm.buf
-        self._wseq += 1                 # odd: write in progress
-        _MX_HDR.pack_into(buf, 0, _MX_MAGIC, self._wseq, len(payload))
+        # Seqlock write order, one field per store: the odd ("dirty")
+        # wseq must LAND in shm before any data byte changes, and the
+        # even wseq after the last one.  The previous combined header
+        # pack_into wrote wseq and len in a single 12-byte store, so a
+        # cross-process reader could observe the *old even* wseq next to
+        # the *new* len mid-write and validate a torn payload (readers
+        # share no GIL with us — only store order protects them).
+        self._wseq += 1
+        _MX_U32.pack_into(buf, 4, self._wseq)           # odd: write begins
+        _MX_U32.pack_into(buf, 8, len(payload))
         buf[_MX_HDR.size:_MX_HDR.size + len(payload)] = payload
-        self._wseq += 1                 # even: stable
-        _MX_HDR.pack_into(buf, 0, _MX_MAGIC, self._wseq, len(payload))
+        self._wseq += 1
+        _MX_U32.pack_into(buf, 4, self._wseq)           # even: stable
 
     def close(self, *, unlink: bool = False) -> None:
         try:

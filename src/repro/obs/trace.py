@@ -141,6 +141,7 @@ def next_trace_id() -> int:
         next(_tid_counter) & 0xFF_FFFF_FFFF)
 
 
+# agnolint: single-writer -- one ring per (process, domain); only the owning pid emits, readers tolerate the torn newest record (head fence)
 class TraceRing:
     """Single-writer ring over one shm segment.  Create with
     :func:`tracer_for`; only the owning process may ``emit``."""

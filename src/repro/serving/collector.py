@@ -88,17 +88,17 @@ class ResultsCollector:
         self._done_rids: OrderedDict[int, bool] = OrderedDict()  # bounded
         self._shard: dict[int, dict] = {}
         self._tr = _trace.tracer_for(dom.name)
-        # counters (observability + tests); the supersede/window pair is
-        # incremented from the executor's callback thread while the head
-        # janitor reads them — unified metrics make those increments
-        # lock-guarded, with read-only shims for existing readers
-        self.chunks = 0
-        self.duplicates = 0
-        self.gaps = 0
+        # counters (observability + tests): all in the unified metrics
+        # registry — incremented from the executor's callback thread while
+        # the head janitor reads them, so bare `+= 1` is a racy lost
+        # update (agnolint AGNO-CNT-001); read-only shims for existing readers
+        self._chunks = _metrics.counter("collector.chunks")
+        self._duplicates = _metrics.counter("collector.duplicates")
+        self._gaps = _metrics.counter("collector.gaps")
         self._superseded = _metrics.counter("collector.superseded")
-        self.stale_gen = 0
+        self._stale_gen = _metrics.counter("collector.stale_gen")
         self._dropped_window = _metrics.counter("collector.dropped_window")
-        self.n_completed = 0
+        self._n_completed = _metrics.counter("collector.n_completed")
 
     @property
     def superseded(self) -> int:
@@ -107,6 +107,26 @@ class ResultsCollector:
     @property
     def dropped_window(self) -> int:
         return self._dropped_window.value
+
+    @property
+    def chunks(self) -> int:
+        return self._chunks.value
+
+    @property
+    def duplicates(self) -> int:
+        return self._duplicates.value
+
+    @property
+    def gaps(self) -> int:
+        return self._gaps.value
+
+    @property
+    def stale_gen(self) -> int:
+        return self._stale_gen.value
+
+    @property
+    def n_completed(self) -> int:
+        return self._n_completed.value
 
     # -- ingestion ------------------------------------------------------------
 
@@ -176,9 +196,9 @@ class ResultsCollector:
 
     def ingest(self, row: ResRow) -> None:
         """Feed one chunk row through the window/generation state machine."""
-        self.chunks += 1
+        self._chunks.inc()
         if row.rid in self._done_rids:
-            self.duplicates += 1  # late chunk of an already-assembled rid
+            self._duplicates.inc()  # late chunk of an already-assembled rid
             return
         st = self._streams.get(row.rid)
         if st is None:
@@ -189,10 +209,10 @@ class ResultsCollector:
             self._superseded.inc()
             st = self._streams[row.rid] = _Stream(row.gen)
         elif row.gen < st.gen:
-            self.stale_gen += 1
+            self._stale_gen.inc()
             return
         if row.seq < st.next_seq or row.seq in st.window:
-            self.duplicates += 1
+            self._duplicates.inc()
             return
         # hop 2 = collector.  Emitted only for ACCEPTED chunks (buffered or
         # appended) — a dropped row (duplicate, stale/superseded generation,
@@ -202,7 +222,7 @@ class ResultsCollector:
         if row.seq > st.next_seq:
             if not st.had_gap:
                 st.had_gap = True
-                self.gaps += 1
+                self._gaps.inc()
             if len(st.window) >= self.window_limit:
                 # pathological stream: stop buffering, await replay — but
                 # never drop silently (same rule as the bridge's OOM path)
@@ -236,7 +256,7 @@ class ResultsCollector:
                 self._done_rids[rid] = True  # late-duplicate detection
                 while len(self._done_rids) > _DONE_RID_LIMIT:
                     self._done_rids.popitem(last=False)
-                self.n_completed += 1
+                self._n_completed.inc()
                 if self.on_complete is not None:
                     self.on_complete(rid, st.tokens)
                 return

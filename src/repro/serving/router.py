@@ -125,28 +125,28 @@ class ShardRouter:
         }
         self._parked: dict[int, Publisher] = {}  # ex-shard pubs, revivable
         self.inflight: dict[int, InFlight] = {}
-        self.inflight_bytes = 0
+        self._inflight_bytes = _metrics.counter("router.inflight_bytes")
         self._pending: dict[int, list[ReqRow]] = {}
         self._queue: deque[tuple[int, np.ndarray, float]] = deque()
         self._queued_rids: set[int] = set()
         self._shard_load: dict[int, int] = {k: 0 for k in self.ring.shards}
         self._rid_counter = itertools.count(1)
         self._tr = _trace.tracer_for(dom.name)
-        # counters (observability + tests); the admission/supersede trio
-        # lives in the unified metrics registry (repro.obs.metrics) — the
-        # head janitor timer and the collector callback both touch them,
-        # so bare `+= 1` could lose increments — with read-only attribute
+        # counters (observability + tests): all in the unified metrics
+        # registry (repro.obs.metrics) — the head janitor timer and the
+        # collector callback both touch them, so a bare `+= 1` loses
+        # increments (agnolint AGNO-CNT-001) — with read-only attribute
         # shims below for every existing `router.shed`-style reader
-        self.routed = 0
-        self.replays = 0
-        self.completions = 0
-        self.tie_breaks = 0
-        self.flush_stalls = 0
+        self._routed = _metrics.counter("router.routed")
+        self._replays = _metrics.counter("router.replays")
+        self._completions = _metrics.counter("router.completions")
+        self._tie_breaks = _metrics.counter("router.tie_breaks")
+        self._flush_stalls = _metrics.counter("router.flush_stalls")
         self._shed = _metrics.counter("router.shed")
         self._shed_bytes = _metrics.counter("router.shed_bytes")
         self._dropped_superseded = _metrics.counter("router.dropped_superseded")
-        self.queued_total = 0
-        self.steals = 0
+        self._queued_total = _metrics.counter("router.queued_total")
+        self._steals = _metrics.counter("router.steals")
         # gauges are weakly registered: the router must hold them alive
         self._gauges = (
             _metrics.gauge("router.inflight", fn=lambda: len(self.inflight)),
@@ -166,6 +166,38 @@ class ShardRouter:
     def dropped_superseded(self) -> int:
         return self._dropped_superseded.value
 
+    @property
+    def routed(self) -> int:
+        return self._routed.value
+
+    @property
+    def replays(self) -> int:
+        return self._replays.value
+
+    @property
+    def completions(self) -> int:
+        return self._completions.value
+
+    @property
+    def tie_breaks(self) -> int:
+        return self._tie_breaks.value
+
+    @property
+    def flush_stalls(self) -> int:
+        return self._flush_stalls.value
+
+    @property
+    def queued_total(self) -> int:
+        return self._queued_total.value
+
+    @property
+    def steals(self) -> int:
+        return self._steals.value
+
+    @property
+    def inflight_bytes(self) -> int:
+        return self._inflight_bytes.value
+
     # -- assignment -----------------------------------------------------------
 
     def topic(self, shard: int) -> str:
@@ -184,7 +216,7 @@ class ShardRouter:
         dp = self._shard_load.get(primary, 0) + ext.get(primary, 0)
         da = self._shard_load.get(alt, 0) + ext.get(alt, 0)
         if dp > da + self.load_slack:
-            self.tie_breaks += 1
+            self._tie_breaks.inc()
             return alt
         return primary
 
@@ -211,10 +243,10 @@ class ShardRouter:
             tr.emit(tid, 0, _trace.Stage.SERVE_ENQ, arg=rid & 0xFFFF_FFFF)
         self.inflight[rid] = InFlight(rid, shard, 0, toks, stamp, now,
                                       tid=tid)
-        self.inflight_bytes += toks.nbytes
+        self._inflight_bytes.inc(toks.nbytes)
         self._pending.setdefault(shard, []).append(ReqRow(rid, 0, toks, tid))
         self._shard_load[shard] = self._shard_load.get(shard, 0) + 1
-        self.routed += 1
+        self._routed.inc()
 
     def submit(self, tokens, *, rid: int | None = None,
                shard: int | None = None) -> int | None:
@@ -231,7 +263,7 @@ class ShardRouter:
                     and len(self._queue) < self.queue_limit):
                 self._queue.append((rid, toks, time.monotonic()))
                 self._queued_rids.add(rid)
-                self.queued_total += 1
+                self._queued_total.inc()
                 return rid
             self._shed.inc()
             self._shed_bytes.inc(toks.nbytes)
@@ -312,7 +344,7 @@ class ShardRouter:
                 # while they sit here cannot double-publish them.
                 loan.dealloc()
                 self._pending.setdefault(shard, []).extend(rows)
-                self.flush_stalls += 1
+                self._flush_stalls.inc()
                 continue
             published += len(rows)
         return published
@@ -332,8 +364,8 @@ class ShardRouter:
         budget pull queued admissions in."""
         rec = self.inflight.pop(rid, None)
         if rec is not None:
-            self.completions += 1
-            self.inflight_bytes -= rec.tokens.nbytes
+            self._completions.inc()
+            self._inflight_bytes.inc(-(rec.tokens.nbytes))
             self._shard_load[rec.shard] = max(
                 0, self._shard_load.get(rec.shard, 0) - 1)
             self.admit_queued()
@@ -360,7 +392,7 @@ class ShardRouter:
         return rec.shard
 
     def _replay_locked(self, rec: InFlight) -> int:
-        self.replays += 1
+        self._replays.inc()
         return self._retarget(rec, self.route(rec.rid))
 
     def replay(self, rid: int) -> int | None:
@@ -387,7 +419,7 @@ class ShardRouter:
                 continue
             self._retarget(rec, to_shard)
             moved.append(rec.rid)
-        self.steals += len(moved)
+        self._steals.inc(len(moved))
         return moved
 
     # -- ring membership ------------------------------------------------------

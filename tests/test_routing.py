@@ -2,8 +2,7 @@
 delivery (hub + cyclic topologies), relay-through with route metadata,
 copy-in abort safety, and event-driven bridge backpressure."""
 
-import inspect
-import re
+import os
 import time
 
 import numpy as np
@@ -419,21 +418,21 @@ def test_attach_after_register_is_multiplexed():
 
 
 def test_no_sleep_backpressure_on_publish_paths():
-    """The former sleep-retry loops are gone: the modules that used to catch
-    AgnocastQueueFull and sleep no longer even reference it, and the core
-    wait paths (topic/routing/executor) never call time.sleep."""
-    import repro.apps.pointcloud as pointcloud
-    import repro.core.executor as executor
-    import repro.core.routing as routing
-    import repro.core.topic as topic
-    import repro.data.pipeline as pipeline
+    """The former sleep-retry loops are gone.  The actual enforcement
+    lives in agnolint (AGNO-HOT-001: no time.sleep on publish hot-path
+    modules; AGNO-HOT-002: no queue-full retry coupling in the apps) —
+    this test just runs the linter over the real modules so the property
+    stays a tier-1 gate and not only a CI-job one."""
+    import repro.analysis as analysis
 
-    for mod in (pipeline, pointcloud):
-        src = inspect.getsource(mod)
-        assert "AgnocastQueueFull" not in src, mod.__name__
-    for mod in (topic, routing, executor):
-        src = inspect.getsource(mod)
-        assert re.search(r"\btime\.sleep\(", src) is None, mod.__name__
+    mods = ["src/repro/core/topic.py", "src/repro/core/routing.py",
+            "src/repro/core/executor.py", "src/repro/data/pipeline.py",
+            "src/repro/apps/pointcloud.py"]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rep = analysis.lint_paths([os.path.join(root, m) for m in mods],
+                              root=root)
+    hot = [f for f in rep.findings if f.rule.startswith("AGNO-HOT")]
+    assert hot == [], [str(f) for f in hot]
 
 
 # ---------------------------------------------------------------------------

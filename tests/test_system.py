@@ -67,6 +67,8 @@ def test_bridge_relays_and_prevents_loops():
             agno_sub = dom.create_subscription(POINT_CLOUD2, "topic")
             bus_cli = BusClient(bus.path)
             bus_cli.subscribe("topic")
+            time.sleep(0.2)  # SUB frame lands (subscribe is fire-and-forget:
+            # publishing before the bus registers it silently drops the fanout)
 
             # agnocast -> bus
             msg = agno_pub.borrow_loaded_message()
